@@ -1,0 +1,76 @@
+"""Kernel-layer benchmark: work-scaling evidence for the scan formulation.
+
+On this CPU container absolute TPU timings are unavailable; what CAN be
+measured honestly is *work scaling* of the compiled jnp paths that the
+kernels replace, plus HLO FLOP counts:
+
+* ``aaren_scan`` (lax.associative_scan lowering) vs the O(N^2) materialised
+  per-prefix softmax — linear vs quadratic wall time in N;
+* ``flash``-style masked softmax cost growth vs Aaren's for the SAME
+  sequence lengths (the train-time win of dropping the N x N score matrix).
+
+Derived column: seconds per call (median of 5) at each N."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.scan_attention import prefix_scan_states, readout
+from repro.kernels.ref import aaren_scan_reference, flash_reference
+
+NS = (256, 1024, 4096)
+D, H = 64, 4
+
+
+def _time(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+
+    @jax.jit
+    def aaren_scan_path(s, v):
+        return readout(prefix_scan_states(s, v))
+
+    @jax.jit
+    def quadratic_path(s, v):
+        o, *_ = aaren_scan_reference(s, v)
+        return o
+
+    for n in NS:
+        s = jax.random.normal(key, (H, n))
+        v = jax.random.normal(jax.random.fold_in(key, 1), (H, n, D))
+        t_scan = _time(aaren_scan_path, s, v)
+        emit(f"kern_aaren_scan_N{n}", t_scan * 1e6, f"{t_scan:.5f}")
+        if n <= 1024:  # quadratic path OOMs time budget beyond this
+            t_quad = _time(quadratic_path, s, v)
+            emit(f"kern_prefix_quadratic_N{n}", t_quad * 1e6,
+                 f"{t_quad:.5f}")
+
+    @jax.jit
+    def softmax_attn(q, k, v):
+        return flash_reference(q, k, v, causal=True)
+
+    for n in NS:
+        q = jax.random.normal(key, (1, H, n, D))
+        k = jax.random.normal(jax.random.fold_in(key, 2), (1, H, n, D))
+        v = jax.random.normal(jax.random.fold_in(key, 3), (1, H, n, D))
+        t_sm = _time(softmax_attn, q, k, v)
+        emit(f"kern_causal_softmax_N{n}", t_sm * 1e6, f"{t_sm:.5f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Fig. 5 (left) — inference memory vs tokens processed.
+
+Measures the *actual decode-state bytes* of the same backbone in Aaren mode
+(constant (m, u, w) state) vs Transformer mode (KV cache), at increasing
+token counts.  Derived column: bytes at that N."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import smoke_config
+from repro.models.factory import build
+from repro.serving import decode_state_bytes, generate
+
+NS = (64, 256, 1024, 4096)
+
+
+def run():
+    prompts = jnp.zeros((1, 8), jnp.int32)
+    for mode in ("aaren", "softmax"):
+        cfg = smoke_config("phi3-mini-3.8b", n_layers=2, d_model=64,
+                           d_ff=128, vocab=64, attn_mode=mode)
+        api = build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        label = "aaren" if mode == "aaren" else "kv_transformer"
+        for n in NS:
+            _, states = generate(api, params, prompts, 8,
+                                 cache_len=n)  # cache sized for n tokens
+            emit(f"memory_bytes_{label}_N{n}", 0.0,
+                 decode_state_bytes(states))
+
+
+if __name__ == "__main__":
+    run()

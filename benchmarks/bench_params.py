@@ -1,0 +1,32 @@
+"""Paper §4.5 — parameter-count overhead of the learned query.
+
+The paper reports 3,152,384 (Transformer) vs 3,152,896 (Aaren): +512 = one
+learned d_model=512 query vector.  We reproduce the delta exactly at the
+module level on the paper-scale config."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import blocks
+from repro.models.factory import build
+from repro.models.param import count_params
+
+
+def run():
+    cfg = get_config("aaren-paper")
+    n_aaren = count_params(blocks.block_specs(("aaren", "gelu"), cfg))
+    n_soft = count_params(blocks.block_specs(("attn", "gelu"), cfg))
+    emit("params_module_aaren", 0.0, n_aaren)
+    emit("params_module_transformer", 0.0, n_soft)
+    emit("params_module_delta", 0.0, n_aaren - n_soft)  # == d_model == 512
+    full_a = count_params(build(cfg).specs())
+    full_s = count_params(build(cfg.replace(attn_mode="softmax")).specs())
+    emit("params_model_aaren", 0.0, full_a)
+    emit("params_model_transformer", 0.0, full_s)
+    emit("params_overhead_frac", 0.0,
+         f"{(full_a - full_s) / full_s:.6f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,93 @@
+"""Paper Table 1 proxy — offline RL with return-conditioned sequence
+modelling (Decision-Transformer protocol), Aaren vs Transformer.
+
+Environment: a deterministic 1-D "key-door" grid (state = position, actions
+= left/stay/right, reward at the goal).  Offline dataset mixes optimal and
+random trajectories ("medium" style); the model is trained to predict
+actions given (return-to-go, state, action) token streams, then evaluated
+by ONLINE ROLLOUT conditioned on the expert return — the derived metric is
+the achieved return (higher is better), like D4RL scores."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import backbone_apply, bench_cfg, compare_modes, train_model
+
+GRID, T = 9, 16
+GOAL = GRID - 1
+N_ACT = 3  # left / stay / right
+
+
+def _rollout_policy(rng, eps):
+    """One trajectory with an eps-greedy-to-goal policy."""
+    pos = rng.integers(0, GRID)
+    states, actions, rewards = [], [], []
+    for _ in range(T):
+        opt = 2 if pos < GOAL else (1 if pos == GOAL else 0)
+        a = rng.integers(0, N_ACT) if rng.random() < eps else opt
+        states.append(pos)
+        actions.append(a)
+        pos = int(np.clip(pos + (a - 1), 0, GRID - 1))
+        rewards.append(1.0 if pos == GOAL else 0.0)
+    return np.array(states), np.array(actions), np.array(rewards,
+                                                         np.float32)
+
+
+def _batch(rng, batch):
+    xs, ys = [], []
+    for _ in range(batch):
+        s, a, r = _rollout_policy(rng, eps=rng.uniform(0.1, 0.9))
+        rtg = np.cumsum(r[::-1])[::-1]  # return-to-go
+        feat = np.stack([rtg / T,
+                         s / (GRID - 1),
+                         np.roll(a, 1) / N_ACT], axis=-1)  # prev action
+        feat[0, 2] = 0.0
+        xs.append(feat)
+        ys.append(a)
+    return {"x": jnp.asarray(np.stack(xs), jnp.float32),
+            "y": jnp.asarray(np.stack(ys), jnp.int32)}
+
+
+def _online_return(cfg, params, target_rtg=4.0, episodes=16):
+    """Deploy the trained policy; condition on an expert-level return."""
+    total = 0.0
+    for ep in range(episodes):
+        pos, rtg = ep % GRID, target_rtg
+        feats = []
+        prev_a = 0
+        for t in range(T):
+            feats.append([rtg / T, pos / (GRID - 1), prev_a / N_ACT])
+            x = jnp.asarray(feats, jnp.float32)[None]
+            logits = backbone_apply(cfg, params, x)[0, -1]
+            a = int(jnp.argmax(logits))
+            pos = int(np.clip(pos + (a - 1), 0, GRID - 1))
+            r = 1.0 if pos == GOAL else 0.0
+            rtg = max(rtg - r, 0.0)
+            total += r
+            prev_a = a
+    return total / episodes
+
+
+def run():
+    def metric(mode):
+        cfg = bench_cfg(mode)
+        rng = np.random.default_rng(0)
+
+        def loss_fn(pred, batch):
+            logp = jax.nn.log_softmax(pred, axis=-1)
+            return -jnp.mean(
+                jnp.take_along_axis(logp, batch["y"][..., None], -1))
+
+        params, per_step = train_model(
+            cfg, 3, N_ACT, loss_fn, lambda i: _batch(rng, 16), steps=150)
+        ret = _online_return(cfg, params)
+        return ret, per_step
+
+    compare_modes("rl_return", metric, lower_better=False)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Fig. 5 (right) — cumulative time to sequentially process N tokens.
+
+Aaren's O(1) step gives linear cumulative time; the KV-cache Transformer's
+O(t) step gives quadratic.  Measured with jit'd one-token decode steps on
+this host; derived column = cumulative seconds (the *shape* of the curve is
+the claim, not the absolute device speed)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import smoke_config
+from repro.models.factory import build
+
+NS = (128, 256, 512, 1024)
+
+
+def _cumulative_time(api, params, n_tokens, cache_len):
+    from repro.models.lm import lm_state_init
+
+    cfg = api.cfg
+    states = lm_state_init(cfg, 1, cache_len)
+    decode = jax.jit(lambda pr, tok, st: api.decode_step(
+        pr, {"token": tok, "states": st}))
+    tok = jnp.zeros((1, 1), jnp.int32)
+    logits, states = decode(params, tok, states)  # compile
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for _ in range(n_tokens):
+        logits, states = decode(params, tok, states)
+    jax.block_until_ready(logits)
+    return time.perf_counter() - t0
+
+
+def run():
+    for mode in ("aaren", "softmax"):
+        cfg = smoke_config("phi3-mini-3.8b", n_layers=2, d_model=64,
+                           d_ff=128, vocab=64, attn_mode=mode)
+        api = build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        label = "aaren" if mode == "aaren" else "kv_transformer"
+        for n in NS:
+            # KV decode cost grows with the cache it must scan: size the
+            # cache to the sequence (the paper's KV-caching baseline).
+            secs = _cumulative_time(api, params, min(n, 1024), n)
+            emit(f"cumtime_s_{label}_N{n}", secs / n * 1e6, f"{secs:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,114 @@
+"""Shared benchmark scaffolding.
+
+Each paper-table proxy builds the SAME backbone twice — ``attn_mode='aaren'``
+(the paper's module) vs ``attn_mode='softmax'`` (the Transformer baseline) —
+on top of ``repro.models.blocks``, trains both with identical
+hyperparameters (the paper's protocol, §4: "the same hyperparameters are
+used for both"), and reports the task metric for each.
+
+The paper's actual datasets (D4RL, MIMIC, UEA, ETT, ...) are not
+redistributable offline; the generators in ``repro.data.synthetic`` mirror
+their task *structure*.  The claims validated here are the paper's
+algorithmic ones: metric parity at equal hyperparameters, O(1) vs O(N)
+memory, linear vs quadratic cumulative time, and the parameter-count delta.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+from repro.models.layers import apply_norm, norm_specs
+from repro.models.param import ParamSpec, count_params, init_params
+from repro.train.optim import adamw, clip_by_global_norm, warmup_cosine
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived):
+    """Collect + print one CSV row: name,us_per_call,derived."""
+    row = (name, f"{us_per_call:.1f}", str(derived))
+    ROWS.append(row)
+    print(",".join(row), flush=True)
+
+
+def bench_cfg(attn_mode: str, *, d_model=64, n_layers=2, n_heads=4,
+              d_ff=128) -> ArchConfig:
+    """Paper-scale-reduced backbone config (Appendix E shape, shrunk)."""
+    return ArchConfig(
+        name=f"bench-{attn_mode}", family="dense", n_layers=n_layers,
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_heads, d_ff=d_ff,
+        vocab=2, pattern=("attn",), mlp_pattern=("gelu",),
+        norm="layernorm", attn_mode=attn_mode, remat="none",
+        param_dtype="float32", compute_dtype="float32",
+    )
+
+
+def backbone_specs(cfg: ArchConfig, in_dim: int, out_dim: int) -> dict:
+    sig = (cfg.effective_pattern()[0], cfg.mlp_pattern[0])
+    return {
+        "proj_in": ParamSpec((in_dim, cfg.d_model), (None, "embed")),
+        "blocks": tuple(blocks.block_specs(sig, cfg)
+                        for _ in range(cfg.n_layers)),
+        "norm": norm_specs(cfg.d_model, cfg.norm),
+        "head": ParamSpec((cfg.d_model, out_dim), ("embed", None)),
+    }
+
+
+def backbone_apply(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    """x: (B, N, in_dim) -> (B, N, out_dim); causal sequence model."""
+    sig = (cfg.effective_pattern()[0], cfg.mlp_pattern[0])
+    h = jnp.einsum("bni,id->bnd", x, p["proj_in"])
+    for bp in p["blocks"]:
+        h, _, _ = blocks.block_sequence(bp, h, sig, cfg, cache_len=1,
+                                        collect_state=False, want_aux=False)
+    h = apply_norm(p["norm"], h, cfg.norm)
+    return jnp.einsum("bnd,do->bno", h, p["head"])
+
+
+def train_model(cfg: ArchConfig, in_dim: int, out_dim: int, loss_fn,
+                data_fn, *, steps: int = 150, lr: float = 2e-3,
+                seed: int = 0):
+    """Generic trainer.  loss_fn(pred, batch) -> scalar;
+    data_fn(step) -> {"x": (B,N,in), ...labels}.  Returns (params, s/step)."""
+    specs = backbone_specs(cfg, in_dim, out_dim)
+    params = init_params(specs, jax.random.PRNGKey(seed))
+    opt = adamw(warmup_cosine(lr, steps // 10, steps))
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch, i):
+        def total(p):
+            pred = backbone_apply(cfg, p, batch["x"])
+            return loss_fn(pred, batch)
+
+        loss, g = jax.value_and_grad(total)(params)
+        g, _ = clip_by_global_norm(g, 1.0)
+        params, opt_state = opt.update(g, opt_state, params, i)
+        return params, opt_state, loss
+
+    t0 = time.perf_counter()
+    for i in range(steps):
+        params, opt_state, loss = step(params, opt_state, data_fn(i), i)
+    jax.block_until_ready(loss)
+    per_step = (time.perf_counter() - t0) / steps
+    return params, per_step
+
+
+def compare_modes(task: str, metric_fn, *, lower_better=True):
+    """Run metric_fn(attn_mode) for both modes, emit rows + parity."""
+    out = {}
+    for mode in ("aaren", "softmax"):
+        metric, per_step = metric_fn(mode)
+        label = "aaren" if mode == "aaren" else "transformer"
+        emit(f"{task}_{label}", per_step * 1e6, f"{metric:.4f}")
+        out[mode] = metric
+    a, s = out["aaren"], out["softmax"]
+    rel = abs(a - s) / max(abs(s), 1e-9)
+    emit(f"{task}_parity_relgap", 0.0, f"{rel:.3f}")
+    return out

@@ -1,0 +1,64 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    Table 1  (RL)                    -> bench_rl
+    Table 2  (event forecasting)     -> bench_events
+    Table 3/5 (TS forecasting)       -> bench_tsf
+    Table 4  (TS classification)     -> bench_tsc
+    Fig. 5 left  (memory vs tokens)  -> bench_memory
+    Fig. 5 right (cumulative time)   -> bench_time
+    S4.5 parameter counts            -> bench_params
+    kernel work-scaling              -> bench_kernels
+
+Prints ``name,us_per_call,derived`` CSV rows (aggregated at the end).
+"""
+
+from __future__ import annotations
+
+import time
+import traceback
+
+from benchmarks import (
+    bench_events,
+    bench_kernels,
+    bench_memory,
+    bench_params,
+    bench_rl,
+    bench_time,
+    bench_tsc,
+    bench_tsf,
+)
+from benchmarks.common import ROWS
+
+MODULES = [
+    ("params", bench_params),
+    ("memory", bench_memory),
+    ("time", bench_time),
+    ("kernels", bench_kernels),
+    ("tsc", bench_tsc),
+    ("tsf", bench_tsf),
+    ("events", bench_events),
+    ("rl", bench_rl),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in MODULES:
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.run()
+        except Exception as e:  # keep the harness going
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+        print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+    print(f"\n# {len(ROWS)} rows, {len(failures)} failures")
+    for f in failures:
+        print("# FAIL:", f)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Chunked prefill (paper Appendix A at the system level).
+
+A long prompt is consumed in fixed-size chunks, each folding its (m, u, w)
+statistics into the carried state — O(chunk) activation memory instead of
+O(N), with outputs bit-identical to one-shot prefill.  This is exactly how
+``prefill_32k`` cells evaluate on the production mesh and how the Pallas
+``aaren_scan`` kernel walks a sequence through VMEM.
+
+Run:  PYTHONPATH=src python examples/chunked_prefill.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aaren import (
+    AarenWeights,
+    aaren_attention_chunked,
+    aaren_layer_parallel,
+    empty_carry,
+    head_queries,
+    _project_kv,
+)
+
+key = jax.random.PRNGKey(0)
+D, H, G, HD = 64, 4, 2, 16
+N, CHUNK = 4096, 256
+
+ks = jax.random.split(key, 6)
+w = AarenWeights(
+    query=jax.random.normal(ks[0], (D,)) * 0.02,
+    wq=jax.random.normal(ks[1], (D, H, HD)) / np.sqrt(D),
+    wk=jax.random.normal(ks[2], (D, G, HD)) / np.sqrt(D),
+    wv=jax.random.normal(ks[3], (D, G, HD)) / np.sqrt(D),
+    wo=jax.random.normal(ks[4], (H, HD, D)) / np.sqrt(H * HD),
+)
+x = jax.random.normal(ks[5], (1, N, D))
+
+# one-shot (needs O(N) activations)
+y_full, final_full = aaren_layer_parallel(w, x)
+
+# chunked (needs O(CHUNK) activations; same math)
+q_heads = head_queries(w)
+scale = 1.0 / np.sqrt(HD)
+carry = empty_carry(1, H, HD)
+outs = []
+for lo in range(0, N, CHUNK):
+    k, v = _project_kv(w, x[:, lo:lo + CHUNK])
+    ctx, carry = aaren_attention_chunked(q_heads, k, v, carry, scale)
+    outs.append(jnp.einsum("bnhk,hkd->bnd", ctx, w.wo.astype(ctx.dtype)))
+y_chunk = jnp.concatenate(outs, axis=1)
+
+err = float(jnp.abs(y_full - y_chunk).max())
+print(f"prompt length {N}, chunk {CHUNK} "
+      f"({N // CHUNK} chunks, {N // CHUNK}x less activation memory)")
+print(f"max |one-shot - chunked| = {err:.2e}  (exact up to float assoc.)")
+print(f"carried state per head: (m, u, w) = 2 + {HD} floats — "
+      f"{(2 + HD) * H * 4} bytes/layer regardless of N")

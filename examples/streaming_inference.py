@@ -1,0 +1,56 @@
+"""Streaming inference demo: the paper's constant-memory claim, live.
+
+Runs the same prompt stream through (a) an Aaren-mode model on the
+continuous-batching engine (O(1) state/slot) and (b) the KV-cache
+Transformer baseline via wave generation (O(N) state), printing the decode
+state footprint and tokens/s of each.
+
+Run:  PYTHONPATH=src python examples/streaming_inference.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models.factory import build
+from repro.serving import StreamingEngine, decode_state_bytes, generate
+
+N_REQ, PROMPT, NEW = 6, 12, 48
+
+key = jax.random.PRNGKey(0)
+prompts = jax.random.randint(key, (N_REQ, PROMPT), 0, 256)
+
+# --- Aaren: continuous batching, O(1) state ---------------------------------
+cfg_a = smoke_config("phi3-mini-3.8b", n_layers=4, d_model=128, d_ff=256,
+                     vocab=256)
+api_a = build(cfg_a)
+params_a = api_a.init(key)
+eng = StreamingEngine(api_a, params_a, n_slots=3)
+for i in range(N_REQ):
+    eng.submit(prompts[i], NEW)
+t0 = time.time()
+out = eng.run()
+dt_a = time.time() - t0
+state_a = decode_state_bytes(eng.states)
+print(f"[aaren]      {N_REQ} requests x {NEW} tokens on 3 slots: "
+      f"{dt_a:.1f}s ({N_REQ*NEW/dt_a:.0f} tok/s)")
+print(f"[aaren]      decode state: {state_a/2**10:.1f} KiB total "
+      f"({state_a/3/2**10:.1f} KiB/slot, CONSTANT in context length)")
+
+# --- KV baseline: wave generation, O(N) state --------------------------------
+cfg_kv = cfg_a.replace(attn_mode="softmax")
+api_kv = build(cfg_kv)
+params_kv = api_kv.init(key)
+t0 = time.time()
+toks, states_kv = generate(api_kv, params_kv, prompts, NEW)
+dt_kv = time.time() - t0
+state_kv = decode_state_bytes(states_kv)
+print(f"[kv-cache]   {N_REQ} requests x {NEW} tokens (wave): "
+      f"{dt_kv:.1f}s ({N_REQ*NEW/dt_kv:.0f} tok/s)")
+print(f"[kv-cache]   decode state: {state_kv/2**10:.1f} KiB total "
+      f"(GROWS linearly with context)")
+print(f"\nstate ratio kv/aaren at {PROMPT+NEW} tokens: "
+      f"{state_kv/state_a:.1f}x — and the gap widens with every token "
+      f"(paper Fig. 5, left)")

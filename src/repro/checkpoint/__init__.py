@@ -1,0 +1,8 @@
+"""Fault-tolerant checkpointing."""
+
+from repro.checkpoint.io import (  # noqa: F401
+    Checkpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

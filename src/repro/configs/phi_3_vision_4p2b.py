@@ -1,0 +1,27 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP stub frontend
+(input_specs provides precomputed patch embeddings).
+[hf:microsoft/Phi-3-vision-128k-instruct]"""
+
+from repro.configs.base import ArchConfig, register
+
+
+@register
+def phi_3_vision_4p2b() -> ArchConfig:
+    return ArchConfig(
+        name="phi-3-vision-4.2b",
+        family="vlm",
+        n_layers=32,
+        d_model=3072,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=96,
+        d_ff=8192,
+        vocab=32064,
+        pattern=("attn",),
+        mlp_pattern=("swiglu",),
+        vision_tokens=576,   # CLIP ViT-L/14 @ 336px -> 24x24 patches
+        rope_theta=10000.0,
+        norm="rmsnorm",
+        optimizer="adamw",
+        remat="block",
+    )

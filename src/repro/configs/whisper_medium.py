@@ -1,0 +1,33 @@
+"""whisper-medium [audio] — enc-dec transformer backbone; conv frontend is a
+stub (input_specs provides precomputed frame embeddings).  [arXiv:2212.04356]
+"""
+
+from repro.configs.base import ArchConfig, register
+
+
+@register
+def whisper_medium() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-medium",
+        family="audio",
+        n_layers=24,        # decoder depth
+        n_enc_layers=24,    # encoder depth
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab=51865,
+        pattern=("attn",),          # decoder self-attention kind
+        mlp_pattern=("gelu",),
+        is_encdec=True,
+        enc_frames=1500,
+        norm="layernorm",
+        tie_embeddings=True,
+        optimizer="adamw",
+        remat="block",
+        notes="Aaren replaces decoder self-attention only; the encoder is "
+              "bidirectional (no causal prefix structure) and cross-attention "
+              "queries are decoder tokens — both keep softmax "
+              "(DESIGN.md §Arch-applicability).",
+    )

@@ -1,0 +1,30 @@
+"""Core algorithm of "Attention as an RNN": prefix-scan attention + Aaren."""
+
+from repro.core.scan_attention import (  # noqa: F401
+    NEG_INF,
+    ScanState,
+    attention_blockwise,
+    attention_many_to_many,
+    attention_many_to_many_with_state,
+    attention_many_to_one,
+    attention_recurrent,
+    causal_attention_reference,
+    combine,
+    make_empty_state,
+    make_leaf_state,
+    prefix_scan_states,
+    readout,
+    scan_state_step,
+    scores,
+)
+from repro.core.aaren import (  # noqa: F401
+    AarenWeights,
+    aaren_attention_chunked,
+    aaren_attention_parallel,
+    aaren_attention_step,
+    aaren_layer_parallel,
+    aaren_layer_step,
+    carry_specs,
+    empty_carry,
+    head_queries,
+)

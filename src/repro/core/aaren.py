@@ -1,0 +1,187 @@
+"""Aaren — [A]ttention [a]s a [re]current neural [n]etwork (paper §3.3).
+
+An Aaren layer has the *interface* of causal self-attention — N inputs to N
+outputs where output i aggregates inputs 1..i — but its query is a **learned
+constant vector** per layer (projected to per-head queries), and the cumulative
+softmax aggregation is evaluated with the prefix-scan machinery of
+``repro.core.scan_attention``.  Three evaluation modes share one parameter set:
+
+* ``aaren_parallel``  — training / prefill: all N outputs via parallel scan;
+* ``aaren_chunked``   — prefill with an incoming carry (App.-A blocks at the
+  framework level; the Pallas kernel does the same within a core);
+* ``aaren_step``      — O(1) streaming update (the RNN cell, Fig. 2).
+
+Weights are plain arrays (functional style); ``repro.models`` owns parameter
+creation/sharding.  GQA: ``kv_heads`` may divide ``heads``; each kv head
+serves ``heads/kv_heads`` learned query heads.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scan_attention import (
+    NEG_INF,
+    ScanState,
+    attention_many_to_many_with_state,
+    combine,
+    make_empty_state,
+    make_leaf_state,
+    prefix_scan_states,
+    readout,
+)
+
+
+class AarenWeights(NamedTuple):
+    """Parameters of one Aaren layer.
+
+    ``query``: (d_model,) learned query token q^{(j)} (paper §3.3);
+    ``wq``: (d_model, H, d_head) query projection (applied to ``query``);
+    ``wk``/``wv``: (d_model, G, d_head) key/value projections;
+    ``wo``: (H, d_head, d_model) output projection.
+    """
+
+    query: jax.Array
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+
+
+def head_queries(w: AarenWeights) -> jax.Array:
+    """Project the learned query token to per-head queries: (H, d_head)."""
+    return jnp.einsum("d,dhk->hk", w.query.astype(jnp.float32),
+                      w.wq.astype(jnp.float32))
+
+
+def _project_kv(w: AarenWeights, x: jax.Array):
+    """x: (B, N, D) -> k, v: (B, N, G, d_head)."""
+    k = jnp.einsum("bnd,dgk->bngk", x, w.wk.astype(x.dtype))
+    v = jnp.einsum("bnd,dgk->bngk", x, w.wv.astype(x.dtype))
+    return k, v
+
+
+def _scores(q_heads: jax.Array, k: jax.Array, scale: float) -> jax.Array:
+    """q_heads: (H, d), k: (B, N, G, d) -> s: (B, H, N) (f32).
+
+    GQA: query head h reads kv head h // (H/G).
+    """
+    h = q_heads.shape[0]
+    g = k.shape[2]
+    qg = q_heads.reshape(g, h // g, q_heads.shape[-1])  # (G, H/G, d)
+    s = jnp.einsum("bngk,grk->bgrn", k.astype(jnp.float32), qg) * scale
+    return s.reshape(k.shape[0], h, k.shape[1])
+
+
+def _values_per_head(v: jax.Array, n_heads: int) -> jax.Array:
+    """v: (B, N, G, d) -> (B, H, N, d) with kv-head grouping."""
+    b, n, g, d = v.shape
+    v = jnp.swapaxes(v, 1, 2)  # (B, G, N, d)
+    v = jnp.broadcast_to(v[:, :, None], (b, g, n_heads // g, n, d))
+    return v.reshape(b, n_heads, n, d)
+
+
+def aaren_attention_parallel(
+    q_heads: jax.Array, k: jax.Array, v: jax.Array, scale: float
+) -> tuple[jax.Array, ScanState]:
+    """Many-to-many prefix attention.  Returns ((B,N,H,d), final ScanState).
+
+    This is the jnp reference path; ``repro.kernels.aaren_scan`` provides the
+    fused TPU kernel with identical semantics (dispatched in models/blocks).
+    """
+    s = _scores(q_heads, k, scale)          # (B, H, N)
+    vh = _values_per_head(v, q_heads.shape[0]).astype(jnp.float32)  # (B,H,N,d)
+    states = prefix_scan_states(s, vh)      # leaves (B,H,N[,d])
+    out = readout(states)                   # (B, H, N, d)
+    final = ScanState(m=states.m[..., -1], u=states.u[..., -1],
+                      w=states.w[..., -1, :])
+    return jnp.swapaxes(out, 1, 2).astype(v.dtype), final
+
+
+def aaren_attention_chunked(
+    q_heads: jax.Array, k: jax.Array, v: jax.Array, carry: ScanState,
+    scale: float,
+) -> tuple[jax.Array, ScanState]:
+    """Prefix attention over one chunk, folding in an incoming carry."""
+    s = _scores(q_heads, k, scale)
+    vh = _values_per_head(v, q_heads.shape[0]).astype(jnp.float32)
+    out, final = _chunk_with_carry(s, vh, carry)
+    return jnp.swapaxes(out, 1, 2).astype(v.dtype), final
+
+
+def _chunk_with_carry(s, vh, carry: ScanState):
+    states = prefix_scan_states(s, vh)
+    lifted = ScanState(
+        m=jnp.broadcast_to(carry.m[..., None], states.m.shape),
+        u=jnp.broadcast_to(carry.u[..., None], states.u.shape),
+        w=jnp.broadcast_to(carry.w[..., None, :], states.w.shape),
+    )
+    carried = combine(lifted, states)
+    final = ScanState(m=carried.m[..., -1], u=carried.u[..., -1],
+                      w=carried.w[..., -1, :])
+    return readout(carried), final
+
+
+def aaren_attention_step(
+    q_heads: jax.Array, k_t: jax.Array, v_t: jax.Array, carry: ScanState,
+    scale: float,
+) -> tuple[jax.Array, ScanState]:
+    """O(1) streaming update with a single token.
+
+    k_t/v_t: (B, 1, G, d); carry leaves: m,u (B, H), w (B, H, d).
+    Returns ((B, 1, H, d) output, new carry).
+    """
+    s = _scores(q_heads, k_t, scale)[..., 0]  # (B, H)
+    vh = _values_per_head(v_t, q_heads.shape[0])[..., 0, :].astype(jnp.float32)
+    new = combine(carry, make_leaf_state(s, vh))
+    out = readout(new)  # (B, H, d)
+    return out[:, None].astype(v_t.dtype), new
+
+
+def empty_carry(batch: int, n_heads: int, head_dim: int) -> ScanState:
+    """Constant-memory decode state of one Aaren layer: O(H·(2+d)) floats."""
+    return make_empty_state((batch, n_heads), head_dim)
+
+
+def carry_specs(batch: int, n_heads: int, head_dim: int) -> ScanState:
+    sds = jax.ShapeDtypeStruct
+    return ScanState(
+        m=sds((batch, n_heads), jnp.float32),
+        u=sds((batch, n_heads), jnp.float32),
+        w=sds((batch, n_heads, head_dim), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Full layer: project -> scan -> output-project.  (B, N, D) -> (B, N, D)
+# ---------------------------------------------------------------------------
+
+
+def aaren_layer_parallel(w: AarenWeights, x: jax.Array, scale: float | None = None,
+                         attention_fn=aaren_attention_parallel):
+    """Training/prefill evaluation of a full Aaren layer."""
+    d_head = w.wk.shape[-1]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d_head))
+    q_heads = head_queries(w)
+    k, v = _project_kv(w, x)
+    ctx, final = attention_fn(q_heads, k, v, scale)
+    out = jnp.einsum("bnhk,hkd->bnd", ctx, w.wo.astype(ctx.dtype))
+    return out, final
+
+
+def aaren_layer_step(w: AarenWeights, x_t: jax.Array, carry: ScanState,
+                     scale: float | None = None):
+    """O(1) streaming evaluation: x_t (B, 1, D) -> (B, 1, D), new carry."""
+    d_head = w.wk.shape[-1]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d_head))
+    q_heads = head_queries(w)
+    k_t, v_t = _project_kv(w, x_t)
+    ctx, new_carry = aaren_attention_step(q_heads, k_t, v_t, carry, scale)
+    out = jnp.einsum("bnhk,hkd->bnd", ctx, w.wo.astype(ctx.dtype))
+    return out, new_carry

@@ -1,0 +1,46 @@
+"""Rotary position embeddings (used by the softmax-attention baselines).
+
+Aaren layers do not use RoPE: with a constant learned query there is no
+q_i . k_j phase cancellation, so rotating K would inject absolute-position
+artifacts (see DESIGN.md §4).  The baseline transformers keep their archs'
+standard RoPE.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "theta"))
+def rope_freqs(positions: jax.Array, dim: int, theta: float = 10000.0):
+    """cos/sin tables for ``positions`` (any shape) -> (..., dim/2)."""
+    inv = 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate ``x`` (..., N, d) with tables (..., N, d/2); broadcasts over heads.
+
+    Layout: split-halves convention (x1 = x[..., :d/2], x2 = x[..., d/2:]),
+    matching llama-family reference implementations.
+    """
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    # cos/sin come in as (..., N, d/2) with no head dim; x may be
+    # (..., H, N, d) or (..., N, H, d).  Callers pass tables already
+    # broadcast-compatible with x's leading dims.
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+def rope_for_positions(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """Convenience: apply RoPE to ``x`` (..., N, H, d) given positions (..., N)."""
+    cos, sin = rope_freqs(positions, x.shape[-1], theta)
+    # insert head axis for broadcasting: (..., N, 1, d/2)
+    return apply_rope(x, cos[..., None, :], sin[..., None, :])

@@ -1,0 +1,324 @@
+"""Attention as an RNN — the paper's core algorithm (Feng et al., 2024).
+
+Softmax attention for a single query ``q`` over context ``(k_i, v_i)`` is the
+ratio of two rolling sums stabilised by a cumulative max (paper §3.1):
+
+    m_k = max(m_{k-1}, s_k)                      with  s_k = q . k_k
+    a_k = a_{k-1} exp(m_{k-1} - m_k) + v_k exp(s_k - m_k)
+    c_k = c_{k-1} exp(m_{k-1} - m_k) +     exp(s_k - m_k)
+    o_k = a_k / c_k
+
+This module provides every evaluation strategy the paper discusses:
+
+* :func:`attention_many_to_one`   — conventional parallel softmax (Fig. 1a);
+* :func:`scan_state_step`         — the O(1)-memory RNN cell (Fig. 2);
+* :func:`attention_many_to_many`  — all prefixes via the parallel prefix scan
+  with the associative operator ``(+)`` on ``(m, u, w)`` tuples (paper §3.2,
+  Alg. 1, App. B);
+* :func:`attention_blockwise`     — the O(b)-memory block-by-block method
+  (paper App. A), which is also the structural skeleton of our Pallas kernel.
+
+All functions are layout ``(..., N, d)`` for keys/values with scores
+``(..., N)`` and are pure jnp — they are the oracle for the Pallas kernels in
+``repro.kernels`` and the building block for ``repro.core.aaren``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Large-but-finite "minus infinity".  Using a finite sentinel (the same trick
+# as flash-attention implementations) means ``exp(NEG_INF - m)`` underflows to
+# an exact 0.0 without ever producing ``(-inf) - (-inf) = nan`` when two empty
+# states are combined.  -0.7 * f32_max keeps headroom for additions.
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+class ScanState(NamedTuple):
+    """The 3-tuple the paper's associative operator acts on (App. B).
+
+    ``m``: running max of scores over the index set            (...,)
+    ``u``: sum of exp(s_i - m)   — the softmax denominator     (...,)
+    ``w``: sum of exp(s_i - m) v_i — the softmax numerator     (..., d)
+
+    The attention output of the set is ``w / u``.
+    """
+
+    m: jax.Array
+    u: jax.Array
+    w: jax.Array
+
+
+def make_empty_state(batch_shape: tuple, d: int, dtype=jnp.float32) -> ScanState:
+    """Identity element of ``(+)``: the state of the empty index set."""
+    return ScanState(
+        m=jnp.full(batch_shape, NEG_INF, dtype=dtype),
+        u=jnp.zeros(batch_shape, dtype=dtype),
+        w=jnp.zeros(batch_shape + (d,), dtype=dtype),
+    )
+
+
+def make_leaf_state(s: jax.Array, v: jax.Array) -> ScanState:
+    """The per-token leaf ``(m,u,w)_{ {i} } = (s_i, 1, v_i)`` (paper §3.2)."""
+    return ScanState(m=s, u=jnp.ones_like(s), w=v.astype(s.dtype))
+
+
+def combine(lhs: ScanState, rhs: ScanState) -> ScanState:
+    """The paper's associative operator ``(+)`` (§3.2, App. B).
+
+    ``(m_A,u_A,w_A) (+) (m_B,u_B,w_B) = (m_AuB, u_AuB, w_AuB)`` with
+
+        m_AuB = max(m_A, m_B)
+        u_AuB = u_A exp(m_A - m_AuB) + u_B exp(m_B - m_AuB)
+        w_AuB = w_A exp(m_A - m_AuB) + w_B exp(m_B - m_AuB)
+
+    Associativity and correctness are proved in the paper's App. B and
+    property-tested in ``tests/test_scan_operator.py``.
+    """
+    m = jnp.maximum(lhs.m, rhs.m)
+    alpha = jnp.exp(lhs.m - m)  # in [0, 1]; exactly 0 for the empty state
+    beta = jnp.exp(rhs.m - m)
+    u = lhs.u * alpha + rhs.u * beta
+    # m/u are either (...,) with w (..., d) — the canonical layout — or the
+    # "lifted" layout (..., N, 1) with w (..., N, d) used inside
+    # associative_scan.  Broadcast alpha/beta accordingly.
+    if alpha.ndim < lhs.w.ndim:
+        alpha, beta = alpha[..., None], beta[..., None]
+    w = lhs.w * alpha + rhs.w * beta
+    return ScanState(m=m, u=u, w=w)
+
+
+def readout(state: ScanState, eps: float = 0.0) -> jax.Array:
+    """Attention output ``o = w / u`` of an accumulated state."""
+    if eps:
+        return state.w / (state.u + eps)[..., None]
+    return state.w / state.u[..., None]
+
+
+def scores(q: jax.Array, k: jax.Array, scale: float | None = None) -> jax.Array:
+    """``s_i = q . k_i`` (optionally scaled by 1/sqrt(d), in f32).
+
+    q: (..., d)  or (..., N, d) matching k's token dim; k: (..., N, d)
+    returns (..., N).
+    """
+    d = k.shape[-1]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d))
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    if q.ndim == k.ndim:  # per-position queries (used by baselines/tests)
+        s = jnp.einsum("...nd,...nd->...n", q, k)
+    else:  # single query vector against all positions — the Aaren case
+        s = jnp.einsum("...d,...nd->...n", q, k)
+    return s * scale
+
+
+# ---------------------------------------------------------------------------
+# (1) Conventional parallel computation == many-to-one RNN output (Fig. 1a)
+# ---------------------------------------------------------------------------
+
+
+def attention_many_to_one(
+    q: jax.Array, k: jax.Array, v: jax.Array, scale: float | None = None
+) -> jax.Array:
+    """softmax(qK^T)V for a single query vector — O(N) memory, fully parallel.
+
+    q: (..., d), k/v: (..., N, d) -> (..., d)
+    """
+    s = scores(q, k, scale)  # (..., N)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...n,...nd->...d", p, v.astype(p.dtype)).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# (2) Token-by-token RNN — O(1) memory (Fig. 2). Used for streaming decode.
+# ---------------------------------------------------------------------------
+
+
+def scan_state_step(state: ScanState, s_t: jax.Array, v_t: jax.Array) -> ScanState:
+    """One RNN-cell update with a new token's (score, value).
+
+    state leaves are broadcast against ``s_t: (...,)`` / ``v_t: (..., d)``.
+    This is the constant-memory inference path of the paper (§3.3).
+    """
+    return combine(state, make_leaf_state(s_t, v_t))
+
+
+def attention_recurrent(
+    q: jax.Array, k: jax.Array, v: jax.Array, scale: float | None = None
+) -> jax.Array:
+    """Fully sequential evaluation via the RNN cell — O(1) memory.
+
+    Slow by construction (N sequential steps); exists as the semantic anchor
+    that the scan/blockwise/parallel paths are tested against.
+    """
+    s = scores(q, k, scale)  # (..., N)
+    batch_shape = s.shape[:-1]
+    d = v.shape[-1]
+    init = make_empty_state(batch_shape, d)
+
+    def step(state, inputs):
+        s_t, v_t = inputs
+        new = scan_state_step(state, s_t, v_t)
+        return new, None
+
+    # scan over the token axis: move N to the front of each input
+    s_maj = jnp.moveaxis(s, -1, 0)
+    v_maj = jnp.moveaxis(v.astype(jnp.float32), -2, 0)
+    final, _ = jax.lax.scan(step, init, (s_maj, v_maj))
+    return readout(final).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# (3) Many-to-many RNN via parallel prefix scan (§3.2) — the paper's method
+# ---------------------------------------------------------------------------
+
+
+def prefix_scan_states(s: jax.Array, v: jax.Array) -> ScanState:
+    """All-prefix states {(m_k, c_k, a_k)}_{k=1..N} via ``associative_scan``.
+
+    s: (..., N) scores, v: (..., N, d) values ->
+    ScanState with leaves m,u: (..., N), w: (..., N, d).
+
+    XLA lowers ``lax.associative_scan`` to a work-efficient Ladner–Fischer
+    style tree; on TPU the Pallas kernel in ``repro.kernels.aaren_scan``
+    replaces this with a chunked single-pass scan (App. A blocks).
+    """
+    leaves = make_leaf_state(s.astype(jnp.float32), v.astype(jnp.float32))
+    # associative_scan needs a common scan axis: lift m,u to (..., N, 1)
+    lifted = ScanState(m=leaves.m[..., None], u=leaves.u[..., None], w=leaves.w)
+    out = jax.lax.associative_scan(combine, lifted, axis=-2)
+    return ScanState(m=out.m[..., 0], u=out.u[..., 0], w=out.w)
+
+
+def attention_many_to_many(
+    q: jax.Array, k: jax.Array, v: jax.Array, scale: float | None = None
+) -> jax.Array:
+    """{ o_k = Attention(q, x_{1:k}) }_{k=1..N} in parallel (paper §3.2).
+
+    q: (..., d), k/v: (..., N, d) -> (..., N, d).
+    """
+    s = scores(q, k, scale)
+    states = prefix_scan_states(s, v)
+    return readout(states).astype(v.dtype)
+
+
+def attention_many_to_many_with_state(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    carry: ScanState | None = None,
+    scale: float | None = None,
+) -> tuple[jax.Array, ScanState]:
+    """Prefix-scan attention that also threads an incoming carry state.
+
+    Used for chunked prefill: process a 32k prompt in sequence blocks, each
+    block combining the previous blocks' state — exactly App. A at the
+    framework level.  Returns (outputs (..., N, d), final ScanState).
+    """
+    s = scores(q, k, scale)
+    states = prefix_scan_states(s, v)
+    if carry is not None:
+        # prepend carry: state_k <- carry (+) state_k (prefix property)
+        lifted = ScanState(
+            m=carry.m[..., None], u=carry.u[..., None], w=carry.w[..., None, :]
+        )
+        states = combine(
+            ScanState(
+                m=jnp.broadcast_to(lifted.m, states.m.shape),
+                u=jnp.broadcast_to(lifted.u, states.u.shape),
+                w=jnp.broadcast_to(lifted.w, states.w.shape),
+            ),
+            states,
+        )
+    final = ScanState(m=states.m[..., -1], u=states.u[..., -1], w=states.w[..., -1, :])
+    return readout(states).astype(v.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# (4) Block-by-block (paper App. A) — O(b) memory middle ground
+# ---------------------------------------------------------------------------
+
+
+def attention_blockwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_size: int,
+    scale: float | None = None,
+) -> jax.Array:
+    """Many-to-many outputs computed block-by-block with an O(b) working set.
+
+    Semantically identical to :func:`attention_many_to_many`; the sequence is
+    processed in blocks of ``b`` tokens, carrying the (m,u,w) state across
+    blocks (paper App. A).  ``N`` must be divisible by ``block_size``.
+    """
+    n = k.shape[-2]
+    if n % block_size:
+        raise ValueError(f"N={n} not divisible by block_size={block_size}")
+    n_blocks = n // block_size
+    d = v.shape[-1]
+    s = scores(q, k, scale)  # (..., N)
+    batch_shape = s.shape[:-1]
+
+    s_blk = jnp.moveaxis(
+        s.reshape(batch_shape + (n_blocks, block_size)), -2, 0
+    )  # (nb, ..., b)
+    v_blk = jnp.moveaxis(
+        v.astype(jnp.float32).reshape(batch_shape + (n_blocks, block_size, d)), -3, 0
+    )  # (nb, ..., b, d)
+
+    init = make_empty_state(batch_shape, d)
+
+    def block_step(carry: ScanState, blk):
+        s_b, v_b = blk
+        # intra-block prefix states (vectorised), then fold in the carry
+        states = prefix_scan_states(s_b, v_b)
+        carried = combine(
+            ScanState(
+                m=jnp.broadcast_to(carry.m[..., None], states.m.shape),
+                u=jnp.broadcast_to(carry.u[..., None], states.u.shape),
+                w=jnp.broadcast_to(carry.w[..., None, :], states.w.shape),
+            ),
+            states,
+        )
+        new_carry = ScanState(
+            m=carried.m[..., -1], u=carried.u[..., -1], w=carried.w[..., -1, :]
+        )
+        return new_carry, readout(carried)
+
+    _, outs = jax.lax.scan(block_step, init, (s_blk, v_blk))
+    # outs: (nb, ..., b, d) -> (..., N, d)
+    outs = jnp.moveaxis(outs, 0, -3)
+    return outs.reshape(batch_shape + (n, d)).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal self-attention expressed through the RNN view (used in tests to show
+# a Transformer's causal attention row-by-row equals many-to-one per prefix).
+# ---------------------------------------------------------------------------
+
+
+def causal_attention_reference(
+    q: jax.Array, k: jax.Array, v: jax.Array, scale: float | None = None
+) -> jax.Array:
+    """Row-wise causal softmax attention: o_k = Attention(q_k, x_{1:k}).
+
+    q/k/v: (..., N, d) -> (..., N, d).  O(N^2) reference used to validate the
+    flash-attention kernel and the RNN view of Transformers (Fig. 1b).
+    """
+    d = k.shape[-1]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d))
+    s = jnp.einsum("...qd,...kd->...qk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    n = s.shape[-1]
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p, v.astype(p.dtype)).astype(v.dtype)

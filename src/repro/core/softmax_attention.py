@@ -1,0 +1,143 @@
+"""Baseline softmax attention (the paper's comparison point) + KV-cache decode.
+
+Layout convention across the framework: activations are ``(B, N, H, d)``
+(batch, sequence, heads, head_dim) — batch shards over the data axes, heads
+over the model axis.  GQA is supported by ``kv_heads <= heads`` with grouped
+broadcasting.  The Pallas flash kernel in ``repro.kernels.flash_attention``
+implements the same math blockwise; this module is the jnp reference and the
+CPU/dry-run path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scan_attention import NEG_INF
+
+
+def _expand_kv(x: jax.Array, n_heads: int) -> jax.Array:
+    """(B, N, G, d) -> (B, N, H, d) by repeating each kv head H/G times."""
+    g = x.shape[-2]
+    if g == n_heads:
+        return x
+    reps = n_heads // g
+    return jnp.repeat(x, reps, axis=-2)
+
+
+def causal_mask_bias(n_q: int, n_k: int, *, window: int | None = None,
+                     q_offset: int = 0) -> jax.Array:
+    """(n_q, n_k) additive bias: 0 where attendable, NEG_INF elsewhere.
+
+    ``q_offset`` is the absolute position of query row 0 (used with caches).
+    ``window`` enables sliding-window attention (attend to the last ``window``
+    positions inclusive of self).
+    """
+    q_pos = np.arange(n_q)[:, None] + q_offset
+    k_pos = np.arange(n_k)[None, :]
+    ok = k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > (q_pos - window)
+    return jnp.where(jnp.asarray(ok), 0.0, NEG_INF).astype(jnp.float32)
+
+
+def multihead_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    lengths: jax.Array | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """softmax(q k^T) v with optional causal / sliding-window / length masks.
+
+    q: (B, Nq, H, d); k, v: (B, Nk, G, d) with G | H.  Returns (B, Nq, H, d).
+    ``lengths``: (B,) number of valid key positions (for decode with caches).
+    """
+    b, n_q, h, d = q.shape
+    n_k = k.shape[1]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d))
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        s = s + causal_mask_bias(n_q, n_k, window=window, q_offset=q_offset)
+    if lengths is not None:
+        valid = jnp.arange(n_k)[None, :] < lengths[:, None]  # (B, Nk)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(p.dtype))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache — the linear-memory inference path the paper contrasts against.
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(batch: int, max_len: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    """Pre-allocated ring-less KV cache: {k, v: (B, S, G, d), index: ()}."""
+    return {
+        "k": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def kv_cache_specs(batch: int, max_len: int, kv_heads: int, head_dim: int,
+                   dtype=jnp.bfloat16):
+    """ShapeDtypeStruct twin of :func:`init_kv_cache` (for the dry-run)."""
+    sds = jax.ShapeDtypeStruct
+    return {
+        "k": sds((batch, max_len, kv_heads, head_dim), dtype),
+        "v": sds((batch, max_len, kv_heads, head_dim), dtype),
+        "index": sds((), jnp.int32),
+    }
+
+
+def update_kv_cache(cache: dict, k_new: jax.Array, v_new: jax.Array) -> dict:
+    """Insert (B, n, G, d) new keys/values at the current index."""
+    idx = cache["index"]
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), idx, axis=1)
+    return {"k": k, "v": v, "index": idx + k_new.shape[1]}
+
+
+def decode_attention(
+    q: jax.Array,
+    cache: dict,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """One-token decode against a KV cache.
+
+    q: (B, 1, H, d); cache holds (B, S, G, d) and must already contain the
+    current token (call :func:`update_kv_cache` first — its ``index`` then
+    counts all written tokens).  Masks unwritten slots and (optionally)
+    positions outside the sliding window.  O(S) compute/memory — this is the
+    baseline the paper's O(1) Aaren state replaces.
+    """
+    b, n_q, h, d = q.shape
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d))
+    k = _expand_kv(cache["k"], h)
+    v = _expand_kv(cache["v"], h)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    n_k = k.shape[1]
+    pos = jnp.arange(n_k)
+    valid = pos < cache["index"]  # index == number of written tokens
+    if window is not None:
+        valid &= pos > (cache["index"] - 1 - window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(p.dtype))
+    return out.astype(q.dtype)

@@ -1,0 +1,9 @@
+"""Deterministic synthetic data pipelines (offline stand-ins for the paper's
+datasets), per-host sharded and state-restorable."""
+
+from repro.data.synthetic import (  # noqa: F401
+    CopyTaskIterator,
+    EventStreamGenerator,
+    SyntheticLMIterator,
+    TimeSeriesGenerator,
+)

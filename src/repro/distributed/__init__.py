@@ -1,0 +1,8 @@
+"""Distributed-optimization utilities: gradient compression, microbatching."""
+
+from repro.distributed.grad import (  # noqa: F401
+    compress_gradients,
+    dequantize_int8,
+    microbatch_grads,
+    quantize_int8_stochastic,
+)

@@ -1,0 +1,120 @@
+"""Gradient compression + microbatch accumulation.
+
+Compression
+-----------
+Under pjit/GSPMD the data-parallel gradient all-reduce is implicit: XLA
+reduces each gradient tensor *in the dtype it has at the reduction point*.
+Compression therefore = controlling that dtype:
+
+* ``"bf16"``  — cast gradients to bfloat16 before accumulation: halves
+  all-reduce bytes on both ICI (data axis) and DCN (pod axis).
+* ``"int8"``  — per-tensor-scaled int8 with **stochastic rounding** (unbiased:
+  E[q] = g, required so momentum doesn't accumulate quantization bias), 4×
+  byte reduction.  Emulated as quantize→dequantize around the accumulation;
+  on a real fleet the dequantize lands after the DCN all-reduce.
+* ``"none"``  — f32 gradients.
+
+Microbatching
+-------------
+``microbatch_grads`` evaluates value_and_grad over ``k`` sequential
+microbatches with a ``lax.scan``, accumulating in f32.  Peak activation
+memory drops by ~k× while the FSDP weight all-gathers amortise across the
+scan body (XLA hoists the gather of scan-invariant operands).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8_stochastic(g: jax.Array, key: jax.Array):
+    """Unbiased per-tensor int8 quantization.  Returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-30) / 127.0
+    scaled = g / scale
+    noise = jax.random.uniform(key, g.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_gradients(grads, mode: str, key: jax.Array | None = None):
+    """Apply the selected compression to a gradient pytree."""
+    if mode == "none":
+        return grads
+    if mode == "bf16":
+        return jax.tree.map(
+            lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+    if mode == "int8":
+        leaves, treedef = jax.tree.flatten(grads)
+        keys = jax.random.split(key, len(leaves))
+        out = []
+        for g, k in zip(leaves, keys):
+            q, scale = quantize_int8_stochastic(g.astype(jnp.float32), k)
+            out.append(dequantize_int8(q, scale).astype(g.dtype))
+        return jax.tree.unflatten(treedef, out)
+    raise ValueError(f"unknown compression mode {mode!r}")
+
+
+def _split_batch(batch, k: int):
+    """(B, ...) leaves -> (k, B/k, ...) for scan; non-batched leaves repeat.
+
+    The split is *strided* (microbatch i takes elements i, i+k, i+2k, ...):
+    under a batch-sharded input layout each microbatch then draws one slice
+    from every data shard, so the scan body stays fully batch-parallel —
+    a contiguous split would hand each scan step a single shard's block and
+    force a reshard per microbatch.  A sharding constraint re-asserts the
+    batch layout after the reshape (no-op outside a mesh context).
+    """
+    from repro.sharding import constrain
+
+    def split(x):
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (k,))
+        if x.shape[0] % k:
+            raise ValueError(
+                f"batch dim {x.shape[0]} not divisible by microbatches {k}")
+        x = x.reshape((x.shape[0] // k, k) + x.shape[1:])
+        x = jnp.swapaxes(x, 0, 1)
+        return constrain(x, [None, "batch"] + [None] * (x.ndim - 2))
+
+    return jax.tree.map(split, batch)
+
+
+def microbatch_grads(loss_fn, params, batch, n_microbatches: int,
+                     *, compression: str = "none",
+                     key: jax.Array | None = None):
+    """Mean loss/grads over ``n_microbatches`` sequential slices.
+
+    loss_fn: (params, microbatch) -> (loss, metrics).
+    Returns (grads, loss, metrics) — all microbatch means, f32 accumulation.
+    """
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    if n_microbatches <= 1:
+        (loss, metrics), grads = grad_fn(params, batch)
+        grads = compress_gradients(grads, compression, key)
+        return grads, loss, metrics
+
+    mbs = _split_batch(batch, n_microbatches)
+    (loss0, metrics0), g0 = grad_fn(
+        params, jax.tree.map(lambda x: x[0], mbs))
+    g0 = jax.tree.map(lambda g: g.astype(jnp.float32), g0)
+
+    def body(carry, mb):
+        gsum, lsum, msum = carry
+        (loss, metrics), g = grad_fn(params, mb)
+        g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+        return (g, lsum + loss, jax.tree.map(jnp.add, msum, metrics)), None
+
+    rest = jax.tree.map(lambda x: x[1:], mbs)
+    (gsum, lsum, msum), _ = jax.lax.scan(
+        body, (g0, loss0, metrics0), rest)
+    inv = 1.0 / n_microbatches
+    grads = jax.tree.map(lambda g: g * inv, gsum)
+    grads = compress_gradients(grads, compression, key)
+    return grads, lsum * inv, jax.tree.map(lambda m: m * inv, msum)

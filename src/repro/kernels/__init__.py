@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots, with jnp oracles.
+
+* ``aaren_scan``       — chunked prefix-scan Aaren attention (the paper's
+  Algorithm 1 within VMEM blocks x Appendix-A carry across blocks);
+* ``flash_attention``  — online-softmax causal/sliding-window attention (the
+  baseline; same (m, c, a) combine as the paper's RNN cell);
+* ``ops``              — backend dispatch + custom VJPs;
+* ``ref``              — pure-jnp oracles the kernels are tested against.
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    aaren_prefix_attention,
+    flash_mha,
+    kernel_mode,
+)

@@ -1,0 +1,176 @@
+"""Pallas TPU kernel: chunked prefix-scan Aaren attention (paper §3.2 + App. A).
+
+The kernel computes, per (batch·head) row, all causal prefix-softmax outputs
+
+    o_i = ( Σ_{j<=i} exp(s_j - m_i) v_j ) / ( Σ_{j<=i} exp(s_j - m_i) )
+
+from scores ``s`` (the learned-query dot products) and values ``v``, plus the
+final ``(m, u, w)`` carry so chunked prefill / streaming decode can continue
+where the kernel stopped.
+
+Structure — this is the paper's two algorithms composed for the TPU memory
+hierarchy:
+
+* **within a block** (VMEM-resident, ``block_n`` tokens): the paper's
+  Algorithm 1 (Hillis–Steele parallel prefix scan) over the associative
+  operator ⊕ on ``(m, u, w)`` tuples — ``log2(block_n)`` vectorised
+  shift-and-combine steps on the VPU.  O(b log b) work, all on-chip.
+* **across blocks** (the grid's sequence dimension, executed sequentially per
+  TPU core): the paper's Appendix-A block-by-block recurrence — a single
+  ``(m, u, w)`` carry lives in VMEM scratch, so HBM traffic is O(N) reads +
+  O(N) writes and on-chip memory is O(block_n · d).
+
+Compared with materialising the scan in HBM (`lax.associative_scan` lowers to
+O(log N) full-array passes), this fuses the whole scan into one pass:
+HBM bytes drop from ~2·log2(N)·N·d to ~2·N·d.
+
+Layout: scores ``s: (R, N)`` and values ``v: (R, N, d)`` with ``R = B·H``
+rows; carries are ``(R, 1)`` / ``(R, d)``.  f32 throughout the kernel (the
+paper's stability argument needs f32 exponent range; callers cast I/O).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.scan_attention import NEG_INF
+
+DEFAULT_BLOCK_N = 256
+
+
+def _shifted(x: jax.Array, off: int, fill: float) -> jax.Array:
+    """x[i] -> x[i - off] with ``fill`` for i < off.  x: (bn, c)."""
+    pad = jnp.full((off,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([pad, x[:-off]], axis=0)
+
+
+def _block_prefix_scan(m, u, w):
+    """Hillis–Steele scan of the paper's ⊕ over the block axis (axis 0).
+
+    m, u: (bn, 1); w: (bn, d).  Exactly Algorithm 1 of the paper with
+    ``identity = (-inf, 0, 0)`` shifted in at the left edge.
+    """
+    bn = m.shape[0]
+    off = 1
+    while off < bn:
+        m_s = _shifted(m, off, NEG_INF)
+        u_s = _shifted(u, off, 0.0)
+        w_s = _shifted(w, off, 0.0)
+        m_new = jnp.maximum(m, m_s)
+        alpha = jnp.exp(m_s - m_new)  # weight of the shifted (older) half
+        beta = jnp.exp(m - m_new)     # weight of the resident half
+        u = u_s * alpha + u * beta
+        w = w_s * alpha + w * beta
+        m = m_new
+        off *= 2
+    return m, u, w
+
+
+def _aaren_scan_kernel(
+    s_ref, v_ref, m0_ref, u0_ref, w0_ref,  # inputs
+    o_ref, mf_ref, uf_ref, wf_ref,          # outputs
+    cm, cu, cw,                             # VMEM scratch carries
+    *, n_blocks: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cm[...] = m0_ref[...]
+        cu[...] = u0_ref[...]
+        cw[...] = w0_ref[...]
+
+    s = s_ref[0][:, None].astype(jnp.float32)   # (bn, 1)
+    v = v_ref[0].astype(jnp.float32)            # (bn, d)
+
+    # Leaves (s_i, 1, v_i) -> all within-block prefixes via Algorithm 1.
+    m, u, w = _block_prefix_scan(s, jnp.ones_like(s), v)
+
+    # Fold in the carry state of all previous blocks (Appendix A):
+    # state_i <- carry ⊕ state_i.
+    cmv = cm[...]            # (1, 1)
+    cuv = cu[...]            # (1, 1)
+    cwv = cw[...]            # (1, d)
+    m_tot = jnp.maximum(m, cmv)                 # (bn, 1)
+    alpha = jnp.exp(cmv - m_tot)                # carry weight
+    beta = jnp.exp(m - m_tot)                   # block weight
+    u_tot = cuv * alpha + u * beta
+    w_tot = cwv * alpha + w * beta
+
+    o_ref[0] = (w_tot / u_tot).astype(o_ref.dtype)
+
+    # Advance the carry with this block's final state.
+    bn = s.shape[0]
+    cm[...] = m_tot[bn - 1:bn]
+    cu[...] = u_tot[bn - 1:bn]
+    cw[...] = w_tot[bn - 1:bn]
+
+    @pl.when(j == n_blocks - 1)
+    def _fin():
+        mf_ref[...] = cm[...]
+        uf_ref[...] = cu[...]
+        wf_ref[...] = cw[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret"))
+def aaren_scan(
+    s: jax.Array,
+    v: jax.Array,
+    m0: jax.Array,
+    u0: jax.Array,
+    w0: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+):
+    """All-prefix Aaren attention outputs + final carry.
+
+    s: (R, N) f32 scores; v: (R, N, d); m0/u0: (R, 1); w0: (R, d) carry
+    (use ``NEG_INF``/0/0 for a fresh sequence).
+    Returns (o: (R, N, d), m_f: (R, 1), u_f: (R, 1), w_f: (R, d)).
+    """
+    r, n = s.shape
+    d = v.shape[-1]
+    bn = min(block_n, n)
+    while n % bn:
+        bn //= 2
+    n_blocks = n // bn
+
+    kernel = functools.partial(_aaren_scan_kernel, n_blocks=n_blocks)
+    grid = (r, n_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, n, d), v.dtype),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(s.astype(jnp.float32), v, m0, u0, w0)

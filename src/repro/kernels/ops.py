@@ -1,0 +1,190 @@
+"""Jit'd public wrappers for the Pallas kernels, with backend dispatch + VJPs.
+
+Dispatch policy
+---------------
+* On TPU, ``aaren_prefix_attention`` / ``flash_mha`` run the Pallas kernels.
+* Everywhere else (CPU tests, the 512-host-device dry-run) they run the
+  pure-jnp paths: ``lax.associative_scan`` for Aaren (XLA lowers it to a
+  work-efficient tree) and masked softmax for flash.  Pallas-TPU kernels
+  cannot lower on the CPU backend, so the dry-run compiles the jnp path —
+  its HLO cost analysis is what the roofline reads, and DESIGN.md §Perf
+  documents the kernel-vs-jnp delta analytically.
+* ``REPRO_KERNEL_MODE`` env: ``auto`` (default) | ``pallas`` | ``interpret``
+  (kernels in interpret mode — used by kernel-parity tests) | ``jnp``.
+
+Gradients: both ops carry a ``custom_vjp`` whose backward pass re-computes
+the forward with the jnp path and differentiates it (recompute-style, like
+flash-attention backward).  This keeps the kernels forward-only while the
+training path stays exactly differentiable.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scan_attention import (
+    NEG_INF,
+    ScanState,
+    combine,
+    make_leaf_state,
+    prefix_scan_states,
+)
+from repro.kernels import aaren_scan as _aaren_kernel
+from repro.kernels import flash_attention as _flash_kernel
+
+
+def kernel_mode() -> str:
+    mode = os.environ.get("REPRO_KERNEL_MODE", "auto")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return mode
+
+
+# ---------------------------------------------------------------------------
+# Aaren prefix attention: (s, v, carry) -> (o, final carry)
+# ---------------------------------------------------------------------------
+
+
+def _aaren_jnp(s, v, m0, u0, w0):
+    """lax.associative_scan path — differentiable, runs on any backend."""
+    states = prefix_scan_states(s, v)  # m,u: (R, N); w: (R, N, d)
+    carry = ScanState(
+        m=jnp.broadcast_to(m0, states.m.shape),
+        u=jnp.broadcast_to(u0, states.u.shape),
+        w=jnp.broadcast_to(w0[:, None, :], states.w.shape),
+    )
+    total = combine(carry, states)
+    o = total.w / total.u[..., None]
+    return (o.astype(v.dtype), total.m[:, -1:], total.u[:, -1:],
+            total.w[:, -1, :])
+
+
+def _aaren_dispatch(s, v, m0, u0, w0, block_n):
+    mode = kernel_mode()
+    if mode == "jnp":
+        return _aaren_jnp(s, v, m0, u0, w0)
+    interpret = mode == "interpret"
+    return tuple(_aaren_kernel.aaren_scan(
+        s, v, m0, u0, w0, block_n=block_n, interpret=interpret))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _aaren_core(s, v, m0, u0, w0, block_n):
+    return _aaren_dispatch(s, v, m0, u0, w0, block_n)
+
+
+def _aaren_fwd(s, v, m0, u0, w0, block_n):
+    return _aaren_dispatch(s, v, m0, u0, w0, block_n), (s, v, m0, u0, w0)
+
+
+def _aaren_bwd(block_n, res, g):
+    s, v, m0, u0, w0 = res
+    _, vjp = jax.vjp(_aaren_jnp, s, v, m0, u0, w0)
+    return vjp(g)
+
+
+_aaren_core.defvjp(_aaren_fwd, _aaren_bwd)
+
+
+def aaren_prefix_attention(
+    s: jax.Array,
+    v: jax.Array,
+    carry: ScanState | None = None,
+    *,
+    block_n: int = _aaren_kernel.DEFAULT_BLOCK_N,
+):
+    """All-prefix Aaren attention over arbitrary leading batch dims.
+
+    s: (..., N) scores; v: (..., N, d) values; carry leaves: m,u (...,),
+    w (..., d).  Returns (o: (..., N, d), final carry ScanState).
+    """
+    batch_shape = s.shape[:-1]
+    n = s.shape[-1]
+    d = v.shape[-1]
+    r = int(np.prod(batch_shape)) if batch_shape else 1
+    s2 = s.reshape(r, n).astype(jnp.float32)
+    v2 = v.reshape(r, n, d).astype(jnp.float32)
+    if carry is None:
+        m0 = jnp.full((r, 1), NEG_INF, jnp.float32)
+        u0 = jnp.zeros((r, 1), jnp.float32)
+        w0 = jnp.zeros((r, d), jnp.float32)
+    else:
+        m0 = carry.m.reshape(r, 1).astype(jnp.float32)
+        u0 = carry.u.reshape(r, 1).astype(jnp.float32)
+        w0 = carry.w.reshape(r, d).astype(jnp.float32)
+    o, m_f, u_f, w_f = _aaren_core(s2, v2, m0, u0, w0, block_n)
+    final = ScanState(
+        m=m_f.reshape(batch_shape),
+        u=u_f.reshape(batch_shape),
+        w=w_f.reshape(batch_shape + (d,)),
+    )
+    return o.reshape(batch_shape + (n, d)).astype(v.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# Flash attention: (q, k, v) -> o
+# ---------------------------------------------------------------------------
+
+
+def _flash_jnp(q, k, v, causal, window, scale):
+    from repro.kernels.ref import flash_reference
+
+    return flash_reference(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def _flash_dispatch(q, k, v, causal, window, scale):
+    mode = kernel_mode()
+    if mode == "jnp":
+        return _flash_jnp(q, k, v, causal, window, scale)
+    interpret = mode == "interpret"
+    return _flash_kernel.flash_attention(
+        q, k, v, causal=causal, window=window, scale=scale,
+        interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_core(q, k, v, causal, window, scale):
+    return _flash_dispatch(q, k, v, causal, window, scale)
+
+
+def _flash_fwd(q, k, v, causal, window, scale):
+    return _flash_dispatch(q, k, v, causal, window, scale), (q, k, v)
+
+
+def _flash_bwd(causal, window, scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _flash_jnp(q_, k_, v_, causal, window, scale),
+        q, k, v)
+    return vjp(g)
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Flash attention over (B, Nq, H, d) q and (B, Nk, G, d) k/v.
+
+    Framework layout is sequence-major (B, N, H, d); the kernel wants head-
+    major (B, H, N, d) — transpose at the boundary.
+    """
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(q.shape[-1]))
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = _flash_core(qt, kt, vt, causal, window, float(scale))
+    return jnp.swapaxes(o, 1, 2)

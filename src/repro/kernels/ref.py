@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the semantics the kernels must reproduce bit-for-bit (up to
+float-accumulation-order tolerance).  They are deliberately written with the
+*simplest correct* jnp — no scan tricks — so they double as the readable spec.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scan_attention import NEG_INF
+
+
+def aaren_scan_reference(s, v, m0=None, u0=None, w0=None):
+    """All-prefix softmax attention from scores, with optional carry.
+
+    s: (R, N); v: (R, N, d); m0/u0: (R, 1); w0: (R, d).
+    Returns (o: (R, N, d), m_f: (R, 1), u_f: (R, 1), w_f: (R, d)).
+
+    Direct O(N^2) evaluation: o_i = softmax(s_{1:i} ∪ carry) · (v_{1:i} ∪ w).
+    The carry enters as one pseudo-token with score ``m0`` and "value"
+    ``w0 / u0`` weighted by ``u0`` — i.e. exactly the ⊕ fold.
+    """
+    r, n = s.shape
+    s = s.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    if m0 is None:
+        m0 = jnp.full((r, 1), NEG_INF, jnp.float32)
+        u0 = jnp.zeros((r, 1), jnp.float32)
+        w0 = jnp.zeros((r, v.shape[-1]), jnp.float32)
+
+    mask = jnp.tril(jnp.ones((n, n), bool))  # (i, j): j <= i
+    s_ij = jnp.where(mask[None], s[:, None, :], NEG_INF)  # (R, N, N)
+    m_pref = jnp.maximum(jnp.max(s_ij, axis=-1), m0)      # (R, N)
+    p = jnp.exp(jnp.where(mask[None], s_ij - m_pref[..., None], NEG_INF))
+    carry_w = jnp.exp(m0 - m_pref) * u0                    # (R, N)
+    u = jnp.sum(p, axis=-1) + carry_w
+    w = jnp.einsum("rij,rjd->rid", p, v) + carry_w[..., None] * (
+        w0[:, None, :] / jnp.where(u0 == 0.0, 1.0, u0)[..., None])
+    o = w / u[..., None]
+    m_f = m_pref[:, -1:]
+    u_f = u[:, -1:]
+    w_f = w[:, -1, :]
+    return o, m_f, u_f, w_f
+
+
+def flash_reference(q, k, v, *, causal=True, window=None, scale=None):
+    """Row-wise softmax attention with causal/window masks (GQA-aware).
+
+    q: (B, H, Nq, d); k/v: (B, G, Nk, d).  Returns (B, H, Nq, d).
+    """
+    b, h, n_q, d = q.shape
+    g, n_k = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d))
+    if g != h:
+        k = jnp.repeat(k, h // g, axis=1)
+        v = jnp.repeat(v, h // g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = np.arange(n_q)[:, None]
+    k_pos = np.arange(n_k)[None, :]
+    mask = np.ones((n_q, n_k), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(jnp.asarray(mask), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(p.dtype))
+    return out.astype(q.dtype)

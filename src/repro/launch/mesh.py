@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A *function*, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first jax init; the
+dry-run sets XLA_FLAGS before any import).
+
+Axes are logical roles (DESIGN.md §6):
+
+* ``pod``   — data parallelism across pods over DCN (slowest links);
+* ``data``  — intra-pod FSDP: batch sharding + ZeRO-style weight sharding;
+* ``model`` — tensor/expert parallelism on the fastest ICI links.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / single-host examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

@@ -1,0 +1,76 @@
+"""Render dry-run JSONL artifacts into the EXPERIMENTS.md tables.
+
+Usage::
+
+    python -m repro.launch.report experiments/dryrun_single.jsonl [...more]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(paths):
+    rows, fails = [], []
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                rec = json.loads(line)
+                (fails if "FAIL" in rec else rows).append(
+                    rec.get("FAIL", rec))
+    return rows, fails
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | mode | compile s | state GiB/dev | "
+           "flops/chip | bytes/chip | wire/chip | µbatches |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['attn_mode']} "
+            f"| {r['compile_s']} | {fmt_bytes(r['bytes_per_device'])} "
+            f"| {r['hlo_flops_per_chip']:.3e} | {r['hlo_bytes_per_chip']:.3e} "
+            f"| {r['wire_bytes_per_chip']:.3e} | {r.get('n_microbatches','-')} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | mesh | compute ms | memory ms (floor) | "
+           "collective ms | dominant | useful | MFU≤ |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        floor = r.get("memory_floor_s")
+        floor_s = f" ({fmt_ms(floor)})" if floor else ""
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_ms(r['compute_s'])} | {fmt_ms(r['memory_s'])}{floor_s} "
+            f"| {fmt_ms(r['collective_s'])} | {r['dominant']} "
+            f"| {r['useful_flops_frac']:.2f} | {r['mfu_bound']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows, fails = load(sys.argv[1:])
+    print("### Dry-run matrix\n")
+    print(dryrun_table(rows))
+    print("\n### Roofline terms\n")
+    print(roofline_table(rows))
+    if fails:
+        print("\n### Failures\n")
+        for f in fails:
+            print("-", f)
+
+
+if __name__ == "__main__":
+    main()

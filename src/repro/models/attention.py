@@ -1,0 +1,213 @@
+"""Attention mixers: softmax (global + sliding-window) and Aaren.
+
+Every mixer exposes three entry points with a common signature family:
+
+* ``*_specs(cfg)``                          — ParamSpec tree;
+* ``*_sequence(p, x, cfg, ...)``            — full-sequence eval (train /
+  prefill), returns ``(y, final_state)`` so prefill can hand off to decode;
+* ``*_step(p, x_t, state, cfg)``            — one-token O(1)/O(S) decode;
+* ``*_state_init/_state_specs(cfg, ...)``   — decode-state pytrees.
+
+The softmax KV cache is a ring buffer: for sliding-window layers its capacity
+is ``window`` (bounded state ⇒ long_500k runnable); for global layers it is
+the full context length (the linear-memory baseline the paper improves on).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import aaren as aaren_core
+from repro.core import softmax_attention as soft
+from repro.core.rope import rope_for_positions
+from repro.core.scan_attention import NEG_INF, ScanState
+from repro.kernels import ops as kops
+from repro.models.param import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Shared projections
+# ---------------------------------------------------------------------------
+
+
+def attn_proj_specs(cfg: ArchConfig, *, with_query_token: bool) -> dict:
+    d, h, g, k = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    specs = {
+        "wq": ParamSpec((d, h, k), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, g, k), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, g, k), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, k, d), ("heads", "head_dim", "embed")),
+    }
+    if with_query_token:
+        # The learned query token q^(j) — the paper's ~0.016% param overhead.
+        specs["query"] = ParamSpec((d,), ("embed",), init="query")
+    return specs
+
+
+def _proj_q(p, x):  # (B,N,D) -> (B,N,H,k)
+    return jnp.einsum("bnd,dhk->bnhk", x, p["wq"].astype(x.dtype))
+
+
+def _proj_kv(p, x):  # (B,N,D) -> 2 x (B,N,G,k)
+    k = jnp.einsum("bnd,dgk->bngk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bnd,dgk->bngk", x, p["wv"].astype(x.dtype))
+    return k, v
+
+
+def _proj_out(p, ctx):  # (B,N,H,k) -> (B,N,D)
+    return jnp.einsum("bnhk,hkd->bnd", ctx, p["wo"].astype(ctx.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Softmax attention mixer (global & sliding window) — the baseline
+# ---------------------------------------------------------------------------
+
+
+def softmax_state_init(cfg: ArchConfig, batch: int, cache_len: int):
+    return soft.init_kv_cache(batch, cache_len, cfg.n_kv_heads,
+                              cfg.resolved_head_dim)
+
+
+def softmax_state_specs(cfg: ArchConfig, batch: int, cache_len: int):
+    return soft.kv_cache_specs(batch, cache_len, cfg.n_kv_heads,
+                               cfg.resolved_head_dim)
+
+
+def softmax_sequence(p: dict, x: jax.Array, cfg: ArchConfig, *,
+                     window: int | None, cache_len: int | None = None,
+                     pos_offset: int = 0):
+    """Causal (optionally windowed) self-attention over a full sequence.
+
+    Returns (y, kv_cache) — the cache holds the last ``cache_len`` positions
+    (or everything if None ⇒ cache_len = N) for decode handoff.
+    """
+    b, n, _ = x.shape
+    q = _proj_q(p, x)
+    k, v = _proj_kv(p, x)
+    positions = jnp.arange(n) + pos_offset
+    q = rope_for_positions(q, positions[None, :], cfg.rope_theta)
+    k = rope_for_positions(k, positions[None, :], cfg.rope_theta)
+    # flash_mha dispatches: Pallas flash kernel on TPU, masked softmax jnp
+    # reference elsewhere (CPU smoke tests + dry-run lowering).
+    ctx = kops.flash_mha(q, k, v, causal=True, window=window)
+    y = _proj_out(p, ctx)
+
+    cl = cache_len if cache_len is not None else n
+    if cl >= n:
+        cache = soft.init_kv_cache(b, cl, cfg.n_kv_heads, cfg.resolved_head_dim,
+                                   dtype=k.dtype)
+        cache = soft.update_kv_cache(cache, k, v)
+    else:  # keep the trailing window (ring buffer starts full)
+        cache = {
+            "k": k[:, n - cl:].astype(jnp.bfloat16),
+            "v": v[:, n - cl:].astype(jnp.bfloat16),
+            "index": jnp.asarray(n, jnp.int32),
+        }
+    return y, cache
+
+
+def softmax_step(p: dict, x_t: jax.Array, cache: dict, cfg: ArchConfig, *,
+                 window: int | None):
+    """One-token decode against the (ring) KV cache.  O(cache_len) work."""
+    b = x_t.shape[0]
+    max_len = cache["k"].shape[1]
+    idx = cache["index"]
+    pos = idx  # absolute position of the new token
+    q = _proj_q(p, x_t)
+    k_new, v_new = _proj_kv(p, x_t)
+    q = rope_for_positions(q, jnp.full((1, 1), pos), cfg.rope_theta)
+    k_new = rope_for_positions(k_new, jnp.full((1, 1), pos), cfg.rope_theta)
+
+    slot = jnp.mod(idx, max_len)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    new_cache = {"k": k, "v": v, "index": idx + 1}
+
+    # Ring-aware mask: slots written = min(idx+1, max_len); additionally for
+    # sliding windows only the last `window` absolute positions are valid —
+    # with capacity == window those coincide, so slot-validity suffices.
+    n_written = jnp.minimum(idx + 1, max_len)
+    slots = jnp.arange(max_len)
+    valid = slots < n_written
+    kf = soft._expand_kv(k, cfg.n_heads)
+    vf = soft._expand_kv(v, cfg.n_heads)
+    scale = 1.0 / float(np.sqrt(cfg.resolved_head_dim))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pattr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", pattr, vf.astype(pattr.dtype))
+    y = _proj_out(p, ctx.astype(x_t.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Aaren mixer — the paper's module
+# ---------------------------------------------------------------------------
+
+
+def _aaren_weights(p: dict) -> aaren_core.AarenWeights:
+    return aaren_core.AarenWeights(query=p["query"], wq=p["wq"], wk=p["wk"],
+                                   wv=p["wv"], wo=p["wo"])
+
+
+def aaren_state_init(cfg: ArchConfig, batch: int) -> ScanState:
+    return aaren_core.empty_carry(batch, cfg.n_heads, cfg.resolved_head_dim)
+
+
+def aaren_state_specs(cfg: ArchConfig, batch: int) -> ScanState:
+    return aaren_core.carry_specs(batch, cfg.n_heads, cfg.resolved_head_dim)
+
+
+def _aaren_attention_dispatch(q_heads, k, v, scale):
+    """Scores + per-head values, then the dispatched prefix-scan attention.
+
+    Pallas ``aaren_scan`` kernel on TPU; ``lax.associative_scan`` elsewhere.
+    Same semantics as :func:`aaren_core.aaren_attention_parallel`.
+    """
+    s = aaren_core._scores(q_heads, k, scale)  # (B, H, N) f32
+    vh = aaren_core._values_per_head(v, q_heads.shape[0]).astype(jnp.float32)
+    o, final = kops.aaren_prefix_attention(s, vh)  # (B, H, N, d)
+    return jnp.swapaxes(o, 1, 2).astype(v.dtype), final
+
+
+def aaren_sequence(p: dict, x: jax.Array, cfg: ArchConfig,
+                   attention_fn=None):
+    """Full-sequence Aaren (parallel prefix scan).  No RoPE (DESIGN.md §4)."""
+    w = _aaren_weights(p)
+    fn = attention_fn or _aaren_attention_dispatch
+    y, final = aaren_core.aaren_layer_parallel(w, x, attention_fn=fn)
+    return y, final
+
+
+def aaren_step(p: dict, x_t: jax.Array, state: ScanState, cfg: ArchConfig):
+    """O(1) streaming update — the paper's constant-memory inference."""
+    w = _aaren_weights(p)
+    return aaren_core.aaren_layer_step(w, x_t, state)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder); queries from x, keys/values cached from
+# the encoder output once per sequence.
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_specs(cfg: ArchConfig) -> dict:
+    return attn_proj_specs(cfg, with_query_token=False)
+
+
+def cross_attn_cache(p: dict, enc_out: jax.Array):
+    """Precompute encoder-side K/V: {'k','v'} (B, M, G, k)."""
+    k, v = _proj_kv(p, enc_out)
+    return {"k": k, "v": v}
+
+
+def cross_attn_apply(p: dict, x: jax.Array, cache: dict):
+    q = _proj_q(p, x)
+    ctx = soft.multihead_attention(q, cache["k"], cache["v"], causal=False)
+    return _proj_out(p, ctx)

@@ -1,0 +1,190 @@
+"""Residual blocks: (norm → mixer → +) (norm → mlp → +), three eval modes.
+
+A block is described by a signature ``(mixer, mlp)`` drawn from the config's
+pattern.  All mixers share the interface defined in ``models/attention.py``;
+decode states are per-mixer pytrees (Aaren ScanState / KV ring cache / RG-LRU
+state / SSD state).  ``block_sequence`` optionally returns the decode state
+(prefill); in pure training mode callers pass ``collect_state=False`` so the
+scan carries no cache tensors.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssd as ssd_mod
+from repro.models.layers import (
+    apply_gelu_mlp,
+    apply_norm,
+    apply_swiglu,
+    gelu_mlp_specs,
+    norm_specs,
+    swiglu_specs,
+)
+
+Sig = tuple[str, str]
+
+ZERO_AUX = {"load_balance_loss": 0.0, "dropped_frac": 0.0}
+
+
+def block_specs(sig: Sig, cfg: ArchConfig) -> dict:
+    mixer, mlp = sig
+    specs = {"norm1": norm_specs(cfg.d_model, cfg.norm)}
+    if mixer in ("attn", "attn_local"):
+        specs["mixer"] = attn.attn_proj_specs(cfg, with_query_token=False)
+    elif mixer == "aaren":
+        specs["mixer"] = attn.attn_proj_specs(cfg, with_query_token=True)
+    elif mixer == "rglru":
+        specs["mixer"] = rglru_mod.rglru_specs(cfg)
+    elif mixer == "ssd":
+        specs["mixer"] = ssd_mod.ssd_specs(cfg)
+    else:
+        raise ValueError(mixer)
+    if mlp != "none":
+        specs["norm2"] = norm_specs(cfg.d_model, cfg.norm)
+        if mlp == "swiglu":
+            specs["mlp"] = swiglu_specs(cfg.d_model, cfg.d_ff)
+        elif mlp == "gelu":
+            specs["mlp"] = gelu_mlp_specs(cfg.d_model, cfg.d_ff)
+        elif mlp == "moe":
+            specs["mlp"] = moe_mod.moe_specs(cfg)
+        else:
+            raise ValueError(mlp)
+    return specs
+
+
+def block_state_init(sig: Sig, cfg: ArchConfig, batch: int, cache_len: int):
+    mixer = sig[0]
+    if mixer == "aaren":
+        return attn.aaren_state_init(cfg, batch)
+    if mixer == "attn":
+        return attn.softmax_state_init(cfg, batch, cache_len)
+    if mixer == "attn_local":
+        return attn.softmax_state_init(cfg, batch, min(cfg.window, cache_len))
+    if mixer == "rglru":
+        return rglru_mod.rglru_state_init(cfg, batch)
+    if mixer == "ssd":
+        return ssd_mod.ssd_state_init(cfg, batch)
+    raise ValueError(mixer)
+
+
+def block_state_specs(sig: Sig, cfg: ArchConfig, batch: int, cache_len: int):
+    mixer = sig[0]
+    if mixer == "aaren":
+        return attn.aaren_state_specs(cfg, batch)
+    if mixer == "attn":
+        return attn.softmax_state_specs(cfg, batch, cache_len)
+    if mixer == "attn_local":
+        return attn.softmax_state_specs(cfg, batch, min(cfg.window, cache_len))
+    if mixer == "rglru":
+        return rglru_mod.rglru_state_specs(cfg, batch)
+    if mixer == "ssd":
+        return ssd_mod.ssd_state_specs(cfg, batch)
+    raise ValueError(mixer)
+
+
+def block_state_axes(sig: Sig, cfg: ArchConfig):
+    """Logical-axis tree mirroring :func:`block_state_specs` (for sharding).
+
+    Leaves are **lists** of logical axis names (lists, so that pytree
+    containers like the ScanState NamedTuple are not mistaken for leaves);
+    consumed by ``repro.sharding.spec_for_axes`` when the dry-run/serving
+    shards decode states across the mesh.
+    """
+    mixer = sig[0]
+    if mixer == "aaren":
+        # ScanState(m, u, w): (B, H), (B, H), (B, H, d)
+        from repro.core.scan_attention import ScanState
+
+        return ScanState(
+            m=["batch", "act_heads"],
+            u=["batch", "act_heads"],
+            w=["batch", "act_heads", None],
+        )
+    if mixer in ("attn", "attn_local"):
+        return {"k": ["batch", None, "kv_heads", None],
+                "v": ["batch", None, "kv_heads", None],
+                "index": []}
+    if mixer == "rglru":
+        return {"h": ["batch", "rnn"], "conv": ["batch", None, "rnn"]}
+    if mixer == "ssd":
+        return {"s": ["batch", "ssm_heads", None, None],
+                "conv": ["batch", None, "ssm_conv"]}
+    raise ValueError(mixer)
+
+
+AXES_IS_LEAF = lambda x: isinstance(x, list)  # noqa: E731
+
+
+def _apply_mixer_sequence(p, h, sig, cfg, cache_len):
+    mixer = sig[0]
+    if mixer == "aaren":
+        return attn.aaren_sequence(p, h, cfg)
+    if mixer == "attn":
+        return attn.softmax_sequence(p, h, cfg, window=None,
+                                     cache_len=cache_len)
+    if mixer == "attn_local":
+        return attn.softmax_sequence(p, h, cfg, window=cfg.window,
+                                     cache_len=min(cfg.window, cache_len))
+    if mixer == "rglru":
+        return rglru_mod.rglru_sequence(p, h, cfg)
+    if mixer == "ssd":
+        return ssd_mod.ssd_sequence(p, h, cfg)
+    raise ValueError(mixer)
+
+
+def _apply_mixer_step(p, h_t, state, sig, cfg):
+    mixer = sig[0]
+    if mixer == "aaren":
+        return attn.aaren_step(p, h_t, state, cfg)
+    if mixer == "attn":
+        return attn.softmax_step(p, h_t, state, cfg, window=None)
+    if mixer == "attn_local":
+        return attn.softmax_step(p, h_t, state, cfg, window=cfg.window)
+    if mixer == "rglru":
+        return rglru_mod.rglru_step(p, h_t, state, cfg)
+    if mixer == "ssd":
+        return ssd_mod.ssd_step(p, h_t, state, cfg)
+    raise ValueError(mixer)
+
+
+def _apply_mlp(p, x, sig, cfg, want_aux: bool, decode: bool = False):
+    mlp = sig[1]
+    if mlp == "none":
+        return x, dict(ZERO_AUX)
+    h = apply_norm(p["norm2"], x, cfg.norm)
+    if mlp == "swiglu":
+        return x + apply_swiglu(p["mlp"], h), dict(ZERO_AUX)
+    if mlp == "gelu":
+        return x + apply_gelu_mlp(p["mlp"], h), dict(ZERO_AUX)
+    if mlp == "moe":
+        y, aux = moe_mod.apply_moe(p["mlp"], h, cfg, return_aux=True,
+                                   decode=decode)
+        if not want_aux:
+            aux = dict(ZERO_AUX)
+        return x + y, aux
+    raise ValueError(mlp)
+
+
+def block_sequence(p: dict, x: jax.Array, sig: Sig, cfg: ArchConfig, *,
+                   cache_len: int, collect_state: bool, want_aux: bool = True):
+    """Full-sequence block.  Returns (x, state_or_None, aux)."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    y, state = _apply_mixer_sequence(p["mixer"], h, sig, cfg, cache_len)
+    x = x + y
+    x, aux = _apply_mlp(p, x, sig, cfg, want_aux)
+    return x, (state if collect_state else None), aux
+
+
+def block_step(p: dict, x_t: jax.Array, state, sig: Sig, cfg: ArchConfig):
+    """One-token decode.  Returns (x_t, new_state)."""
+    h = apply_norm(p["norm1"], x_t, cfg.norm)
+    y, new_state = _apply_mixer_step(p["mixer"], h, state, sig, cfg)
+    x_t = x_t + y
+    x_t, _ = _apply_mlp(p, x_t, sig, cfg, want_aux=False, decode=True)
+    return x_t, new_state

@@ -1,0 +1,300 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment the modality frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, F, d_model) in place of the conv1d+mel
+frontend.  The transformer backbone is implemented fully:
+
+* **Encoder** — bidirectional self-attention + GELU MLP, layernorm.  Aaren is
+  *not* applied here: it is a cumulative-prefix (causal) operator and the
+  encoder is bidirectional (DESIGN.md §Arch-applicability).
+* **Decoder** — causal self-attention (→ **Aaren** under ``attn_mode='aaren'``,
+  the paper's streaming-decode showcase), cross-attention to the encoder
+  output (softmax; its queries are decoder tokens, not learned constants),
+  GELU MLP.
+
+Positions: sinusoidal (computed on the fly) for both stacks, so parameter
+shapes stay independent of the assigned sequence lengths.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_embed,
+    apply_gelu_mlp,
+    apply_norm,
+    apply_unembed,
+    embed_specs,
+    gelu_mlp_specs,
+    norm_specs,
+)
+from repro.models.param import stack_specs
+from repro.sharding import constrain
+
+ACT_AXES = ("batch", "seq", "act_embed")
+
+
+def sinusoidal_positions(n: int, d: int, offset: int = 0) -> jax.Array:
+    pos = np.arange(offset, offset + n, dtype=np.float32)[:, None]
+    dim = np.arange(0, d, 2, dtype=np.float32)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+def _sin_pos_dynamic(n: int, d: int, offset) -> jax.Array:
+    """Trace-safe sinusoidal row(s) for dynamic integer ``offset``."""
+    pos = (jnp.arange(n, dtype=jnp.float32) + offset.astype(jnp.float32))[:, None]
+    dim = np.arange(0, d, 2, dtype=np.float32)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = jnp.zeros((n, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def _enc_block_specs(cfg: ArchConfig) -> dict:
+    return {
+        "norm1": norm_specs(cfg.d_model, cfg.norm),
+        "attn": attn.attn_proj_specs(cfg, with_query_token=False),
+        "norm2": norm_specs(cfg.d_model, cfg.norm),
+        "mlp": gelu_mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _enc_block(p, x, cfg):
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    q = attn._proj_q(p["attn"], h)
+    k, v = attn._proj_kv(p["attn"], h)
+    ctx = kops.flash_mha(q, k, v, causal=False)
+    x = x + attn._proj_out(p["attn"], ctx)
+    h = apply_norm(p["norm2"], x, cfg.norm)
+    return x + apply_gelu_mlp(p["mlp"], h)
+
+
+def whisper_specs(cfg: ArchConfig) -> dict:
+    n_enc = cfg.n_enc_layers
+    n_dec = cfg.n_layers
+    specs: dict[str, Any] = {
+        "enc_blocks": stack_specs(_enc_block_specs(cfg), n_enc),
+        "enc_norm": norm_specs(cfg.d_model, cfg.norm),
+        "embed": embed_specs(cfg.vocab, cfg.d_model),
+        "dec_blocks": stack_specs(_dec_block_specs(cfg), n_dec),
+        "dec_norm": norm_specs(cfg.d_model, cfg.norm),
+    }
+    return specs
+
+
+def whisper_encode(cfg: ArchConfig, params: dict, frames: jax.Array):
+    """frames: (B, F, D) stub embeddings -> encoder output (B, F, D)."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = constrain(x, ACT_AXES)
+
+    def body(x, p):
+        x = constrain(x, ACT_AXES)
+        return _enc_block(p, x, cfg), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    else:
+        for i in range(cfg.n_enc_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_blocks"]))
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_block_specs(cfg: ArchConfig) -> dict:
+    self_specs = attn.attn_proj_specs(
+        cfg, with_query_token=cfg.attn_mode == "aaren")
+    return {
+        "norm1": norm_specs(cfg.d_model, cfg.norm),
+        "self": self_specs,
+        "norm_x": norm_specs(cfg.d_model, cfg.norm),
+        "cross": attn.cross_attn_specs(cfg),
+        "norm2": norm_specs(cfg.d_model, cfg.norm),
+        "mlp": gelu_mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_self_sequence(p, h, cfg, cache_len):
+    if cfg.attn_mode == "aaren":
+        return attn.aaren_sequence(p, h, cfg)
+    return attn.softmax_sequence(p, h, cfg, window=None, cache_len=cache_len)
+
+
+def _dec_self_step(p, h_t, state, cfg):
+    if cfg.attn_mode == "aaren":
+        return attn.aaren_step(p, h_t, state, cfg)
+    return attn.softmax_step(p, h_t, state, cfg, window=None)
+
+
+def _dec_self_state_specs(cfg, batch, cache_len):
+    if cfg.attn_mode == "aaren":
+        return attn.aaren_state_specs(cfg, batch)
+    return attn.softmax_state_specs(cfg, batch, cache_len)
+
+
+def _dec_self_state_init(cfg, batch, cache_len):
+    if cfg.attn_mode == "aaren":
+        return attn.aaren_state_init(cfg, batch)
+    return attn.softmax_state_init(cfg, batch, cache_len)
+
+
+def whisper_decode_sequence(
+    cfg: ArchConfig, params: dict, tokens: jax.Array, enc_out: jax.Array,
+    *, collect_state: bool = False, cache_len: int | None = None,
+):
+    """tokens (B, N) + enc_out (B, F, D) -> (logits, states)."""
+    b, n = tokens.shape
+    if cache_len is None:
+        cache_len = n
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    x = apply_embed(params["embed"], tokens, compute_dtype)
+    x = x + sinusoidal_positions(n, cfg.d_model).astype(x.dtype)
+    x = constrain(x, ACT_AXES)
+
+    def body(x, p):
+        x = constrain(x, ACT_AXES)
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        y, self_state = _dec_self_sequence(p["self"], h, cfg, cache_len)
+        x = x + y
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        cross_cache = attn.cross_attn_cache(p["cross"], enc_out)
+        x = x + attn.cross_attn_apply(p["cross"], h, cross_cache)
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + apply_gelu_mlp(p["mlp"], h)
+        state = ({"self": self_state, "cross": cross_cache}
+                 if collect_state else None)
+        return x, state
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, states = jax.lax.scan(body, x, params["dec_blocks"])
+    else:
+        sts = []
+        for i in range(cfg.n_layers):
+            x, st = body(x, jax.tree.map(lambda a: a[i], params["dec_blocks"]))
+            sts.append(st)
+        states = (jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+                  if collect_state else None)
+    x = apply_norm(params["dec_norm"], x, cfg.norm)
+    # whisper ties the unembedding to the token embedding table
+    logits = apply_unembed(None, params["embed"], x, cfg.logit_softcap)
+    return logits, states
+
+
+def whisper_decode_step(cfg: ArchConfig, params: dict, token_t: jax.Array,
+                        states: dict, pos):
+    """One decoder token against (self state, cross cache).  pos: () int."""
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    x = apply_embed(params["embed"], token_t, compute_dtype)
+    x = x + _sin_pos_dynamic(1, cfg.d_model, pos).astype(x.dtype)
+
+    def body(x_t, scanned):
+        p, st = scanned
+        h = apply_norm(p["norm1"], x_t, cfg.norm)
+        y, new_self = _dec_self_step(p["self"], h, st["self"], cfg)
+        x_t = x_t + y
+        h = apply_norm(p["norm_x"], x_t, cfg.norm)
+        x_t = x_t + attn.cross_attn_apply(p["cross"], h, st["cross"])
+        h = apply_norm(p["norm2"], x_t, cfg.norm)
+        x_t = x_t + apply_gelu_mlp(p["mlp"], h)
+        return x_t, {"self": new_self, "cross": st["cross"]}
+
+    if cfg.scan_layers:
+        x, new_states = jax.lax.scan(body, x, (params["dec_blocks"], states))
+    else:
+        sts = []
+        for i in range(cfg.n_layers):
+            x, st = body(x, jax.tree.map(
+                lambda a: a[i], (params["dec_blocks"], states)))
+            sts.append(st)
+        new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+    x = apply_norm(params["dec_norm"], x, cfg.norm)
+    logits = apply_unembed(None, params["embed"], x, cfg.logit_softcap)
+    return logits, new_states
+
+
+def whisper_state_specs(cfg: ArchConfig, batch: int, cache_len: int,
+                        n_frames: int):
+    """Stacked (n_dec_layers, ...) ShapeDtypeStruct decode-state tree."""
+    n_dec = cfg.n_layers
+    g, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    sds = jax.ShapeDtypeStruct
+    self_specs = _dec_self_state_specs(cfg, batch, cache_len)
+    dt = jnp.dtype(cfg.compute_dtype)
+
+    def stack(t):
+        return jax.tree.map(lambda s: sds((n_dec,) + s.shape, s.dtype), t)
+
+    return {
+        "self": stack(self_specs),
+        "cross": {"k": sds((n_dec, batch, n_frames, g, hd), dt),
+                  "v": sds((n_dec, batch, n_frames, g, hd), dt)},
+    }
+
+
+def whisper_state_axes(cfg: ArchConfig):
+    """Logical-axis tree mirroring :func:`whisper_state_specs`."""
+    from repro.models import blocks
+
+    if cfg.attn_mode == "aaren":
+        self_axes = blocks.block_state_axes(("aaren", "gelu"), cfg)
+    else:
+        self_axes = blocks.block_state_axes(("attn", "gelu"), cfg)
+    stack = lambda t: jax.tree.map(lambda a: [None] + list(a), t,
+                                   is_leaf=blocks.AXES_IS_LEAF)
+    return {
+        "self": stack(self_axes),
+        "cross": {"k": [None, "batch", None, "kv_heads", None],
+                  "v": [None, "batch", None, "kv_heads", None]},
+    }
+
+
+def whisper_state_init(cfg: ArchConfig, params: dict, batch: int,
+                       cache_len: int, enc_out: jax.Array):
+    """Concrete decode state from an encoded sequence (tests + serving)."""
+    per_layer = []
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+        per_layer.append({
+            "self": _dec_self_state_init(cfg, batch, cache_len),
+            "cross": attn.cross_attn_cache(p["cross"], enc_out),
+        })
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def whisper_loss(cfg: ArchConfig, params: dict, batch: dict):
+    """batch: {"frames": (B,F,D), "tokens": (B,N)} -> (loss, metrics)."""
+    enc_out = whisper_encode(cfg, params, batch["frames"])
+    logits, _ = whisper_decode_sequence(cfg, params, batch["tokens"], enc_out)
+    targets = batch["tokens"][:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(nll) if mask is None else mask[:, 1:].astype(nll.dtype)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce, {"loss": ce, "ce": ce}

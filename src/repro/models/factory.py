@@ -1,0 +1,203 @@
+"""Model factory: one uniform API over every assigned architecture family.
+
+``build(cfg)`` returns a :class:`ModelAPI` whose members are pure functions
+closed over the config — the training loop, the serving engine, the dry-run,
+and the benchmarks all consume this interface and nothing else.
+
+``input_specs(cfg, shape)`` produces the ``jax.ShapeDtypeStruct`` pytrees for
+every assigned (arch × shape) cell — the dry-run lowers against these without
+allocating anything; ``input_sample`` is the concrete twin for smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.models.param import abstract_params, init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    specs: Callable[[], Any]
+    init: Callable[[jax.Array], Any]
+    abstract: Callable[[], Any]
+    loss: Callable[..., tuple]            # (params, batch) -> (loss, metrics)
+    forward: Callable[..., Any]           # (params, batch) -> logits
+    prefill: Callable[..., tuple]         # (params, batch) -> (logits, states)
+    decode_step: Callable[..., tuple]     # (params, step_batch) -> (logits, states)
+    state_specs: Callable[..., Any]       # (batch, cache_len) -> SDS tree
+
+
+def _param_dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _lm_api(cfg: ArchConfig) -> ModelAPI:
+    specs_fn = lambda: lm.lm_specs(cfg)
+
+    def loss(params, batch):
+        return lm.lm_loss(cfg, params, batch)
+
+    def forward(params, batch):
+        logits, _, _ = lm.lm_apply(
+            cfg, params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"))
+        return logits
+
+    def prefill(params, batch):
+        logits, states, _ = lm.lm_apply(
+            cfg, params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            collect_state=True, cache_len=batch.get("cache_len"),
+            want_aux=False)
+        return logits, states
+
+    def decode_step(params, step_batch):
+        return lm.lm_decode_step(
+            cfg, params, step_batch["token"], step_batch["states"])
+
+    def state_specs(batch, cache_len):
+        return lm.lm_state_specs(cfg, batch, cache_len)
+
+    return ModelAPI(
+        cfg=cfg, specs=specs_fn,
+        init=lambda key: init_params(specs_fn(), key, _param_dtype(cfg)),
+        abstract=lambda: abstract_params(specs_fn(), _param_dtype(cfg)),
+        loss=loss, forward=forward, prefill=prefill,
+        decode_step=decode_step, state_specs=state_specs)
+
+
+def _whisper_api(cfg: ArchConfig) -> ModelAPI:
+    specs_fn = lambda: encdec.whisper_specs(cfg)
+
+    def loss(params, batch):
+        return encdec.whisper_loss(cfg, params, batch)
+
+    def forward(params, batch):
+        enc = encdec.whisper_encode(cfg, params, batch["frames"])
+        logits, _ = encdec.whisper_decode_sequence(
+            cfg, params, batch["tokens"], enc)
+        return logits
+
+    def prefill(params, batch):
+        enc = encdec.whisper_encode(cfg, params, batch["frames"])
+        logits, states = encdec.whisper_decode_sequence(
+            cfg, params, batch["tokens"], enc, collect_state=True,
+            cache_len=batch.get("cache_len"))
+        return logits, states
+
+    def decode_step(params, step_batch):
+        return encdec.whisper_decode_step(
+            cfg, params, step_batch["token"], step_batch["states"],
+            step_batch["pos"])
+
+    def state_specs(batch, cache_len):
+        return encdec.whisper_state_specs(
+            cfg, batch, cache_len, cfg.enc_frames)
+
+    return ModelAPI(
+        cfg=cfg, specs=specs_fn,
+        init=lambda key: init_params(specs_fn(), key, _param_dtype(cfg)),
+        abstract=lambda: abstract_params(specs_fn(), _param_dtype(cfg)),
+        loss=loss, forward=forward, prefill=prefill,
+        decode_step=decode_step, state_specs=state_specs)
+
+
+def build(cfg: ArchConfig) -> ModelAPI:
+    if cfg.family == "audio":
+        return _whisper_api(cfg)
+    return _lm_api(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch × shape) cell — ShapeDtypeStruct only, no allocation.
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                batch_override: int | None = None) -> dict:
+    """Abstract inputs for one assigned cell.
+
+    * ``train``   -> the loss-fn batch;
+    * ``prefill`` -> the prefill batch;
+    * ``decode``  -> {"token", "states" (cache of seq_len), ...}.
+    """
+    sds = jax.ShapeDtypeStruct
+    b = batch_override or shape.global_batch
+    n = shape.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    api = build(cfg)
+
+    if cfg.family == "audio":
+        if shape.kind == "train":
+            return {"frames": sds((b, cfg.enc_frames, cfg.d_model), dt),
+                    "tokens": sds((b, n), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"frames": sds((b, cfg.enc_frames, cfg.d_model), dt),
+                    "tokens": sds((b, n), jnp.int32)}
+        return {"token": sds((b, 1), jnp.int32),
+                "pos": sds((), jnp.int32),
+                "states": api.state_specs(b, n)}
+
+    batch: dict[str, Any] = {}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["prefix_embeds"] = sds((b, cfg.vision_tokens, cfg.d_model), dt)
+    if shape.kind == "train":
+        batch["tokens"] = sds((b, n), jnp.int32)
+        batch["loss_mask"] = sds((b, n), jnp.float32)
+        return batch
+    if shape.kind == "prefill":
+        batch["tokens"] = sds((b, n), jnp.int32)
+        return batch
+    return {"token": sds((b, 1), jnp.int32),
+            "states": api.state_specs(b, n)}
+
+
+def input_axes(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Logical-axis tree matching :func:`input_specs` (lists = leaves)."""
+    from repro.models import blocks  # AXES_IS_LEAF convention
+
+    if cfg.family == "audio":
+        if shape.kind in ("train", "prefill"):
+            return {"frames": ["batch", "seq", "act_embed"],
+                    "tokens": ["batch", "seq"]}
+        return {"token": ["batch", None], "pos": [],
+                "states": encdec.whisper_state_axes(cfg)}
+
+    batch: dict[str, Any] = {}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["prefix_embeds"] = ["batch", "seq", "act_embed"]
+    if shape.kind == "train":
+        batch["tokens"] = ["batch", "seq"]
+        batch["loss_mask"] = ["batch", "seq"]
+        return batch
+    if shape.kind == "prefill":
+        batch["tokens"] = ["batch", "seq"]
+        return batch
+    return {"token": ["batch", None], "states": lm.lm_state_axes(cfg)}
+
+
+def input_sample(cfg: ArchConfig, shape: ShapeConfig, key: jax.Array,
+                 batch_override: int | None = None) -> dict:
+    """Concrete random batch matching :func:`input_specs` (smoke/bench)."""
+    specs = input_specs(cfg, shape, batch_override)
+
+    def make(path, s):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if s.dtype == jnp.int32:
+            if "token" in name:
+                return jax.random.randint(key, s.shape, 0, cfg.vocab, s.dtype)
+            return jnp.zeros(s.shape, s.dtype)
+        if "mask" in name:
+            return jnp.ones(s.shape, s.dtype)
+        return jax.random.normal(key, s.shape, jnp.float32).astype(s.dtype) * 0.02
+
+    return jax.tree_util.tree_map_with_path(make, specs)

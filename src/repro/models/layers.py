@@ -1,0 +1,108 @@
+"""Primitive layers: norms, MLPs, embeddings — spec-declared, functional."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.param import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+    if kind == "layernorm":
+        return {
+            "scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros"),
+        }
+    raise ValueError(kind)
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_specs(d: int, f: int) -> dict:
+    return {
+        "wi_gate": ParamSpec((d, f), ("embed", "mlp")),
+        "wi_up": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def apply_swiglu(p: dict, x: jax.Array) -> jax.Array:
+    gate = jnp.einsum("bnd,df->bnf", x, p["wi_gate"].astype(x.dtype))
+    up = jnp.einsum("bnd,df->bnf", x, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("bnf,fd->bnd", h, p["wo"].astype(x.dtype))
+
+
+def gelu_mlp_specs(d: int, f: int) -> dict:
+    return {
+        "wi": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def apply_gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bnd,df->bnf", x, p["wi"].astype(x.dtype))
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return jnp.einsum("bnf,fd->bnd", h, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(vocab: int, d: int) -> dict:
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), init="embed")}
+
+
+def apply_embed(p: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+def unembed_specs(vocab: int, d: int) -> dict:
+    return {"kernel": ParamSpec((d, vocab), ("embed", "vocab"))}
+
+
+def apply_unembed(p: dict | None, embed_p: dict, x: jax.Array,
+                  softcap: float = 0.0) -> jax.Array:
+    """Logits in f32.  ``p is None`` -> tied to the embedding table."""
+    if p is None:
+        logits = jnp.einsum(
+            "bnd,vd->bnv", x.astype(jnp.float32),
+            embed_p["table"].astype(jnp.float32),
+        )
+    else:
+        logits = jnp.einsum(
+            "bnd,dv->bnv", x.astype(jnp.float32),
+            p["kernel"].astype(jnp.float32),
+        )
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits

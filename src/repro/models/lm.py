@@ -1,0 +1,332 @@
+"""Decoder-only language model: scan-over-layers, three eval modes.
+
+The model is a repeating *period* of blocks (``cfg.pattern`` × one layer
+each); full periods are evaluated with ``lax.scan`` over stacked parameters
+(one HLO body regardless of depth — compile-time and HBM-layout win), with
+``jax.checkpoint`` per period when ``cfg.remat == 'block'``.  Remainder layers
+(n_layers % len(pattern)) are unrolled.
+
+Entry points:
+
+* :func:`lm_apply`      — tokens -> logits (+ optional decode states + aux);
+  serves training (``collect_state=False``) and prefill (``True``);
+* :func:`lm_decode_step`— one token through all layers against decode states,
+  O(1) for Aaren/RG-LRU/SSD layers, O(cache) for softmax layers;
+* :func:`lm_loss`       — next-token cross entropy (+ MoE aux losses).
+
+VLM (phi3-vision): ``prefix_embeds`` (stub patch embeddings, already in
+d_model) are prepended to the token embeddings; the loss masks them out.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+from repro.models.layers import (
+    apply_embed,
+    apply_norm,
+    apply_unembed,
+    embed_specs,
+    norm_specs,
+    unembed_specs,
+)
+from repro.models.param import ParamSpec, stack_specs
+from repro.sharding import constrain
+
+ACT_AXES = ("batch", "seq", "act_embed")
+
+
+def _sigs(cfg: ArchConfig) -> list[tuple[str, str]]:
+    """Per-position (mixer, mlp) signatures after the Aaren rewrite."""
+    return list(zip(cfg.effective_pattern(), cfg.mlp_pattern))
+
+
+def lm_specs(cfg: ArchConfig) -> dict:
+    """ParamSpec tree of the full LM."""
+    n_periods, n_rest = cfg.layer_plan()
+    sigs = _sigs(cfg)
+    specs: dict[str, Any] = {
+        "embed": embed_specs(cfg.vocab, cfg.d_model),
+        "final_norm": norm_specs(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = unembed_specs(cfg.vocab, cfg.d_model)
+    if n_periods:
+        specs["periods"] = tuple(
+            stack_specs(blocks.block_specs(sig, cfg), n_periods)
+            for sig in sigs
+        )
+    if n_rest:
+        specs["rest"] = tuple(
+            blocks.block_specs(sigs[i % len(sigs)], cfg) for i in range(n_rest)
+        )
+    return specs
+
+
+def _group_size(n_periods: int) -> int:
+    """Largest divisor of n_periods <= sqrt(n_periods) x ~1.3 (sqrt-remat)."""
+    best = 1
+    for g in range(2, int(np.sqrt(n_periods) * 1.3) + 1):
+        if n_periods % g == 0:
+            best = g
+    return best
+
+
+def _period_fn(cfg, sigs, cache_len, collect_state, want_aux):
+    """One scan step: apply the whole period of blocks to x."""
+
+    def fn(x, period_params):
+        states, auxes = [], []
+        for pos, sig in enumerate(sigs):
+            x = constrain(x, ACT_AXES)
+            x, st, aux = blocks.block_sequence(
+                period_params[pos], x, sig, cfg,
+                cache_len=cache_len, collect_state=collect_state,
+                want_aux=want_aux)
+            states.append(st)
+            auxes.append(aux)
+        aux_sum = jax.tree.map(lambda *a: sum(a), *auxes)
+        return x, (tuple(states) if collect_state else None, aux_sum)
+
+    return fn
+
+
+def lm_apply(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,
+    *,
+    prefix_embeds: jax.Array | None = None,
+    collect_state: bool = False,
+    cache_len: int | None = None,
+    want_aux: bool = True,
+):
+    """tokens (B, N) -> logits (B, N_total, vocab) [f32].
+
+    Returns (logits, states, aux).  ``states`` is None unless
+    ``collect_state``; layout: {"periods": tuple-of-stacked-trees,
+    "rest": tuple-of-trees}.  ``aux`` holds MoE load-balance scalars
+    (averaged over layers).
+    """
+    n_periods, n_rest = cfg.layer_plan()
+    sigs = _sigs(cfg)
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+
+    x = apply_embed(params["embed"], tokens, compute_dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(compute_dtype), x], axis=1)
+    n_total = x.shape[1]
+    if cache_len is None:
+        cache_len = n_total
+    x = constrain(x, ACT_AXES)
+
+    period = _period_fn(cfg, sigs, cache_len, collect_state, want_aux)
+    use_group = cfg.remat == "group" and cfg.scan_layers and n_periods > 3
+    if cfg.remat == "block" or (cfg.remat == "group" and not use_group):
+        period = jax.checkpoint(period, prevent_cse=False)
+
+    states: dict[str, Any] = {}
+    aux_acc = dict(blocks.ZERO_AUX)
+    n_aux_layers = 0
+    if n_periods:
+        if use_group:
+            # sqrt-L two-level remat: outer scan over groups (checkpointed),
+            # inner scan over periods within the group.  Backward stores only
+            # n_groups group inputs + one group's per-period carries:
+            # peak activations ~ (n_groups + g) x per-layer instead of
+            # n_periods x per-layer.  Same recompute FLOPs as 'block'
+            # (every layer re-run exactly once).  See DESIGN.md SPerf.
+            g = _group_size(n_periods)
+            ng = n_periods // g
+            regrouped = jax.tree.map(
+                lambda a: a.reshape((ng, g) + a.shape[1:]),
+                params["periods"])
+
+            def group_fn(xx, gp):
+                return jax.lax.scan(period, xx, gp)
+
+            group_fn = jax.checkpoint(group_fn, prevent_cse=False)
+            x, (per_states, period_aux) = jax.lax.scan(group_fn, x, regrouped)
+            flat2 = lambda a: a.reshape((ng * g,) + a.shape[2:])
+            if collect_state:
+                per_states = jax.tree.map(flat2, per_states)
+            period_aux = jax.tree.map(flat2, period_aux)
+        elif cfg.scan_layers:
+            x, (per_states, period_aux) = jax.lax.scan(
+                period, x, params["periods"])
+        else:  # unrolled (dry-run cost probe; identical math)
+            sts, auxs = [], []
+            for i in range(n_periods):
+                x, (st, aux) = period(
+                    x, jax.tree.map(lambda a: a[i], params["periods"]))
+                sts.append(st)
+                auxs.append(aux)
+            per_states = (jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+                          if collect_state else None)
+            period_aux = jax.tree.map(lambda *xs: jnp.stack(xs), *auxs)
+        if collect_state:
+            states["periods"] = per_states
+        aux_acc = jax.tree.map(
+            lambda acc, a: acc + jnp.sum(a), aux_acc, period_aux)
+        n_aux_layers += n_periods * len(sigs)
+    if n_rest:
+        rest_states = []
+        for i in range(n_rest):
+            sig = sigs[i % len(sigs)]
+            x = constrain(x, ACT_AXES)
+            x, st, aux = blocks.block_sequence(
+                params["rest"][i], x, sig, cfg, cache_len=cache_len,
+                collect_state=collect_state, want_aux=want_aux)
+            rest_states.append(st)
+            aux_acc = jax.tree.map(lambda a, b: a + b, aux_acc, aux)
+        if collect_state:
+            states["rest"] = tuple(rest_states)
+        n_aux_layers += n_rest
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    x = constrain(x, ACT_AXES)
+    logits = apply_unembed(
+        params.get("unembed"), params["embed"], x, cfg.logit_softcap)
+    logits = constrain(logits, ("batch", "seq", "act_vocab"))
+    aux = jax.tree.map(lambda a: a / max(n_aux_layers, 1), aux_acc)
+    return logits, (states if collect_state else None), aux
+
+
+def lm_decode_step(cfg: ArchConfig, params: dict, token_t: jax.Array,
+                   states: dict):
+    """One-token decode.  token_t: (B, 1) int32 -> (logits (B,1,V), states).
+
+    Aaren layers update in O(1); softmax layers in O(cache).  The state
+    layout mirrors :func:`lm_apply(collect_state=True)`.
+    """
+    n_periods, n_rest = cfg.layer_plan()
+    sigs = _sigs(cfg)
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    x = apply_embed(params["embed"], token_t, compute_dtype)
+
+    new_states: dict[str, Any] = {}
+    if n_periods:
+
+        def step_fn(x_t, scanned):
+            period_params, period_states = scanned
+            outs = []
+            for pos, sig in enumerate(sigs):
+                x_t, st = blocks.block_step(
+                    period_params[pos], x_t, period_states[pos], sig, cfg)
+                outs.append(st)
+            return x_t, tuple(outs)
+
+        if cfg.scan_layers:
+            x, per_states = jax.lax.scan(
+                step_fn, x, (params["periods"], states["periods"]))
+        else:
+            sts = []
+            for i in range(n_periods):
+                x, st = step_fn(x, jax.tree.map(
+                    lambda a: a[i], (params["periods"], states["periods"])))
+                sts.append(st)
+            per_states = jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+        new_states["periods"] = per_states
+    if n_rest:
+        rest_states = []
+        for i in range(n_rest):
+            sig = sigs[i % len(sigs)]
+            x, st = blocks.block_step(
+                params["rest"][i], x, states["rest"][i], sig, cfg)
+            rest_states.append(st)
+        new_states["rest"] = tuple(rest_states)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = apply_unembed(
+        params.get("unembed"), params["embed"], x, cfg.logit_softcap)
+    return logits, new_states
+
+
+def lm_state_specs(cfg: ArchConfig, batch: int, cache_len: int):
+    """ShapeDtypeStruct tree of the decode state (dry-run, no allocation)."""
+    n_periods, n_rest = cfg.layer_plan()
+    sigs = _sigs(cfg)
+    out: dict[str, Any] = {}
+
+    def _stack_sds(tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+    if n_periods:
+        out["periods"] = tuple(
+            _stack_sds(blocks.block_state_specs(sig, cfg, batch, cache_len),
+                       n_periods)
+            for sig in sigs)
+    if n_rest:
+        out["rest"] = tuple(
+            blocks.block_state_specs(sigs[i % len(sigs)], cfg, batch,
+                                     cache_len)
+            for i in range(n_rest))
+    return out
+
+
+def lm_state_axes(cfg: ArchConfig):
+    """Logical-axis tree mirroring :func:`lm_state_specs` (None = layer dim)."""
+    n_periods, n_rest = cfg.layer_plan()
+    sigs = _sigs(cfg)
+    out: dict[str, Any] = {}
+
+    def _stack_axes(tree):
+        return jax.tree.map(lambda axes: [None] + list(axes), tree,
+                            is_leaf=blocks.AXES_IS_LEAF)
+
+    if n_periods:
+        out["periods"] = tuple(
+            _stack_axes(blocks.block_state_axes(sig, cfg)) for sig in sigs)
+    if n_rest:
+        out["rest"] = tuple(
+            blocks.block_state_axes(sigs[i % len(sigs)], cfg)
+            for i in range(n_rest))
+    return out
+
+
+def lm_state_init(cfg: ArchConfig, batch: int, cache_len: int):
+    """Concrete zero-initialised decode state (tests + serving)."""
+    n_periods, n_rest = cfg.layer_plan()
+    sigs = _sigs(cfg)
+    out: dict[str, Any] = {}
+    if n_periods:
+        out["periods"] = tuple(
+            jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape).copy(),
+                blocks.block_state_init(sig, cfg, batch, cache_len))
+            for sig in sigs)
+    if n_rest:
+        out["rest"] = tuple(
+            blocks.block_state_init(sigs[i % len(sigs)], cfg, batch, cache_len)
+            for i in range(n_rest))
+    return out
+
+
+def lm_loss(cfg: ArchConfig, params: dict, batch: dict,
+            *, aux_weight: float = 0.01):
+    """Next-token CE loss.  batch: {"tokens": (B,N), "loss_mask": (B,N)?,
+    "prefix_embeds": (B,T,D)?}.  Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    logits, _, aux = lm_apply(
+        cfg, params, tokens, prefix_embeds=prefix, collect_state=False)
+    if prefix is not None:  # VLM: score text positions only
+        logits = logits[:, prefix.shape[1]:]
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(nll) if mask is None else mask[:, 1:].astype(nll.dtype)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce + aux_weight * aux["load_balance_loss"]
+    metrics = {"loss": loss, "ce": ce, **aux}
+    return loss, metrics

@@ -1,0 +1,147 @@
+"""Mixture-of-Experts MLP: top-k router + GShard-style grouped dispatch.
+
+Sharding design (what makes this compile cleanly on the production mesh):
+
+* **Grouping** — each batch row dispatches *independently* with its own
+  capacity ``C = ceil(N · k / E · capacity_factor)`` (GShard's groups).  All
+  routing bookkeeping (top-k, rank-in-expert cumsum, overflow drop) is then
+  local to the ``batch`` shard — no global cumsum across devices.
+* **Batched scatter/gather** — tokens enter the ``(B, E·(C+1), d)`` expert
+  buffer via a scatter whose leading dim is the sharded batch axis (a
+  "parallel" scatter dim GSPMD partitions for free); overflow tokens land in
+  the per-expert trash slot (index C) and are dropped — the residual path
+  carries them (Switch semantics).
+* **Expert parallelism** — expert weights carry the ``experts`` logical axis
+  (→ ``model`` mesh axis); the ``(B, E, C, d) × (E, d, f)`` einsum under
+  batch-sharded activations and expert-sharded weights lowers to the
+  canonical all-to-all + local-GEMM pattern.
+
+FLOPs stay at ``capacity_factor ×`` the active-expert ideal — what the
+roofline accounting expects.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.param import ParamSpec
+from repro.sharding import constrain
+
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    return {
+        "router": ParamSpec((d, e), ("embed", "experts_router")),
+        "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "moe_mlp")),
+        "wi_up": ParamSpec((e, d, f), ("experts", "embed", "moe_mlp")),
+        "wo": ParamSpec((e, f, d), ("experts", "moe_mlp", "embed")),
+    }
+
+
+def expert_capacity(n_tokens_per_group: int, cfg: ArchConfig) -> int:
+    ideal = n_tokens_per_group * cfg.n_experts_per_tok / cfg.n_experts
+    return max(int(np.ceil(ideal * cfg.capacity_factor)), 1)
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ArchConfig, *,
+              return_aux: bool = False, decode: bool = False):
+    """x: (B, N, D) -> (B, N, D) [+ aux dict with load-balancing loss].
+
+    ``decode=True`` switches the expert-einsum layout to *weight-stationary*
+    (Pope et al., 2023): the tiny single-token activation buffers are
+    replicated across the batch shards and re-sharded onto the experts'
+    (model, data) weight layout, so NO expert weights move.  Without it,
+    GSPMD all-gathers the data-sharded dim of every expert matrix each
+    decode step (measured 29.7 GB/chip/step on dbrx decode_32k — see
+    EXPERIMENTS.md §Perf B).
+    """
+    b, n, d = x.shape
+    k = cfg.n_experts_per_tok
+    e = cfg.n_experts
+    cap = expert_capacity(n, cfg)
+
+    logits = jnp.einsum("bnd,de->bne", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (b, n, k)
+    # dbrx/qwen renormalise the selected gates
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- rank of each routed token within (row, expert) --------------------
+    # Sort-based ranking (MegaBlocks-style): O(nk log nk) work on (b, nk)
+    # int32 tensors.  The naive one-hot cumsum materialises (b, nk, E) int32
+    # — ~17 GB/layer/microbatch at qwen3's E=128 — and dominated the memory
+    # roofline term (EXPERIMENTS.md §Perf C).
+    flat_ids = expert_ids.reshape(b, n * k)                     # (b, nk)
+    nk = n * k
+    order = jnp.argsort(flat_ids, axis=1, stable=True)          # (b, nk)
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=1)
+    idx = jnp.arange(nk, dtype=jnp.int32)[None, :]
+    is_start = jnp.concatenate(
+        [jnp.ones((b, 1), bool), sorted_ids[:, 1:] != sorted_ids[:, :-1]],
+        axis=1)
+    seg_start = jax.lax.cummax(jnp.where(is_start, idx, 0), axis=1)
+    rank_sorted = idx - seg_start                               # (b, nk)
+    pos = jnp.zeros((b, nk), jnp.int32)
+    pos = jax.vmap(lambda pp, oo, rr: pp.at[oo].set(rr))(
+        pos, order, rank_sorted)
+    keep = pos < cap
+    # destination row in the (E, C+1) buffer; C is the trash slot
+    dest = flat_ids * (cap + 1) + jnp.where(keep, pos, cap)     # (b, nk)
+
+    # --- batched scatter into per-row expert buffers ------------------------
+    xrep = jnp.repeat(x, k, axis=1)                             # (b, nk, d)
+    if decode:
+        # weight-stationary: replicate the token-sized tensors (a few MB)
+        # BEFORE the scatter, so the batch-shard all-gather moves
+        # (b, nk, d) instead of the (b, E·C, d) buffer (§Perf B2).
+        xrep = constrain(xrep, (None, None, "act_data"))
+        dest = constrain(dest, (None, None))
+    buf = jnp.zeros((b, e * (cap + 1), d), x.dtype)
+    buf = jax.vmap(lambda bb, dd, xx: bb.at[dd].set(xx))(buf, dest, xrep)
+    buf = buf.reshape(b, e, cap + 1, d)[:, :, :cap, :]          # drop trash
+    if decode:
+        buf = constrain(buf, (None, "act_experts", None, "act_data"))
+    else:
+        buf = constrain(buf, ("batch", "act_experts", None, None))
+
+    # --- expert MLPs (SwiGLU), expert axis sharded over `model` ------------
+    gate = jnp.einsum("becd,edf->becf", buf, p["wi_gate"].astype(buf.dtype))
+    up = jnp.einsum("becd,edf->becf", buf, p["wi_up"].astype(buf.dtype))
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(buf.dtype) * up
+    out = jnp.einsum("becf,efd->becd", h, p["wo"].astype(buf.dtype))
+    out = constrain(out, (None if decode else "batch",
+                          "act_experts", None, None))
+
+    # --- gather back + weighted combine -------------------------------------
+    pad = jnp.zeros((b, e, 1, d), out.dtype)                    # trash slot
+    out_flat = jnp.concatenate([out, pad], axis=2).reshape(
+        b, e * (cap + 1), d)
+    # Gather-back layout depends on the regime (§Perf B2/C1):
+    # * train/prefill (tokens >> buffer): replicate the expert axis first —
+    #   an expert-sharded gather operand lowers to masked-gather+all-reduce
+    #   of the full (b, nk, d) result (3.3 GB/chip/layer/ubatch measured on
+    #   qwen3 train); the explicit all-gather moves only the buffer.
+    # * decode (tokens tiny): the opposite — keep the buffer expert-sharded
+    #   and let the masked-gather+all-reduce move the few-MB token tensor.
+    if not decode:
+        out_flat = constrain(out_flat, ("batch", None, None))
+    yrep = jax.vmap(lambda oo, dd: oo[dd])(out_flat, dest)      # (b, nk, d)
+    w = (gate_vals.reshape(b, n * k, 1).astype(out.dtype)
+         * keep[..., None].astype(out.dtype))
+    y = jnp.sum((yrep * w).reshape(b, n, k, d), axis=2)
+
+    if not return_aux:
+        return y
+    # Switch-style load-balancing auxiliary loss.  Expert densities via
+    # scatter-add (a (b, E) tensor) — not a (b, n, k, E) one-hot.
+    counts = jax.vmap(
+        lambda ids: jnp.zeros((e,), jnp.float32).at[ids].add(1.0))(flat_ids)
+    density = jnp.sum(counts, axis=0) / (b * n * k)
+    router_mean = jnp.mean(probs, axis=(0, 1))
+    aux = {"load_balance_loss": e * jnp.sum(density * router_mean),
+           "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y, aux

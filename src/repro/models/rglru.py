@@ -1,0 +1,141 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The recurrence  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)  is a
+first-order linear RNN — evaluated in parallel with the *same*
+``jax.lax.associative_scan`` machinery as the paper's attention scan (operator
+on pairs: (a₂a₁, a₂b₁ + b₂)), and in O(1) per token at decode.  This is the
+structural kinship DESIGN.md notes between Aaren and modern linear-recurrent
+blocks.
+
+Block layout (Griffin):
+    y = W_out( GeLU(W_gate x) ⊙ RGLRU( CausalConv1D_4(W_x x) ) )
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.param import ParamSpec
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+_BLOCK = 256  # block-diagonal gate width (official RecurrentGemma layout)
+
+
+def rglru_specs(cfg: ArchConfig) -> dict:
+    d, r = cfg.d_model, cfg.d_rnn
+    w = cfg.d_conv  # temporal conv width (4)
+    nb = max(r // _BLOCK, 1)
+    bw = r // nb
+    return {
+        "wx": ParamSpec((d, r), ("embed", "rnn")),
+        "wgate": ParamSpec((d, r), ("embed", "rnn")),
+        "conv": ParamSpec((w, r), (None, "rnn"), scale=1.0 / np.sqrt(w)),
+        "conv_bias": ParamSpec((r,), ("rnn",), init="zeros"),
+        # block-diagonal recurrence/input gates: (n_blocks, bw, bw)
+        "w_rgate": ParamSpec((nb, bw, bw), ("rnn_blocks", None, None), scale=0.02),
+        "b_rgate": ParamSpec((r,), ("rnn",), init="zeros"),
+        "w_igate": ParamSpec((nb, bw, bw), ("rnn_blocks", None, None), scale=0.02),
+        "b_igate": ParamSpec((r,), ("rnn",), init="zeros"),
+        "lam": ParamSpec((r,), ("rnn",), init="normal", scale=0.5),
+        "wo": ParamSpec((r, d), ("rnn", "embed")),
+    }
+
+
+def _causal_conv_sequence(p, u):
+    """Depthwise causal conv over (B, N, R) with width-w kernel."""
+    w = p["conv"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + u.shape[1], :] * p["conv"][i].astype(u.dtype)
+        for i in range(w)
+    )
+    return out + p["conv_bias"].astype(u.dtype)
+
+
+def _block_diag_matmul(u, w):
+    """u: (..., R) x block-diag w: (nb, bw, bw) -> (..., R)."""
+    nb, bw, _ = w.shape
+    ub = u.reshape(u.shape[:-1] + (nb, bw))
+    out = jnp.einsum("...nb,nbc->...nc", ub, w)
+    return out.reshape(u.shape)
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag_matmul(uf, p["w_rgate"].astype(jnp.float32))
+                       + p["b_rgate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag_matmul(uf, p["w_igate"].astype(jnp.float32))
+                       + p["b_igate"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def _linear_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t over axis 1 via associative scan (f32)."""
+
+    def op(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    if h0 is not None:
+        h = h + a_s * h0[:, None, :]
+    return h
+
+
+def rglru_state_init(cfg: ArchConfig, batch: int):
+    r, w = cfg.d_rnn, cfg.d_conv
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, w - 1, r), jnp.dtype(cfg.compute_dtype)),
+    }
+
+
+def rglru_state_specs(cfg: ArchConfig, batch: int):
+    r, w = cfg.d_rnn, cfg.d_conv
+    sds = jax.ShapeDtypeStruct
+    return {"h": sds((batch, r), jnp.float32),
+            "conv": sds((batch, w - 1, r), jnp.dtype(cfg.compute_dtype))}
+
+
+def rglru_sequence(p: dict, x: jax.Array, cfg: ArchConfig):
+    """(B, N, D) -> (B, N, D), plus decode state (h, conv tail)."""
+    u0 = jnp.einsum("bnd,dr->bnr", x, p["wx"].astype(x.dtype))
+    u = _causal_conv_sequence(p, u0)
+    a, b = _gates(p, u)
+    h = _linear_scan(a, b)
+    gate = jax.nn.gelu(
+        jnp.einsum("bnd,dr->bnr", x, p["wgate"].astype(x.dtype))
+        .astype(jnp.float32), approximate=True)
+    y = (h * gate).astype(x.dtype)
+    y = jnp.einsum("bnr,rd->bnd", y, p["wo"].astype(x.dtype))
+    w = cfg.d_conv
+    state = {"h": h[:, -1, :],
+             "conv": u0[:, -(w - 1):, :].astype(jnp.dtype(cfg.compute_dtype))}
+    return y, state
+
+
+def rglru_step(p: dict, x_t: jax.Array, state: dict, cfg: ArchConfig):
+    """One-token O(1) update.  x_t: (B, 1, D)."""
+    u0 = jnp.einsum("bnd,dr->bnr", x_t, p["wx"].astype(x_t.dtype))  # (B,1,R)
+    window = jnp.concatenate([state["conv"].astype(u0.dtype), u0], axis=1)
+    w = p["conv"].shape[0]
+    u = sum(window[:, i, :] * p["conv"][i].astype(u0.dtype) for i in range(w))
+    u = (u + p["conv_bias"].astype(u0.dtype))[:, None, :]
+    a, b = _gates(p, u)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    gate = jax.nn.gelu(
+        jnp.einsum("bnd,dr->bnr", x_t, p["wgate"].astype(x_t.dtype))
+        .astype(jnp.float32), approximate=True)
+    y = (h[:, None, :] * gate).astype(x_t.dtype)
+    y = jnp.einsum("bnr,rd->bnd", y, p["wo"].astype(x_t.dtype))
+    new_state = {"h": h, "conv": window[:, 1:, :].astype(jnp.dtype(cfg.compute_dtype))}
+    return y, new_state

@@ -1,0 +1,217 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan implementation.
+
+Attention-free arch in the assigned pool; the paper's Aaren transform is
+inapplicable (nothing to replace — see DESIGN.md §Arch-applicability), but the
+computational skeleton is the same family: a chunked linear recurrence with
+carried state, evaluated intra-chunk in parallel and inter-chunk by scan.
+
+Recurrence per head (state S ∈ R^{P×N}, head dim P, state dim N):
+
+    a_t = exp(Δ_t · A)                       (A < 0 scalar per head)
+    S_t = a_t · S_{t-1} + Δ_t · x_t ⊗ B_t
+    y_t = S_t · C_t + D · x_t
+
+Chunked evaluation (chunk Q): intra-chunk "attention" matrix
+``M_{ts} = C_t · B_s · Δ_s · exp(cum_a_t - cum_a_s)`` (causal), plus an
+inter-chunk term carried via the per-chunk state — only n_chunks states ever
+materialise (never L states), which is what makes train_4k/prefill feasible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.param import ParamSpec
+
+_CHUNK = 256
+
+
+def ssd_dims(cfg: ArchConfig):
+    d_in = cfg.d_inner
+    n_heads = cfg.ssm_heads or (d_in // 64)
+    p = d_in // n_heads
+    n = cfg.ssm_state
+    return d_in, n_heads, p, n
+
+
+def ssd_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in, h, p, n = ssd_dims(cfg)
+    conv_ch = d_in + 2 * n  # conv runs over [x, B, C]
+    w = cfg.d_conv
+    return {
+        # packed in-projection: [z (d_in), x (d_in), B (n), C (n), dt (h)]
+        "w_in": ParamSpec((d, 2 * d_in + 2 * n + h), ("embed", "ssm_in")),
+        "conv": ParamSpec((w, conv_ch), (None, "ssm_conv"), scale=1.0 / np.sqrt(w)),
+        "conv_bias": ParamSpec((conv_ch,), ("ssm_conv",), init="zeros"),
+        "a_log": ParamSpec((h,), ("ssm_heads",), init="normal", scale=0.5),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "norm_scale": ParamSpec((d_in,), ("ssm_inner",), init="ones"),
+        "w_out": ParamSpec((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, h, p, n = ssd_dims(cfg)
+    z, x, b, c, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, x, b, c, dt
+
+
+def _conv_sequence(p, u):
+    w = p["conv"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + u.shape[1], :] * p["conv"][i].astype(u.dtype)
+              for i in range(w))
+    return jax.nn.silu((out + p["conv_bias"].astype(u.dtype))
+                       .astype(jnp.float32))
+
+
+def _gated_rmsnorm(p, y, z, eps=1e-6):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return yf * jax.lax.rsqrt(var + eps) * p["norm_scale"].astype(jnp.float32)
+
+
+def ssd_state_init(cfg: ArchConfig, batch: int):
+    d_in, h, p, n = ssd_dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "s": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_ch),
+                          jnp.dtype(cfg.compute_dtype)),
+    }
+
+
+def ssd_state_specs(cfg: ArchConfig, batch: int):
+    d_in, h, p, n = ssd_dims(cfg)
+    conv_ch = d_in + 2 * n
+    sds = jax.ShapeDtypeStruct
+    return {"s": sds((batch, h, p, n), jnp.float32),
+            "conv": sds((batch, cfg.d_conv - 1, conv_ch),
+                        jnp.dtype(cfg.compute_dtype))}
+
+
+def _ssd_chunked(xh, bh, ch, dt, a_log, s0=None, chunk=_CHUNK):
+    """Chunked SSD core.
+
+    xh: (B, L, H, P) f32, bh/ch: (B, L, N) f32, dt: (B, L, H) f32 (post-
+    softplus), a_log: (H,) — decay is exp(-dt*exp(a_log)) < 1.
+    Returns y: (B, L, H, P) and final state (B, H, P, N).
+    """
+    bsz, l, h, p = xh.shape
+    n = bh.shape[-1]
+    q = min(chunk, l)
+    if l % q:
+        raise ValueError(f"L={l} not divisible by chunk={q}")
+    nc = l // q
+
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,) negative
+    la = dt * a  # (B, L, H) log decay per step
+    lax_ = la.reshape(bsz, nc, q, h)
+    ca = jnp.cumsum(lax_, axis=2)  # within-chunk cumulative log decay
+
+    xc = xh.reshape(bsz, nc, q, h, p)
+    bc = bh.reshape(bsz, nc, q, n)
+    cc = ch.reshape(bsz, nc, q, n)
+    dtc = dt.reshape(bsz, nc, q, h)
+
+    # ---- intra-chunk (quadratic within the chunk, like a masked attention)
+    # M[b,c,h,t,s] = (C_t . B_s) * dt_s * exp(ca_t - ca_s), s <= t
+    cb = jnp.einsum("bctn,bcsn->bcts", cc, bc)  # (B,nc,Q,Q)
+    decay = ca[:, :, :, None, :] - ca[:, :, None, :, :]  # (B,nc,Q,Q,H) t,s
+    decay = jnp.transpose(decay, (0, 1, 4, 2, 3))  # (B,nc,H,Q,Q) wrong order?
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    m = cb[:, :, None] * jnp.exp(jnp.where(mask, decay, -jnp.inf))
+    y_intra = jnp.einsum("bchts,bcsh,bcshp->bcthp", m,
+                         dtc, xc)
+
+    # ---- chunk states: S_c = sum_s exp(ca_end - ca_s) dt_s x_s B_s^T
+    decay_to_end = jnp.exp(ca[:, :, -1:, :] - ca)  # (B,nc,Q,H)
+    sc = jnp.einsum("bcsh,bcsh,bcshp,bcsn->bchpn", decay_to_end, dtc, xc, bc)
+
+    # ---- inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(ca[:, :, -1, :])  # (B, nc, H) total decay per chunk
+
+    def op(x, y):
+        a1, s1 = x
+        a2, s2 = y
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_cum, s_cum = jax.lax.associative_scan(
+        op, (chunk_decay, sc), axis=1)
+    # state entering chunk c is s_cum[c-1] (plus decayed s0)
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_cum[:, :1]), s_cum[:, :-1]], axis=1)
+    if s0 is not None:
+        a_prev = jnp.concatenate(
+            [jnp.ones_like(a_cum[:, :1]), a_cum[:, :-1]], axis=1)
+        s_prev = s_prev + a_prev[..., None, None] * s0[:, None]
+
+    # ---- inter-chunk contribution: y_t += C_t . (decay_to_t * S_prev)
+    decay_from_start = jnp.exp(ca)  # (B,nc,Q,H)
+    y_inter = jnp.einsum("bctn,bchpn,bcth->bcthp", cc, s_prev,
+                         decay_from_start)
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    s_final = s_cum[:, -1]
+    if s0 is not None:
+        s_final = s_final + a_cum[:, -1][..., None, None] * s0
+    return y, s_final
+
+
+def ssd_sequence(pp: dict, x: jax.Array, cfg: ArchConfig):
+    """(B, L, D) -> (B, L, D) + decode state."""
+    d_in, h, p, n = ssd_dims(cfg)
+    proj = jnp.einsum("bld,de->ble", x, pp["w_in"].astype(x.dtype))
+    z, xs, b, c, dt = _split_proj(cfg, proj)
+    u0 = jnp.concatenate([xs, b, c], axis=-1)
+    u = _conv_sequence(pp, u0)  # f32 (B, L, d_in + 2n)
+    xs, b, c = jnp.split(u, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + pp["dt_bias"].astype(jnp.float32))
+    xh = xs.reshape(x.shape[0], x.shape[1], h, p)
+    y, s_final = _ssd_chunked(xh, b, c, dt, pp["a_log"])
+    y = y + pp["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(x.shape[0], x.shape[1], d_in)
+    y = _gated_rmsnorm(pp, y, z)
+    out = jnp.einsum("bld,de->ble", y.astype(x.dtype),
+                     pp["w_out"].astype(x.dtype))
+    w = cfg.d_conv
+    state = {"s": s_final,
+             "conv": u0[:, -(w - 1):, :].astype(jnp.dtype(cfg.compute_dtype))}
+    return out, state
+
+
+def ssd_step(pp: dict, x_t: jax.Array, state: dict, cfg: ArchConfig):
+    """One-token O(1) update.  x_t: (B, 1, D)."""
+    d_in, h, p, n = ssd_dims(cfg)
+    proj = jnp.einsum("bld,de->ble", x_t, pp["w_in"].astype(x_t.dtype))
+    z, xs, b, c, dt = _split_proj(cfg, proj)
+    u0 = jnp.concatenate([xs, b, c], axis=-1)  # (B,1,conv_ch)
+    window = jnp.concatenate([state["conv"].astype(u0.dtype), u0], axis=1)
+    wlen = pp["conv"].shape[0]
+    u = sum(window[:, i, :] * pp["conv"][i].astype(u0.dtype)
+            for i in range(wlen))
+    u = jax.nn.silu((u + pp["conv_bias"].astype(u0.dtype))
+                    .astype(jnp.float32))
+    xs, b, c = jnp.split(u, [d_in, d_in + n], axis=-1)  # (B, ...)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + pp["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = jnp.exp(dt * -jnp.exp(pp["a_log"].astype(jnp.float32)))  # (B,H)
+    xh = xs.reshape(-1, h, p)
+    s_new = (state["s"] * a[..., None, None]
+             + jnp.einsum("bh,bhp,bn->bhpn", dt, xh, b))
+    y = jnp.einsum("bhpn,bn->bhp", s_new, c)
+    y = y + pp["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, 1, d_in)
+    y = _gated_rmsnorm(pp, y, z)
+    out = jnp.einsum("bld,de->ble", y.astype(x_t.dtype),
+                     pp["w_out"].astype(x_t.dtype))
+    new_state = {"s": s_new,
+                 "conv": window[:, 1:, :].astype(jnp.dtype(cfg.compute_dtype))}
+    return out, new_state

@@ -1,0 +1,8 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from repro.roofline.analysis import (  # noqa: F401
+    V5E,
+    collective_bytes,
+    model_flops,
+    roofline_report,
+)

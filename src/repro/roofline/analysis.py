@@ -1,0 +1,194 @@
+"""Three-term roofline from ``compiled.cost_analysis()`` + HLO text.
+
+    compute    = HLO_FLOPs            / peak_FLOP/s           [per chip]
+    memory     = HLO_bytes_accessed   / HBM_bw                [per chip]
+    collective = wire_bytes(HLO text) / link_bw               [per chip]
+
+After GSPMD partitioning the compiled executable is the *per-device* program,
+so ``cost_analysis`` flops/bytes are already per chip — no ÷chips needed (the
+dry-run asserts this by checking flops scale ~1/chips vs a single-device
+lowering).
+
+``collective_bytes`` parses the partitioned HLO and sums wire traffic per
+collective family with ring-algorithm cost factors over the actual replica
+group size ``k``:
+
+    all-reduce       2·(k-1)/k · bytes(result)
+    all-gather         (k-1)/k · bytes(result)
+    reduce-scatter     (k-1)/k · bytes(operand) ≈ (k-1)·bytes(result)
+    all-to-all         (k-1)/k · bytes(result)
+    collective-permute          bytes(result)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+V5E = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # B/s per chip
+    "ici_bw": 50e9,         # B/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  %all-reduce.5 = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %x), ...
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0  # tuple/token results of -start ops etc.
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Wire bytes per collective family from (partitioned) HLO text."""
+    out: dict[str, float] = {
+        "all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+        "all-to-all": 0.0, "collective-permute": 0.0, "n_ops": 0,
+    }
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        nbytes = _shape_bytes(dtype, dims)
+        if nbytes == 0:
+            continue
+        k = _group_size(line)
+        frac = (k - 1) / k if k > 1 else 0.0
+        if kind == "all-reduce":
+            wire = 2.0 * frac * nbytes
+        elif kind == "all-gather":
+            wire = frac * nbytes              # result is the gathered tensor
+        elif kind == "reduce-scatter":
+            wire = frac * nbytes * k          # operand = k × result
+        elif kind == "all-to-all":
+            wire = frac * nbytes
+        else:  # collective-permute
+            wire = float(nbytes)
+        out[kind] += wire
+        out["n_ops"] += 1
+    return out
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def model_flops(n_params: int, n_tokens: int, kind: str,
+                n_active_params: int | None = None) -> float:
+    """6·N·D (train) / 2·N·D (inference) with MoE active-param correction."""
+    p = n_active_params if n_active_params is not None else n_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * p * n_tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float           # per chip
+    hlo_bytes: float           # per chip
+    wire_bytes: float          # per chip
+    collectives: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float
+    bytes_per_device: int | None = None
+    # Structural lower bound on HBM traffic (weights + persistent state);
+    # real TPU traffic lands between this and the raw HLO bytes, because
+    # XLA:CPU's bytes-accessed counts unfused elementwise chains that TPU
+    # fusion eliminates.  See EXPERIMENTS.md §Roofline methodology.
+    memory_floor_s: float | None = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): remat/redundancy waste meter."""
+        total_hlo = self.hlo_flops * self.n_chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilisation at the roofline bound (upper estimate)."""
+        ideal = self.model_flops_total / (
+            self.n_chips * V5E["peak_flops"])
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.n_chips,
+            "hlo_flops_per_chip": self.hlo_flops,
+            "hlo_bytes_per_chip": self.hlo_bytes,
+            "wire_bytes_per_chip": self.wire_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops_total,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu_bound": self.mfu,
+            "bytes_per_device": self.bytes_per_device,
+            "memory_floor_s": self.memory_floor_s,
+        }
+
+
+def roofline_report(
+    *, arch: str, shape: str, mesh: str, n_chips: int,
+    cost: dict, hlo_text: str, model_flops_total: float,
+    bytes_per_device: int | None = None, hw: dict = V5E,
+) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    wire = sum(v for k, v in coll.items() if k != "n_ops")
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, n_chips=n_chips,
+        hlo_flops=flops, hlo_bytes=bytes_accessed, wire_bytes=wire,
+        collectives=coll,
+        compute_s=flops / hw["peak_flops"],
+        memory_s=bytes_accessed / hw["hbm_bw"],
+        collective_s=wire / hw["ici_bw"],
+        model_flops_total=model_flops_total,
+        bytes_per_device=bytes_per_device,
+    )

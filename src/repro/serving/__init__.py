@@ -1,0 +1,8 @@
+"""Serving: constant-memory streaming engine + batched generation."""
+
+from repro.serving.engine import (  # noqa: F401
+    StreamingEngine,
+    decode_state_bytes,
+    generate,
+)
+from repro.serving.sampler import greedy_sampler, temperature_sampler  # noqa: F401

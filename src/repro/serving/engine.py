@@ -1,0 +1,172 @@
+"""Inference engines.
+
+Two serving modes, matching the paper's efficiency analysis (§4.5):
+
+* :func:`generate` — wave-based batched generation for *any* arch: prefill
+  the whole batch, then jit'd one-token decode steps.  KV-cache archs carry
+  O(B·N) cache; Aaren archs carry O(B) state.
+* :class:`StreamingEngine` — **continuous batching** for Aaren-mode models.
+  Because the Aaren decode state is a position-free constant-size tuple
+  ``(m, u, w)`` per layer/head (no KV cache, no RoPE phase), a finished
+  sequence's slot can be handed to a queued request by a pure
+  ``tree.at[slot].set(fresh_state)`` — no cache reshaping, no position
+  bookkeeping.  This is the systems-level payoff of the paper's O(1)-state
+  formulation, and the engine exercises it literally.
+
+``decode_state_bytes`` measures the per-request inference state — the
+quantity plotted in the paper's Figure 5 (left).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.factory import ModelAPI
+from repro.serving.sampler import greedy_sampler
+
+
+def decode_state_bytes(states: Any) -> int:
+    """Total bytes of a decode-state pytree (Fig. 5-left measurement)."""
+    return int(sum(
+        np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(states)))
+
+
+def generate(
+    api: ModelAPI,
+    params: Any,
+    prompts: jax.Array,                 # (B, P) int32
+    max_new_tokens: int,
+    *,
+    sampler: Callable = greedy_sampler,
+    key: jax.Array | None = None,
+    cache_len: int | None = None,
+):
+    """Wave-based generation.  Returns (tokens (B, max_new), final states)."""
+    b, p = prompts.shape
+    if cache_len is None:
+        cache_len = p + max_new_tokens
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    # cache_len is a static model property — close over it, don't trace it.
+    prefill = jax.jit(lambda pr, toks: api.prefill(
+        pr, {"tokens": toks, "cache_len": cache_len}))
+    logits, states = prefill(params, prompts)
+    tok = sampler(logits[:, -1:], key)
+
+    decode = jax.jit(lambda pr, sb: api.decode_step(pr, sb))
+    out = [tok]
+    for i in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        logits, states = decode(params, {"token": tok, "states": states})
+        tok = sampler(logits, sub)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1), states
+
+
+def _batch_axis(single: tuple, batched: tuple, n_slots: int) -> int:
+    """Axis where a single-request leaf (B=1) sits in the batched tree."""
+    for i, (a, b) in enumerate(zip(single, batched)):
+        if a == 1 and b == n_slots:
+            return i
+    raise ValueError(f"no batch axis: {single} vs {batched}")
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: int
+    tokens: list
+    remaining: int
+
+
+class StreamingEngine:
+    """Continuous batching over ``n_slots`` persistent decode slots.
+
+    Aaren-mode only (position-free O(1) state — see module docstring).
+    Requests are queued with :meth:`submit`; :meth:`run` decodes all slots in
+    lock-step, refilling finished slots from the queue mid-flight.
+    """
+
+    def __init__(self, api: ModelAPI, params: Any, *, n_slots: int = 4,
+                 sampler: Callable = greedy_sampler,
+                 key: jax.Array | None = None):
+        pattern = api.cfg.effective_pattern()
+        if any(m in ("attn", "attn_local") for m in pattern):
+            raise ValueError(
+                "StreamingEngine requires position-free decode state "
+                "(aaren/rglru/ssd mixers only); use generate() for "
+                "KV-cache models.")
+        self.api = api
+        self.params = params
+        self.n_slots = n_slots
+        self.sampler = sampler
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        # cache_len is irrelevant for position-free states; use 1.
+        from repro.models.lm import lm_state_init
+
+        self.states = lm_state_init(api.cfg, n_slots, 1)
+        self.tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self.active: list[_Slot | None] = [None] * n_slots
+        self.queue: list[tuple[int, jax.Array, int]] = []
+        self.finished: dict[int, list[int]] = {}
+        self._next_id = 0
+        self._decode = jax.jit(
+            lambda pr, tok, st: api.decode_step(
+                pr, {"token": tok, "states": st}))
+        self._prefill = jax.jit(
+            lambda pr, toks: api.prefill(pr, {"tokens": toks,
+                                              "cache_len": 1}))
+
+    # ------------------------------------------------------------------ API
+    def submit(self, prompt: jax.Array, max_new_tokens: int) -> int:
+        """Queue a request.  prompt: (P,) int32.  Returns request id."""
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, jnp.asarray(prompt)[None], max_new_tokens))
+        return rid
+
+    def run(self) -> dict[int, list[int]]:
+        """Decode until queue + slots drain.  Returns {request_id: tokens}."""
+        self._fill_slots()
+        while any(s is not None for s in self.active):
+            self.key, sub = jax.random.split(self.key)
+            logits, self.states = self._decode(
+                self.params, self.tok, self.states)
+            self.tok = self.sampler(logits, sub)
+            for i, slot in enumerate(self.active):
+                if slot is None:
+                    continue
+                slot.tokens.append(int(self.tok[i, 0]))
+                slot.remaining -= 1
+                if slot.remaining <= 0:
+                    self.finished[slot.request_id] = slot.tokens
+                    self.active[i] = None
+            self._fill_slots()
+        return self.finished
+
+    # ------------------------------------------------------------ internals
+    def _fill_slots(self):
+        for i in range(self.n_slots):
+            if self.active[i] is not None or not self.queue:
+                continue
+            rid, prompt, max_new = self.queue.pop(0)
+            logits, fresh = self._prefill(self.params, prompt)
+            self._insert_slot(i, fresh)
+            first = self.sampler(logits[:, -1:], self.key)
+            self.tok = self.tok.at[i].set(first[0])
+            self.active[i] = _Slot(rid, [int(first[0, 0])], max_new - 1)
+
+    def _insert_slot(self, slot: int, fresh_states: Any):
+        """states[..., slot, ...] <- fresh (B=1) state, per leaf."""
+
+        def insert(batched, single):
+            ax = _batch_axis(single.shape, batched.shape, self.n_slots)
+            idx = tuple([slice(None)] * ax + [slot])
+            return batched.at[idx].set(
+                jnp.squeeze(single, axis=ax).astype(batched.dtype))
+
+        self.states = jax.tree.map(insert, self.states, fresh_states)

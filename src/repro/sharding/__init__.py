@@ -1,0 +1,12 @@
+"""Logical-axis sharding: one rule table drives params + activations."""
+
+from repro.sharding.rules import (  # noqa: F401
+    DEFAULT_RULES,
+    MULTIPOD_RULES,
+    ShardingRules,
+    constrain,
+    current_rules,
+    param_shardings,
+    spec_for_axes,
+    use_rules,
+)

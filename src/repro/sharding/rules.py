@@ -1,0 +1,147 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, minimal JAX).
+
+Every parameter/activation dimension carries a *logical* axis name (declared
+in ParamSpec / at constraint sites).  A rule table maps each logical name to a
+priority list of mesh-axis candidates; :func:`spec_for_axes` picks, per
+tensor, the first candidate that (a) divides the dimension and (b) doesn't
+reuse a mesh axis already consumed by another dimension of the same tensor.
+Dimensions with no viable candidate stay replicated — the *divisibility
+fallback* that lets one rule table serve GQA kv_heads=1..32, expert counts
+16/128, and vocab sizes from 32k to 262k without per-arch special cases.
+
+Mesh axes (launch/mesh.py):
+  ``pod``    — inter-pod data parallelism (DCN-linked, slowest);
+  ``data``   — intra-pod FSDP: batch + parameter/optimizer-state sharding;
+  ``model``  — tensor/expert parallelism (fastest links).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.param import ParamSpec, is_spec
+
+# Candidate lists: each entry is a tuple of mesh axes to use *jointly*.
+# First fit (divisibility + availability) wins; no fit -> replicated.
+DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    # --- parameters -------------------------------------------------------
+    "embed": ((("data",)), ),             # FSDP shard of every weight matrix
+    "vocab": ((("model",)), ),            # TP over the huge embed/unembed
+    "mlp": ((("model",)), ),              # TP over FFN hidden
+    "moe_mlp": ((("model",)), ),          # TP over per-expert hidden
+    "heads": ((("model",)), ),            # TP over attention heads
+    "kv_heads": ((("model",)), ),         # TP over kv heads (GQA: may fall back)
+    "head_dim": (),                       # never sharded
+    "experts": ((("model",)), ),          # expert parallelism
+    "experts_router": (),                 # router stays replicated
+    "layers": (),                         # scan-stacking axis
+    "rnn": ((("model",)), ),              # RG-LRU width
+    "rnn_blocks": (),
+    "ssm_in": ((("model",)), ),
+    "ssm_conv": ((("model",)), ),
+    "ssm_inner": ((("model",)), ),
+    "ssm_heads": ((("model",)), ),
+    # --- activations ------------------------------------------------------
+    "batch": (("pod", "data"), (("data",))),
+    "seq": (),                            # sequence stays unsharded (no SP yet)
+    "act_embed": (),                      # residual stream replicated on model
+    "act_heads": ((("model",)), ),
+    "act_mlp": ((("model",)), ),
+    "act_experts": ((("model",)), ),
+    "act_vocab": ((("model",)), ),
+    "act_data": ((("data",)), ),          # weight-stationary decode layouts
+}
+
+# Multi-pod: identical table (batch already prefers ("pod","data") jointly and
+# degrades to ("data",) on the single-pod mesh, where "pod" doesn't exist).
+MULTIPOD_RULES = DEFAULT_RULES
+
+
+def _normalize(entry):
+    """Rule entries may be written as 'axis' or ('a','b') — normalise."""
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    rules: dict[str, tuple] = dataclasses.field(
+        default_factory=lambda: DEFAULT_RULES)
+
+    def axis_size(self, names: tuple[str, ...]) -> int | None:
+        try:
+            return int(np.prod([self.mesh.shape[n] for n in names]))
+        except KeyError:
+            return None
+
+
+def spec_for_axes(axes: tuple, shape: tuple, sr: ShardingRules) -> P:
+    """Build a PartitionSpec for one tensor from its logical axes."""
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        chosen = None
+        if name is not None:
+            for entry in sr.rules.get(name, ()):  # priority order
+                mesh_axes = _normalize(entry)
+                size = sr.axis_size(mesh_axes)
+                if size is None:                  # axis absent on this mesh
+                    continue
+                if dim % size:                    # divisibility fallback
+                    continue
+                if any(a in used for a in mesh_axes):
+                    continue
+                chosen = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+                used.update(mesh_axes)
+                break
+        parts.append(chosen)
+    # Trailing Nones are implicit in PartitionSpec; keep explicit for clarity.
+    return P(*parts)
+
+
+def param_shardings(spec_tree, sr: ShardingRules):
+    """ParamSpec tree -> NamedSharding tree (same structure)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(sr.mesh, spec_for_axes(s.axes, s.shape, sr)),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Ambient rules context: models call ``constrain`` at block boundaries; it is
+# a no-op outside a ``use_rules`` scope (single-device smoke tests).
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_CTX, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(sr: ShardingRules):
+    prev = getattr(_CTX, "rules", None)
+    _CTX.rules = sr
+    try:
+        yield sr
+    finally:
+        _CTX.rules = prev
+
+
+def constrain(x: jax.Array, axes: tuple) -> jax.Array:
+    """with_sharding_constraint by logical axes; identity with no context."""
+    sr = current_rules()
+    if sr is None:
+        return x
+    spec = spec_for_axes(axes, x.shape, sr)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(sr.mesh, spec))

@@ -1,0 +1,10 @@
+"""Training stack: pure-JAX optimizers, train step builder, fault-tolerant loop."""
+
+from repro.train.optim import (  # noqa: F401
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    make_optimizer,
+    warmup_cosine,
+)
+from repro.train.state import TrainState, make_train_step  # noqa: F401

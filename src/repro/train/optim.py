@@ -1,0 +1,187 @@
+"""Optimizers in pure JAX (no optax dependency): AdamW + Adafactor.
+
+AdamW supports ``moment_dtype='bfloat16'`` — halves optimizer HBM for the
+405B-class configs (DESIGN.md §6 memory policy).  Adafactor implements the
+Shazeer–Stern factored second moment: for any parameter with >= 2 dims the
+``v`` statistics are a row vector + column vector over the trailing two dims
+instead of a full tensor — O(n+m) instead of O(n·m) optimizer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]  # (grads, state, params, step) -> (new_params, new_state)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = (step - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(np.pi * frac))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return schedule
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw(schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          moment_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        t = jnp.asarray(step + 1, jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+                jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m32.astype(moment_dtype), v32.astype(moment_dtype)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        outs = [upd(g, m, v, p)
+                for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(schedule, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0, min_dim_factored=2) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018)."""
+
+    def _factored(p):
+        return p.ndim >= min_dim_factored
+
+    def init(params):
+        def per_param(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),       # row
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32),                      # col
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"v": jax.tree.map(per_param, params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        t = jnp.asarray(step + 1, jnp.float32)
+        beta = 1.0 - t ** (-decay)  # increasing-decay schedule
+
+        def upd(g, vs, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * vs["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * vs["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rms = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True)[..., None],
+                        eps))
+                u = g / jnp.maximum(rms, eps)
+                new_vs = {"vr": vr, "vc": vc}
+            else:
+                v = beta * vs["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v + eps)
+                new_vs = {"v": v}
+            # update clipping (RMS of the update <= clip_threshold)
+            urms = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, urms / clip_threshold)
+            delta = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_vs
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        # state["v"] mirrors the params tree with {"v"} / {"vr","vc"} dict
+        # leaves -> flatten with is_leaf on exactly those dicts.
+        is_vs = lambda x: isinstance(x, dict) and set(x) in ({"v"}, {"vr", "vc"})
+        flat_state = jax.tree.flatten(state["v"], is_leaf=is_vs)[0]
+        outs = [upd(g, vs, p)
+                for g, vs, p in zip(flat_g, flat_state, flat_p)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_v = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        return new_p, {"v": new_v}
+
+    return Optimizer(init, update)
+
+
+def opt_param_specs(name: str, spec_tree):
+    """ParamSpec tree mirroring the optimizer state (drives its sharding).
+
+    Must match ``jax.eval_shape(optimizer.init, params)`` structurally; the
+    dry-run asserts this.  Factored Adafactor statistics inherit the
+    surviving logical axes of their parameter, so ``vr``/``vc`` shard the
+    same way the weight does along the kept dimension.
+    """
+    from repro.models.param import ParamSpec, is_spec
+
+    if name in ("adamw", "adamw_bf16"):
+        dt = jnp.bfloat16 if name == "adamw_bf16" else jnp.float32
+        mk = lambda s: ParamSpec(s.shape, s.axes, init="zeros", dtype=dt)
+        tree = jax.tree.map(mk, spec_tree, is_leaf=is_spec)
+        return {"m": tree, "v": tree}
+    if name == "adafactor":
+
+        def per(s):
+            if len(s.shape) >= 2:
+                return {
+                    "vr": ParamSpec(s.shape[:-1], s.axes[:-1], init="zeros",
+                                    dtype=jnp.float32),
+                    "vc": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                    s.axes[:-2] + s.axes[-1:], init="zeros",
+                                    dtype=jnp.float32),
+                }
+            return {"v": ParamSpec(s.shape, s.axes, init="zeros",
+                                   dtype=jnp.float32)}
+
+        return {"v": jax.tree.map(per, spec_tree, is_leaf=is_spec)}
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def make_optimizer(name: str, schedule) -> Optimizer:
+    if name == "adamw":
+        return adamw(schedule)
+    if name == "adamw_bf16":
+        return adamw(schedule, moment_dtype=jnp.bfloat16)
+    if name == "adafactor":
+        return adafactor(schedule)
+    raise ValueError(f"unknown optimizer {name!r}")

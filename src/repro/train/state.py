@@ -1,0 +1,62 @@
+"""TrainState + the jit-able train step builder.
+
+``make_train_step`` composes: microbatch grad accumulation (scan) →
+gradient compression → global-norm clipping → optimizer update.  The result
+is one pure function ``(state, batch, key) -> (state, metrics)`` that the
+fault-tolerant loop jits (single host) or pjits (production mesh — the
+dry-run lowers exactly this function for the ``train_4k`` cells).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.grad import microbatch_grads
+from repro.train.optim import Optimizer, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    step: jax.Array          # () int32
+    params: Any
+    opt_state: Any
+
+
+def init_train_state(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=optimizer.init(params),
+    )
+
+
+def abstract_train_state(abstract_params, optimizer: Optimizer) -> TrainState:
+    """ShapeDtypeStruct twin of :func:`init_train_state` (dry-run)."""
+    opt = jax.eval_shape(optimizer.init, abstract_params)
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=abstract_params,
+        opt_state=opt,
+    )
+
+
+def make_train_step(loss_fn, optimizer: Optimizer, *,
+                    n_microbatches: int = 1,
+                    grad_compression: str = "none",
+                    max_grad_norm: float = 1.0):
+    """loss_fn: (params, batch) -> (loss, metrics dict)."""
+
+    def train_step(state: TrainState, batch, key: jax.Array):
+        grads, loss, metrics = microbatch_grads(
+            loss_fn, state.params, batch, n_microbatches,
+            compression=grad_compression, key=key)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, state.step)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return train_step

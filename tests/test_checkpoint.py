@@ -1,0 +1,95 @@
+"""Checkpoint tests: round-trip, atomicity, crc validation, bf16, async."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    Checkpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _tree(rng):
+    return {
+        "w": jax.random.normal(rng, (16, 8)),
+        "nested": {"b": jnp.arange(5, dtype=jnp.int32),
+                   "scalar": jnp.float32(3.5)},
+        "bf16": jax.random.normal(jax.random.fold_in(rng, 1),
+                                  (4, 4)).astype(jnp.bfloat16),
+    }
+
+
+def test_roundtrip(rng):
+    tree = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 7, tree, extra={"data": {"count": 3}})
+        assert latest_step(d) == 7
+        out, step, extra = restore_checkpoint(d, tree)
+        assert step == 7 and extra == {"data": {"count": 3}}
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_chunked_large_leaf(rng):
+    tree = {"big": jax.random.normal(rng, (1024, 64))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree, chunk_mb=0)  # force max chunking
+        out, _, _ = restore_checkpoint(d, tree)
+        np.testing.assert_array_equal(np.asarray(tree["big"]),
+                                      np.asarray(out["big"]))
+
+
+def test_keep_gc(rng):
+    tree = {"x": jnp.zeros(3)}
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            save_checkpoint(d, s, tree, keep=2)
+        steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert len(steps) == 2 and latest_step(d) == 5
+
+
+def test_crc_detects_corruption(rng):
+    tree = {"x": jax.random.normal(rng, (64, 4))}
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 1, tree)
+        chunk = next(f for f in os.listdir(path) if f.startswith("leaf_"))
+        fp = os.path.join(path, chunk)
+        data = bytearray(open(fp, "rb").read())
+        data[-2] ^= 0xFF  # flip a payload byte
+        open(fp, "wb").write(bytes(data))
+        with pytest.raises(IOError, match="crc"):
+            restore_checkpoint(d, tree)
+
+
+def test_async_checkpointer(rng):
+    tree = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save_async(11, tree)
+        ck.wait()
+        assert latest_step(d) == 11
+        out, _, _ = restore_checkpoint(d, tree)
+        np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                      np.asarray(out["w"]))
+
+
+def test_elastic_restore_applies_new_sharding(rng):
+    """Restore onto explicit (single-device) shardings — the mesh-agnostic
+    path used when pod count changes."""
+    tree = {"w": jax.random.normal(rng, (8, 8))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, tree)
+        sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+        out, _, _ = restore_checkpoint(d, tree,
+                                       shardings={"w": sharding})
+        assert out["w"].sharding == sharding

@@ -1,0 +1,134 @@
+"""Property tests of the paper's associative operator ⊕ (App. B) and the
+equivalence of every attention evaluation strategy (§3.1–3.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scan_attention import (
+    ScanState,
+    attention_blockwise,
+    attention_many_to_many,
+    attention_many_to_one,
+    attention_recurrent,
+    causal_attention_reference,
+    combine,
+    make_empty_state,
+    make_leaf_state,
+    prefix_scan_states,
+    readout,
+)
+
+# subnormals excluded: XLA flushes them to zero (FTZ), which is hardware
+# behaviour, not an algorithm property worth asserting on.
+finite_f = st.floats(min_value=-30.0, max_value=30.0, allow_nan=False,
+                     allow_subnormal=False, width=32)
+
+
+def _state(s, v):
+    return make_leaf_state(jnp.float32(s), jnp.asarray(v, jnp.float32))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(finite_f, st.lists(finite_f, min_size=3,
+                                             max_size=3)),
+                min_size=3, max_size=3))
+def test_operator_associative(leaves):
+    """(a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)  (paper App. B.2)."""
+    a, b, c = [_state(s, v) for s, v in leaves]
+    left = combine(combine(a, b), c)
+    right = combine(a, combine(b, c))
+    for l, r in zip(left, right):
+        np.testing.assert_allclose(np.asarray(l), np.asarray(r),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(finite_f, finite_f), min_size=1, max_size=8))
+def test_operator_correctness(pairs):
+    """Folding ⊕ over leaves == direct softmax statistics (App. B.1)."""
+    s = np.array([p[0] for p in pairs], np.float32)
+    v = np.array([[p[1]] for p in pairs], np.float32)
+    acc = make_empty_state((), 1)
+    for i in range(len(pairs)):
+        acc = combine(acc, _state(s[i], v[i]))
+    m_ref = s.max()
+    u_ref = np.exp(s - m_ref).sum()
+    w_ref = (np.exp(s - m_ref)[:, None] * v).sum(0)
+    np.testing.assert_allclose(float(acc.m), m_ref, rtol=1e-5)
+    np.testing.assert_allclose(float(acc.u), u_ref, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(acc.w), w_ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.tuples(finite_f, st.lists(finite_f, min_size=2, max_size=2)))
+def test_identity_element(leaf):
+    """empty ⊕ x == x == x ⊕ empty."""
+    x = _state(leaf[0], leaf[1])
+    e = make_empty_state((), 2)
+    for out in (combine(e, x), combine(x, e)):
+        np.testing.assert_allclose(float(out.m), float(x.m), rtol=1e-6)
+        np.testing.assert_allclose(float(out.u), float(x.u), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(out.w), np.asarray(x.w),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 64, 129])
+@pytest.mark.parametrize("d", [4, 32])
+def test_all_strategies_agree(n, d, rng):
+    """many-to-one == recurrent == prefix-scan final == blockwise (paper's
+    central exactness claim: all are the SAME attention)."""
+    q = jax.random.normal(rng, (2, d))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (2, n, d))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (2, n, d))
+    o_conv = attention_many_to_one(q, k, v)
+    o_rec = attention_recurrent(q, k, v)
+    o_mm = attention_many_to_many(q, k, v)
+    np.testing.assert_allclose(o_conv, o_rec, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(o_conv, o_mm[:, -1], rtol=2e-5, atol=2e-5)
+    for b in [1, 2, 4]:
+        if n % b == 0:
+            o_blk = attention_blockwise(q, k, v, b)
+            np.testing.assert_allclose(np.asarray(o_mm), np.asarray(o_blk),
+                                       rtol=2e-5, atol=2e-5)
+
+
+def test_prefix_scan_matches_per_prefix_softmax(rng):
+    """o_k == Attention(q, x_{1:k}) for every k (many-to-many definition)."""
+    n, d = 33, 8
+    q = jax.random.normal(rng, (d,))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (n, d))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (n, d))
+    o_mm = attention_many_to_many(q, k, v)
+    for kk in [1, 2, 17, 33]:
+        o_k = attention_many_to_one(q, k[:kk], v[:kk])
+        np.testing.assert_allclose(np.asarray(o_mm[kk - 1]), np.asarray(o_k),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_numerical_stability_extreme_scores():
+    """The cumulative-max trick: huge score ranges must not produce NaN/Inf
+    (the paper's motivation for m_k, §3.1)."""
+    s = jnp.asarray([[-60.0, 80.0, -70.0, 75.0, 0.0, -80.0, 60.0, 33.0]])
+    v = jnp.ones((1, 8, 4))
+    states = prefix_scan_states(s, jnp.broadcast_to(v, (1, 8, 4)))
+    o = readout(states)
+    assert not bool(jnp.isnan(o).any())
+    assert not bool(jnp.isinf(o).any())
+    # output of constant values must be exactly that constant
+    np.testing.assert_allclose(np.asarray(o), 1.0, rtol=1e-5)
+
+
+def test_transformer_rnn_view(rng):
+    """Fig. 1b: causal self-attention row k == many-to-one with q = x_k."""
+    n, d = 16, 8
+    q = jax.random.normal(rng, (1, n, d))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, n, d))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (1, n, d))
+    full = causal_attention_reference(q, k, v)
+    for t in [0, 3, n - 1]:
+        row = attention_many_to_one(q[:, t], k[:, :t + 1], v[:, :t + 1])
+        np.testing.assert_allclose(np.asarray(full[:, t]), np.asarray(row),
+                                   rtol=2e-5, atol=2e-5)

@@ -1,0 +1,108 @@
+"""Sharding-rule tests (run on 1 CPU device with tiny meshes — no XLA_FLAGS;
+the 512-device meshes are exercised by launch/dryrun.py)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.param import ParamSpec
+from repro.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    param_shardings,
+    spec_for_axes,
+)
+
+
+@pytest.fixture(scope="module")
+def sr():
+    # 1x1 mesh with production axis names: rule *selection* logic is
+    # identical at any size; divisibility uses the axis sizes.
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+    return ShardingRules(mesh)
+
+
+class _FakeMesh:
+    """Shape-only mesh stand-in so divisibility logic can be tested at
+    production sizes without 512 devices."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def _rules(**mesh_shape):
+    return ShardingRules.__new__(ShardingRules), _FakeMesh(**mesh_shape)
+
+
+def _spec(axes, shape, **mesh_shape):
+    sr = ShardingRules.__new__(ShardingRules)
+    sr.mesh = _FakeMesh(**mesh_shape)
+    sr.rules = DEFAULT_RULES
+    return spec_for_axes(axes, shape, sr)
+
+
+def test_fsdp_tp_2d_sharding():
+    """MLP weight (embed, mlp) -> FSDP over data, TP over model."""
+    assert _spec(("embed", "mlp"), (16384, 53248), data=16, model=16) \
+        == P("data", "model")
+
+
+def test_divisibility_fallback_kv_heads():
+    """llama3 kv=8 does not divide model=16 -> replicated (documented)."""
+    assert _spec(("embed", "kv_heads", "head_dim"), (16384, 8, 128),
+                 data=16, model=16) == P("data", None, None)
+    # gemma3 kv=16 divides -> sharded
+    assert _spec(("embed", "kv_heads", "head_dim"), (5376, 16, 128),
+                 data=16, model=16) == P("data", "model", None)
+
+
+def test_vocab_fallback_whisper():
+    """whisper vocab 51865 % 16 != 0 -> replicated, not an error."""
+    assert _spec(("vocab", "embed"), (51865, 1024), data=16, model=16) \
+        == P(None, "data")
+
+
+def test_batch_joint_pod_data():
+    """batch prefers (pod, data) jointly on the multi-pod mesh and degrades
+    to data on the single-pod mesh."""
+    assert _spec(("batch", "seq"), (256, 4096), pod=2, data=16, model=16) \
+        == P(("pod", "data"), None)
+    assert _spec(("batch", "seq"), (256, 4096), data=16, model=16) \
+        == P("data", None)
+    # batch=1 (long_500k): nothing divides -> replicated
+    assert _spec(("batch", "seq"), (1, 4096), pod=2, data=16, model=16) \
+        == P(None, None)
+
+
+def test_no_mesh_axis_reuse():
+    """Two dims wanting the same mesh axis: only the first gets it."""
+    assert _spec(("mlp", "moe_mlp"), (1024, 1024), data=16, model=16) \
+        == P("model", None)
+
+
+def test_experts_to_model():
+    assert _spec(("experts", "embed", "moe_mlp"), (128, 2048, 768),
+                 data=16, model=16) == P("model", "data", None)
+    # dbrx 16 experts also divide 16
+    assert _spec(("experts", "embed", "moe_mlp"), (16, 6144, 10752),
+                 data=16, model=16) == P("model", "data", None)
+
+
+def test_param_shardings_tree(sr):
+    specs = {"w": ParamSpec((64, 32), ("embed", "mlp")),
+             "b": ParamSpec((32,), ("mlp",))}
+    out = param_shardings(specs, sr)
+    assert set(out) == {"w", "b"}
+    # on a 1x1 mesh everything falls back to size-1 axes (valid NamedShardings)
+    for v in jax.tree.leaves(out):
+        assert v.mesh.shape == {"data": 1, "model": 1}
+
+
+def test_constrain_noop_without_context(rng):
+    from repro.sharding import constrain
+
+    x = jax.random.normal(rng, (4, 4))
+    np.testing.assert_array_equal(np.asarray(constrain(x, ("batch", None))),
+                                  np.asarray(x))
