@@ -7,7 +7,11 @@ kernels replace, plus HLO FLOP counts:
 * ``aaren_scan`` (lax.associative_scan lowering) vs the O(N^2) materialised
   per-prefix softmax — linear vs quadratic wall time in N;
 * ``flash``-style masked softmax cost growth vs Aaren's for the SAME
-  sequence lengths (the train-time win of dropping the N x N score matrix).
+  sequence lengths (the train-time win of dropping the N x N score matrix);
+* **training path** (``*_fwdbwd`` rows): ``jax.value_and_grad`` through the
+  dispatched ops — the compiled forward+backward cost per step that the
+  fused analytic backward kernels improve on TPU (here the jnp-mode
+  recompute VJP compiles; the rows track its trajectory over PRs).
 
 Derived column: seconds per call (median of 5) at each N."""
 
@@ -20,10 +24,12 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.scan_attention import prefix_scan_states, readout
+from repro.kernels.ops import aaren_prefix_attention, flash_mha
 from repro.kernels.ref import aaren_scan_reference, flash_reference
 
 NS = (256, 1024, 4096)
 D, H = 64, 4
+FLASH_BWD_MAX_N = 1024  # O(N^2) jnp recompute-VJP; cap the CPU time budget
 
 
 def _time(fn, *args):
@@ -70,6 +76,38 @@ def run():
         v = jax.random.normal(jax.random.fold_in(key, 3), (1, H, n, D))
         t_sm = _time(softmax_attn, q, k, v)
         emit(f"kern_causal_softmax_N{n}", t_sm * 1e6, f"{t_sm:.5f}")
+
+    # ---- training path: forward + backward through the dispatched ops ----
+
+    @jax.jit
+    def aaren_fwdbwd(s, v):
+        def loss(s_, v_):
+            o, fin = aaren_prefix_attention(s_, v_)
+            return jnp.sum(o * o) + jnp.sum(fin.w * fin.w)
+
+        return jax.value_and_grad(loss, argnums=(0, 1))(s, v)
+
+    for n in NS:
+        s = jax.random.normal(key, (H, n))
+        v = jax.random.normal(jax.random.fold_in(key, 1), (H, n, D))
+        t = _time(aaren_fwdbwd, s, v)
+        emit(f"kern_aaren_scan_fwdbwd_N{n}", t * 1e6, f"{t:.5f}")
+
+    @jax.jit
+    def flash_fwdbwd(q, k, v):
+        def loss(q_, k_, v_):
+            return jnp.sum(flash_mha(q_, k_, v_, causal=True) ** 2)
+
+        return jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    for n in NS:
+        if n > FLASH_BWD_MAX_N:
+            continue
+        q = jax.random.normal(key, (1, n, H, D))
+        k = jax.random.normal(jax.random.fold_in(key, 2), (1, n, H, D))
+        v = jax.random.normal(jax.random.fold_in(key, 3), (1, n, H, D))
+        t = _time(flash_fwdbwd, q, k, v)
+        emit(f"kern_flash_fwdbwd_N{n}", t * 1e6, f"{t:.5f}")
 
 
 if __name__ == "__main__":

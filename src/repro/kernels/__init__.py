@@ -2,10 +2,14 @@
 
 * ``aaren_scan``       — chunked prefix-scan Aaren attention (the paper's
   Algorithm 1 within VMEM blocks x Appendix-A carry across blocks);
+* ``aaren_scan_bwd``   — fused analytic backward: the same ⊕ run as a
+  right-to-left suffix scan over the saved (o, m, u) residuals;
 * ``flash_attention``  — online-softmax causal/sliding-window attention (the
-  baseline; same (m, c, a) combine as the paper's RNN cell);
+  baseline; same (m, c, a) combine as the paper's RNN cell), forward +
+  two-pass analytic backward from the logsumexp residual;
 * ``ops``              — backend dispatch + custom VJPs;
-* ``ref``              — pure-jnp oracles the kernels are tested against.
+* ``ref``              — pure-jnp oracles (values and VJPs) the kernels are
+  tested against.
 """
 
 from repro.kernels.ops import (  # noqa: F401

@@ -18,11 +18,24 @@ hierarchy:
 * **across blocks** (the grid's sequence dimension, executed sequentially per
   TPU core): the paper's Appendix-A block-by-block recurrence — a single
   ``(m, u, w)`` carry lives in VMEM scratch, so HBM traffic is O(N) reads +
-  O(N) writes and on-chip memory is O(block_n · d).
+  O(N) writes and on-chip memory is O(block_r · block_n · d).
 
 Compared with materialising the scan in HBM (`lax.associative_scan` lowers to
 O(log N) full-array passes), this fuses the whole scan into one pass:
 HBM bytes drop from ~2·log2(N)·N·d to ~2·N·d.
+
+Tiling: each grid step processes ``block_r`` rows x ``block_n`` tokens, so
+the score tile is a full ``(block_r, block_n)`` VPU lane layout (8 x 128
+sublane/lane tiles) rather than one ``(bn, 1)`` lane-starved column per row.
+Rows and sequence are both padded to block multiples with ⊕-identity leaves
+(``s = NEG_INF``, ``v = 0``) and sliced on the way out, so odd / prime N no
+longer collapses the block size toward a fully sequential grid.
+
+With ``return_residuals`` the kernel also writes the per-position normaliser
+pair ``(m_i, u_i)`` — the Aaren analogue of flash-attention's logsumexp
+residual.  The analytic backward (``aaren_scan_bwd.py``) consumes
+``(o, m, u)`` instead of re-running the scan; inference-only forwards leave
+the flag off and skip that write.  See DESIGN.md §Backward.
 
 Layout: scores ``s: (R, N)`` and values ``v: (R, N, d)`` with ``R = B·H``
 rows; carries are ``(R, 1)`` / ``(R, d)``.  f32 throughout the kernel (the
@@ -42,42 +55,51 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.scan_attention import NEG_INF
 
 DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_R = 8
 
 
-def _shifted(x: jax.Array, off: int, fill: float) -> jax.Array:
-    """x[i] -> x[i - off] with ``fill`` for i < off.  x: (bn, c)."""
-    pad = jnp.full((off,) + x.shape[1:], fill, x.dtype)
-    return jnp.concatenate([pad, x[:-off]], axis=0)
+def _shifted(x: jax.Array, off: int, fill: float, axis: int) -> jax.Array:
+    """x[..., i, ...] -> x[..., i - off, ...] with ``fill`` for i < off."""
+    pad_shape = list(x.shape)
+    pad_shape[axis] = off
+    pad = jnp.full(pad_shape, fill, x.dtype)
+    keep = [slice(None)] * x.ndim
+    keep[axis] = slice(0, x.shape[axis] - off)
+    return jnp.concatenate([pad, x[tuple(keep)]], axis=axis)
 
 
 def _block_prefix_scan(m, u, w):
-    """Hillis–Steele scan of the paper's ⊕ over the block axis (axis 0).
+    """Hillis–Steele scan of the paper's ⊕ over the token axis (axis 1).
 
-    m, u: (bn, 1); w: (bn, d).  Exactly Algorithm 1 of the paper with
+    m, u: (br, bn); w: (br, bn, d).  Exactly Algorithm 1 of the paper with
     ``identity = (-inf, 0, 0)`` shifted in at the left edge.
     """
-    bn = m.shape[0]
+    bn = m.shape[1]
     off = 1
     while off < bn:
-        m_s = _shifted(m, off, NEG_INF)
-        u_s = _shifted(u, off, 0.0)
-        w_s = _shifted(w, off, 0.0)
+        m_s = _shifted(m, off, NEG_INF, 1)
+        u_s = _shifted(u, off, 0.0, 1)
+        w_s = _shifted(w, off, 0.0, 1)
         m_new = jnp.maximum(m, m_s)
         alpha = jnp.exp(m_s - m_new)  # weight of the shifted (older) half
         beta = jnp.exp(m - m_new)     # weight of the resident half
         u = u_s * alpha + u * beta
-        w = w_s * alpha + w * beta
+        w = w_s * alpha[..., None] + w * beta[..., None]
         m = m_new
         off *= 2
     return m, u, w
 
 
 def _aaren_scan_kernel(
-    s_ref, v_ref, m0_ref, u0_ref, w0_ref,  # inputs
-    o_ref, mf_ref, uf_ref, wf_ref,          # outputs
-    cm, cu, cw,                             # VMEM scratch carries
-    *, n_blocks: int,
+    s_ref, v_ref, m0_ref, u0_ref, w0_ref,            # inputs
+    o_ref, mf_ref, uf_ref, wf_ref,                   # outputs
+    *rest,                                           # [mall, uall,] cm, cu, cw
+    n_blocks: int, save_residuals: bool,
 ):
+    if save_residuals:
+        mall_ref, uall_ref, cm, cu, cw = rest
+    else:
+        cm, cu, cw = rest
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -86,30 +108,33 @@ def _aaren_scan_kernel(
         cu[...] = u0_ref[...]
         cw[...] = w0_ref[...]
 
-    s = s_ref[0][:, None].astype(jnp.float32)   # (bn, 1)
-    v = v_ref[0].astype(jnp.float32)            # (bn, d)
+    s = s_ref[...].astype(jnp.float32)   # (br, bn)
+    v = v_ref[...].astype(jnp.float32)   # (br, bn, d)
 
     # Leaves (s_i, 1, v_i) -> all within-block prefixes via Algorithm 1.
     m, u, w = _block_prefix_scan(s, jnp.ones_like(s), v)
 
     # Fold in the carry state of all previous blocks (Appendix A):
     # state_i <- carry ⊕ state_i.
-    cmv = cm[...]            # (1, 1)
-    cuv = cu[...]            # (1, 1)
-    cwv = cw[...]            # (1, d)
-    m_tot = jnp.maximum(m, cmv)                 # (bn, 1)
+    cmv = cm[...]            # (br, 1)
+    cuv = cu[...]            # (br, 1)
+    cwv = cw[...]            # (br, d)
+    m_tot = jnp.maximum(m, cmv)                 # (br, bn)
     alpha = jnp.exp(cmv - m_tot)                # carry weight
     beta = jnp.exp(m - m_tot)                   # block weight
     u_tot = cuv * alpha + u * beta
-    w_tot = cwv * alpha + w * beta
+    w_tot = cwv[:, None, :] * alpha[..., None] + w * beta[..., None]
 
-    o_ref[0] = (w_tot / u_tot).astype(o_ref.dtype)
+    o_ref[...] = (w_tot / u_tot[..., None]).astype(o_ref.dtype)
+    if save_residuals:
+        mall_ref[...] = m_tot
+        uall_ref[...] = u_tot
 
     # Advance the carry with this block's final state.
-    bn = s.shape[0]
-    cm[...] = m_tot[bn - 1:bn]
-    cu[...] = u_tot[bn - 1:bn]
-    cw[...] = w_tot[bn - 1:bn]
+    bn = s.shape[1]
+    cm[...] = m_tot[:, bn - 1:bn]
+    cu[...] = u_tot[:, bn - 1:bn]
+    cw[...] = w_tot[:, bn - 1, :]
 
     @pl.when(j == n_blocks - 1)
     def _fin():
@@ -118,8 +143,15 @@ def _aaren_scan_kernel(
         wf_ref[...] = cw[...]
 
 
+def pad_to_blocks(n: int, block: int) -> tuple[int, int]:
+    """(padded size, block): block clamped to n, n rounded up to a multiple."""
+    b = max(1, min(block, n))
+    return ((n + b - 1) // b) * b, b
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block_n", "interpret"))
+    jax.jit,
+    static_argnames=("block_n", "block_r", "return_residuals", "interpret"))
 def aaren_scan(
     s: jax.Array,
     v: jax.Array,
@@ -128,49 +160,82 @@ def aaren_scan(
     w0: jax.Array,
     *,
     block_n: int = DEFAULT_BLOCK_N,
+    block_r: int = DEFAULT_BLOCK_R,
+    return_residuals: bool = False,
     interpret: bool = False,
 ):
-    """All-prefix Aaren attention outputs + final carry.
+    """All-prefix Aaren attention outputs + final carry (+ bwd residuals).
 
     s: (R, N) f32 scores; v: (R, N, d); m0/u0: (R, 1); w0: (R, d) carry
     (use ``NEG_INF``/0/0 for a fresh sequence).
-    Returns (o: (R, N, d), m_f: (R, 1), u_f: (R, 1), w_f: (R, d)).
+    Returns (o: (R, N, d), m_f: (R, 1), u_f: (R, 1), w_f: (R, d)); with
+    ``return_residuals`` also (m: (R, N), u: (R, N)) — the per-position
+    running max / softmax denominator the analytic backward consumes.
+    Inference-only callers leave the flag off and skip that HBM write.
     """
     r, n = s.shape
     d = v.shape[-1]
-    bn = min(block_n, n)
-    while n % bn:
-        bn //= 2
-    n_blocks = n // bn
+    n_pad, bn = pad_to_blocks(n, block_n)
+    r_pad, br = pad_to_blocks(r, block_r)
+    n_blocks = n_pad // bn
 
-    kernel = functools.partial(_aaren_scan_kernel, n_blocks=n_blocks)
-    grid = (r, n_blocks)
-    return pl.pallas_call(
+    s = s.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    if n_pad != n or r_pad != r:
+        # Padded tokens are the ⊕ identity (s = -inf, v = 0): they leave the
+        # carry untouched, so outputs/finals only need slicing afterwards.
+        dr, dn = r_pad - r, n_pad - n
+        s = jnp.pad(s, ((0, dr), (0, dn)), constant_values=NEG_INF)
+        v = jnp.pad(v, ((0, dr), (0, dn), (0, 0)))
+        m0 = jnp.pad(m0, ((0, dr), (0, 0)), constant_values=NEG_INF)
+        u0 = jnp.pad(u0, ((0, dr), (0, 0)))
+        w0 = jnp.pad(w0, ((0, dr), (0, 0)))
+
+    kernel = functools.partial(_aaren_scan_kernel, n_blocks=n_blocks,
+                               save_residuals=return_residuals)
+    grid = (r_pad // br, n_blocks)
+    out_specs = [
+        pl.BlockSpec((br, bn, d), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        pl.BlockSpec((br, d), lambda i, j: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((r_pad, n_pad, d), v.dtype),
+        jax.ShapeDtypeStruct((r_pad, 1), jnp.float32),
+        jax.ShapeDtypeStruct((r_pad, 1), jnp.float32),
+        jax.ShapeDtypeStruct((r_pad, d), jnp.float32),
+    ]
+    if return_residuals:
+        out_specs += [
+            pl.BlockSpec((br, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bn), lambda i, j: (i, j)),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((r_pad, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((r_pad, n_pad), jnp.float32),
+        ]
+    o, m_f, u_f, w_f, *res = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((1, bn, d), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bn, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, d), lambda i, j: (i, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, bn, d), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((r, n, d), v.dtype),
-            jax.ShapeDtypeStruct((r, 1), jnp.float32),
-            jax.ShapeDtypeStruct((r, 1), jnp.float32),
-            jax.ShapeDtypeStruct((r, d), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
-            pltpu.VMEM((1, 1), jnp.float32),
-            pltpu.VMEM((1, 1), jnp.float32),
-            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((br, 1), jnp.float32),
+            pltpu.VMEM((br, 1), jnp.float32),
+            pltpu.VMEM((br, d), jnp.float32),
         ],
         interpret=interpret,
-    )(s.astype(jnp.float32), v, m0, u0, w0)
+    )(s, v, m0, u0, w0)
+    if n_pad != n or r_pad != r:
+        o = o[:r, :n]
+        m_f, u_f, w_f = m_f[:r], u_f[:r], w_f[:r]
+        res = [x[:r, :n] for x in res]
+    return (o, m_f, u_f, w_f, *res)

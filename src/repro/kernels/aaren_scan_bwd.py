@@ -1,0 +1,237 @@
+"""Pallas TPU kernel: fused analytic backward of the Aaren prefix scan.
+
+Gradient structure (see DESIGN.md §Backward for the derivation).  Writing the
+forward in raw (unstabilised) terms,
+
+    o_i = W_i / U_i,   U_i = u0 e^{m0} + Σ_{j<=i} e^{s_j},
+                       W_i = w0 e^{m0} + Σ_{j<=i} e^{s_j} v_j,
+
+the per-token cotangents are *suffix* sums over the positions each token
+participates in:
+
+    ds_j = e^{s_j} ( v_j · G_j  -  B_j )
+    dv_j = e^{s_j} G_j
+    G_j  = Σ_{i>=j} g_i / U_i^raw           (vector, d)
+    B_j  = Σ_{i>=j} (g_i · o_i) / U_i^raw   (scalar)
+
+with ``U_i^raw = e^{M_i} U_i`` for the stabilised residuals ``(M_i, U_i)``
+the forward kernel saves.  The pair ``(G, B)`` accumulates right-to-left
+under exactly the paper's associative ⊕ on ``(n, Ĝ, B̂)`` tuples with
+``n_j = -M_j`` as the running max — the *mirror image* of the forward scan
+(the forward's prefix max becomes the suffix max of ``-M``, which is again
+monotone because ``M`` is non-decreasing).  So the backward kernel is the
+forward kernel reflected: Hillis–Steele *suffix* scan within a VMEM block,
+right-to-left grid over blocks with a ``(n, Ĝ, B̂)`` carry in VMEM scratch.
+HBM traffic stays O(N) — one read of ``(s, v, o, m, u, g)``, one write of
+``(ds, dv)`` — versus the ~2·log2(N) full-array sweeps that differentiating
+``lax.associative_scan`` costs.
+
+Cotangents of the *final-carry* outputs ``(u_f, w_f)`` enter as the seed of
+the reverse carry (they are a suffix contribution "past the last token"):
+``(n, Ĝ, B̂)_seed = (-M_N, g_w, -g_u)``.  The subgradient of the ``max`` in
+``m_f`` and the incoming-carry cotangents ``(dm0, du0, dw0)`` are cheap
+elementwise epilogues computed from the kernel's final reverse carry in
+``ops.py``.
+
+Layout mirrors the forward: rows x tokens tiles of ``(block_r, block_n)``,
+f32 throughout, rows/sequence padded with reverse-⊕ identity leaves
+(``m = +big`` so ``n = -m`` is the ⊕ identity ``-inf``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.scan_attention import NEG_INF
+from repro.kernels.aaren_scan import (
+    DEFAULT_BLOCK_N,
+    DEFAULT_BLOCK_R,
+    _shifted,
+    pad_to_blocks,
+)
+
+
+def _shifted_rev(x: jax.Array, off: int, fill: float, axis: int) -> jax.Array:
+    """x[..., i, ...] -> x[..., i + off, ...] with ``fill`` past the end."""
+    pad_shape = list(x.shape)
+    pad_shape[axis] = off
+    pad = jnp.full(pad_shape, fill, x.dtype)
+    keep = [slice(None)] * x.ndim
+    keep[axis] = slice(off, None)
+    return jnp.concatenate([x[tuple(keep)], pad], axis=axis)
+
+
+def _block_suffix_scan(n, g, b):
+    """Hillis–Steele *suffix* scan of ⊕ over the token axis (axis 1).
+
+    n, b: (br, bn); g: (br, bn, d).  The forward's Algorithm 1 with the
+    shift direction reversed: identity (-inf, 0, 0) enters at the right edge.
+    """
+    bn = n.shape[1]
+    off = 1
+    while off < bn:
+        n_s = _shifted_rev(n, off, NEG_INF, 1)
+        g_s = _shifted_rev(g, off, 0.0, 1)
+        b_s = _shifted_rev(b, off, 0.0, 1)
+        n_new = jnp.maximum(n, n_s)
+        alpha = jnp.exp(n_s - n_new)  # weight of the shifted (later) half
+        beta = jnp.exp(n - n_new)     # weight of the resident half
+        g = g_s * alpha[..., None] + g * beta[..., None]
+        b = b_s * alpha + b * beta
+        n = n_new
+        off *= 2
+    return n, g, b
+
+
+def _aaren_scan_bwd_kernel(
+    s_ref, v_ref, o_ref, m_ref, u_ref, g_ref,   # inputs (+ residuals)
+    n0_ref, g0_ref, b0_ref,                      # reverse-carry seed
+    ds_ref, dv_ref, nf_ref, gf_ref, bf_ref,      # outputs
+    cn, cg, cb,                                  # VMEM scratch carries
+    *, n_blocks: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cn[...] = n0_ref[...]
+        cg[...] = g0_ref[...]
+        cb[...] = b0_ref[...]
+
+    s = s_ref[...]          # (br, bn)
+    v = v_ref[...]          # (br, bn, d)
+    o = o_ref[...]          # (br, bn, d)
+    m = m_ref[...]          # (br, bn)
+    u = u_ref[...]          # (br, bn)
+    g = g_ref[...]          # (br, bn, d)
+
+    # Reverse leaves (-M_i, g_i/U_i, (g_i·o_i)/U_i) -> within-block suffixes.
+    inv_u = 1.0 / u
+    ln = -m
+    lg = g * inv_u[..., None]
+    lb = jnp.sum(g * o, axis=-1) * inv_u
+    nw, gw, bw = _block_suffix_scan(ln, lg, lb)
+
+    # Fold in the carry of all blocks to the right: state_j <- state_j ⊕ carry.
+    cnv = cn[...]            # (br, 1)
+    cgv = cg[...]            # (br, d)
+    cbv = cb[...]            # (br, 1)
+    n_tot = jnp.maximum(nw, cnv)                # (br, bn)
+    alpha = jnp.exp(cnv - n_tot)                # carry weight
+    beta = jnp.exp(nw - n_tot)                  # block weight
+    g_tot = cgv[:, None, :] * alpha[..., None] + gw * beta[..., None]
+    b_tot = cbv * alpha + bw * beta
+
+    # n_tot_j == -M_j (M is monotone), so e == exp(s_j - M_j) <= 1: stable.
+    e = jnp.exp(s + n_tot)                      # (br, bn)
+    ds_ref[...] = e * (jnp.sum(v * g_tot, axis=-1) - b_tot)
+    dv_ref[...] = e[..., None] * g_tot
+
+    # Advance the carry with this block's leftmost (widest-suffix) state.
+    cn[...] = n_tot[:, 0:1]
+    cg[...] = g_tot[:, 0, :]
+    cb[...] = b_tot[:, 0:1]
+
+    @pl.when(j == n_blocks - 1)
+    def _fin():
+        nf_ref[...] = cn[...]
+        gf_ref[...] = cg[...]
+        bf_ref[...] = cb[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_r", "interpret"))
+def aaren_scan_bwd(
+    s: jax.Array,
+    v: jax.Array,
+    o: jax.Array,
+    m: jax.Array,
+    u: jax.Array,
+    g: jax.Array,
+    n0: jax.Array,
+    g0: jax.Array,
+    b0: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_r: int = DEFAULT_BLOCK_R,
+    interpret: bool = False,
+):
+    """Fused reverse scan: per-token cotangents + final reverse carry.
+
+    s: (R, N); v/o/g: (R, N, d); m/u: (R, N) forward residuals;
+    (n0, g0, b0): reverse-carry seed — ``(-m_f, g_{w_f}, -g_{u_f})``.
+    Returns (ds: (R, N), dv: (R, N, d), n1: (R, 1), g1: (R, d), b1: (R, 1))
+    where ``(n1, g1, b1)`` is the full-suffix state used for the incoming-
+    carry cotangents: ``dw0 = e^{m0+n1} g1``, ``du0 = -e^{m0+n1} b1``.
+    """
+    r, n = s.shape
+    d = v.shape[-1]
+    n_pad, bn = pad_to_blocks(n, block_n)
+    r_pad, br = pad_to_blocks(r, block_r)
+    n_blocks = n_pad // bn
+
+    f32 = jnp.float32
+    s, v, o, m, u, g = (x.astype(f32) for x in (s, v, o, m, u, g))
+    n0, g0, b0 = (x.astype(f32) for x in (n0, g0, b0))
+    if n_pad != n or r_pad != r:
+        # Reverse-⊕ identity padding: m = -NEG_INF makes the leaf max -inf,
+        # g = 0 kills the value; u = 1 avoids 0/0 in the leaf build.
+        dr, dn = r_pad - r, n_pad - n
+        s = jnp.pad(s, ((0, dr), (0, dn)))
+        v = jnp.pad(v, ((0, dr), (0, dn), (0, 0)))
+        o = jnp.pad(o, ((0, dr), (0, dn), (0, 0)))
+        m = jnp.pad(m, ((0, dr), (0, dn)), constant_values=-NEG_INF)
+        u = jnp.pad(u, ((0, dr), (0, dn)), constant_values=1.0)
+        g = jnp.pad(g, ((0, dr), (0, dn), (0, 0)))
+        n0 = jnp.pad(n0, ((0, dr), (0, 0)), constant_values=NEG_INF)
+        g0 = jnp.pad(g0, ((0, dr), (0, 0)))
+        b0 = jnp.pad(b0, ((0, dr), (0, 0)))
+
+    kernel = functools.partial(_aaren_scan_bwd_kernel, n_blocks=n_blocks)
+    grid = (r_pad // br, n_blocks)
+    rev = lambda i, j: (i, n_blocks - 1 - j)       # right-to-left sequence
+    row = lambda i, j: (i, 0)
+    ds, dv, n1, g1, b1 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bn), rev),
+            pl.BlockSpec((br, bn, d), lambda i, j: rev(i, j) + (0,)),
+            pl.BlockSpec((br, bn, d), lambda i, j: rev(i, j) + (0,)),
+            pl.BlockSpec((br, bn), rev),
+            pl.BlockSpec((br, bn), rev),
+            pl.BlockSpec((br, bn, d), lambda i, j: rev(i, j) + (0,)),
+            pl.BlockSpec((br, 1), row),
+            pl.BlockSpec((br, d), row),
+            pl.BlockSpec((br, 1), row),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, bn), rev),
+            pl.BlockSpec((br, bn, d), lambda i, j: rev(i, j) + (0,)),
+            pl.BlockSpec((br, 1), row),
+            pl.BlockSpec((br, d), row),
+            pl.BlockSpec((br, 1), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r_pad, n_pad), f32),
+            jax.ShapeDtypeStruct((r_pad, n_pad, d), f32),
+            jax.ShapeDtypeStruct((r_pad, 1), f32),
+            jax.ShapeDtypeStruct((r_pad, d), f32),
+            jax.ShapeDtypeStruct((r_pad, 1), f32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((br, 1), f32),
+            pltpu.VMEM((br, d), f32),
+            pltpu.VMEM((br, 1), f32),
+        ],
+        interpret=interpret,
+    )(s, v, o, m, u, g, n0, g0, b0)
+    if n_pad != n or r_pad != r:
+        ds, dv = ds[:r, :n], dv[:r, :n]
+        n1, g1, b1 = n1[:r], g1[:r], b1[:r]
+    return ds, dv, n1, g1, b1

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: causal (optionally sliding-window) flash attention.
+"""Pallas TPU kernels: causal (optionally sliding-window) flash attention,
+forward and analytic backward.
 
 The softmax-attention baseline the paper compares Aaren against.  The online
 softmax recurrence carried across KV blocks is *literally the paper's
@@ -9,15 +10,31 @@ softmax recurrence carried across KV blocks is *literally the paper's
     l   <- l · exp(m_old - m) + rowsum(exp(S_blk - m))
     acc <- acc · exp(m_old - m) + exp(S_blk - m) @ V_blk
 
-Grid: ``(B, H, n_q_blocks, n_kv_blocks)`` — the KV dimension is the TPU's
-sequentially-executed minor grid axis, so the (m, l, acc) carry lives in VMEM
-scratch across KV steps.  Causal and sliding-window block-level skipping
-avoids both compute and (via index re-mapping) HBM traffic for masked-out
-blocks.  GQA is handled by index arithmetic: query head ``h`` reads KV head
-``h // (H // G)`` — KV is never expanded in HBM.
+Forward grid: ``(B, H, n_q_blocks, n_kv_blocks)`` — the KV dimension is the
+TPU's sequentially-executed minor grid axis, so the (m, l, acc) carry lives
+in VMEM scratch across KV steps.  The forward also writes the logsumexp
+``L_i = m_i + log l_i`` per query row: the standard flash residual that lets
+the backward re-materialise ``p_ij = exp(s_ij - L_i)`` tile-by-tile without
+ever holding the N x N matrix in HBM.
 
-Validated in interpret mode against ``ref.flash_reference`` over shape/dtype
-sweeps (tests/test_kernels.py).
+Backward (standard two-pass flash-bwd, DESIGN.md §Backward): with
+``D_i = Σ_d do_id o_id`` precomputed by the caller,
+
+    dS_ij = p_ij (do_i · v_j - D_i)
+    dq_i  = scale · Σ_j dS_ij k_j      — kernel A, KV minor, dq in scratch
+    dk_j  = scale · Σ_i dS_ij q_i      — kernel B, Q minor, dk/dv in scratch
+    dv_j  = Σ_i p_ij do_i
+
+Causal and sliding-window block-level skipping avoids both compute and (via
+index re-mapping) HBM traffic for masked-out blocks in all three kernels.
+GQA is handled by index arithmetic in the forward and in dq: query head ``h``
+reads KV head ``h // (H // G)`` — KV is never expanded in HBM.  dk/dv are
+accumulated per *query* head and group-summed by the wrapper (a ``(B, H)``
+vs ``(B, G)`` HBM round-trip; see DESIGN.md §Backward for why the in-kernel
+alternative revisits output blocks non-contiguously).
+
+Validated in interpret mode against ``ref.flash_reference`` /
+``ref.flash_vjp_reference`` over shape/dtype sweeps (tests/test_kernels.py).
 """
 
 from __future__ import annotations
@@ -36,9 +53,31 @@ DEFAULT_BLOCK_Q = 256
 DEFAULT_BLOCK_K = 256
 
 
+def _block_relevant(q_start, k_start, block_q, block_k, causal, window):
+    """Does any (q, k) pair in this tile survive the causal/window mask?"""
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+    if window is not None:
+        relevant = jnp.logical_and(
+            relevant, k_start + block_k - 1 > q_start - window)
+    return relevant
+
+
+def _tile_mask(s_shape, q_start, k_start, causal, window):
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s_shape, 0)
+    k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s_shape, 1)
+    mask = jnp.ones(s_shape, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
 def _flash_kernel(
     q_ref, k_ref, v_ref,      # (1, 1, bq, d), (1, 1, bk, d), (1, 1, bk, d)
-    o_ref,                    # (1, 1, bq, d)
+    o_ref, lse_ref,           # (1, 1, bq, d), (1, 1, bq)
     m_scr, l_scr, acc_scr,    # VMEM scratch: (bq, 1), (bq, 1), (bq, d)
     *, scale: float, block_q: int, block_k: int, n_kv_blocks: int,
     causal: bool, window: int | None,
@@ -54,15 +93,8 @@ def _flash_kernel(
 
     q_start = jq * block_q
     k_start = jk * block_k
-
-    # Block-level relevance: any (q, k) pair with k <= q (causal) and
-    # k > q - window (sliding window) inside this tile?
-    relevant = True
-    if causal:
-        relevant = k_start <= q_start + block_q - 1
-    if window is not None:
-        relevant = jnp.logical_and(
-            relevant, k_start + block_k - 1 > q_start - window)
+    relevant = _block_relevant(q_start, k_start, block_q, block_k,
+                               causal, window)
 
     @pl.when(relevant)
     def _compute():
@@ -72,15 +104,8 @@ def _flash_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (bq, bk)
-
-        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = jnp.ones_like(s, dtype=jnp.bool_)
-        if causal:
-            mask &= k_pos <= q_pos
-        if window is not None:
-            mask &= k_pos > q_pos - window
-        s = jnp.where(mask, s, NEG_INF)
+        s = jnp.where(_tile_mask(s.shape, q_start, k_start, causal, window),
+                      s, NEG_INF)
 
         m_prev = m_scr[...]                          # (bq, 1)
         l_prev = l_scr[...]
@@ -99,14 +124,25 @@ def _flash_kernel(
         # Fully-masked rows (can't happen causally, row i attends to itself)
         # would be 0/0; guard anyway for window=0 edge configs.
         l = l_scr[...]
-        o_ref[0, 0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(
-            o_ref.dtype)
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_scr[...] + jnp.log(l_safe))[:, 0]
+
+
+def _resolve_blocks(n_q, n_k, block_q, block_k):
+    bq = min(block_q, n_q)
+    while n_q % bq:
+        bq //= 2
+    bk = min(block_k, n_k)
+    while n_k % bk:
+        bk //= 2
+    return bq, bk
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "scale", "block_q", "block_k",
-                     "interpret"))
+                     "return_residuals", "interpret"))
 def flash_attention(
     q: jax.Array,
     k: jax.Array,
@@ -117,22 +153,19 @@ def flash_attention(
     scale: float | None = None,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
+    return_residuals: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     """Flash attention.  q: (B, H, Nq, d); k/v: (B, G, Nk, d), G | H.
 
-    Returns (B, H, Nq, d) in q.dtype.
+    Returns (B, H, Nq, d) in q.dtype; with ``return_residuals`` also the
+    per-row logsumexp (B, H, Nq) f32 the backward consumes.
     """
     b, h, n_q, d = q.shape
     g, n_k = k.shape[1], k.shape[2]
     if scale is None:
         scale = 1.0 / float(np.sqrt(d))
-    bq = min(block_q, n_q)
-    while n_q % bq:
-        bq //= 2
-    bk = min(block_k, n_k)
-    while n_k % bk:
-        bk //= 2
+    bq, bk = _resolve_blocks(n_q, n_k, block_q, block_k)
     n_kv_blocks = n_k // bk
     grid = (b, h, n_q // bq, n_kv_blocks)
     group = h // g  # queries per kv head
@@ -141,7 +174,7 @@ def flash_attention(
         _flash_kernel, scale=float(scale), block_q=bq, block_k=bk,
         n_kv_blocks=n_kv_blocks, causal=causal, window=window)
 
-    return pl.pallas_call(
+    o, lse = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -153,9 +186,14 @@ def flash_attention(
                 (1, 1, bk, d),
                 lambda ib, ih, jq, jk: (ib, ih // group, jk, 0)),
         ],
-        out_specs=pl.BlockSpec(
-            (1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, n_q, d), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda ib, ih, jq, jk: (ib, ih, jq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, n_q, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, n_q), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -163,3 +201,204 @@ def flash_attention(
         ],
         interpret=interpret,
     )(q, k, v)
+    return (o, lse) if return_residuals else o
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+
+def _recompute_p_ds(q, k, v, do, lse, delta, *, scale, q_start, k_start,
+                    causal, window):
+    """Re-materialise the probability tile and dS tile from residuals.
+
+    q/do: (bq, d); k/v: (bk, d); lse/delta: (bq,).
+    Returns p, ds: (bq, bk) f32.
+    """
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_tile_mask(s.shape, q_start, k_start, causal, window),
+                  s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                    # (bq, bk)
+    dp = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # do_i · v_j
+    ds = p * (dp - delta[:, None])
+    return p, ds
+
+
+def _flash_bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dq_ref,
+    dq_scr,
+    *, scale: float, block_q: int, block_k: int, n_kv_blocks: int,
+    causal: bool, window: int | None,
+):
+    jq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q_start = jq * block_q
+    k_start = jk * block_k
+    relevant = _block_relevant(q_start, k_start, block_q, block_k,
+                               causal, window)
+
+    @pl.when(relevant)
+    def _compute():
+        _, ds = _recompute_p_ds(
+            q_ref[0, 0].astype(jnp.float32), k_ref[0, 0].astype(jnp.float32),
+            v_ref[0, 0].astype(jnp.float32), do_ref[0, 0].astype(jnp.float32),
+            lse_ref[0, 0], delta_ref[0, 0], scale=scale,
+            q_start=q_start, k_start=k_start, causal=causal, window=window)
+        dq_scr[...] += scale * jax.lax.dot_general(
+            ds, k_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jk == n_kv_blocks - 1)
+    def _finish():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *, scale: float, block_q: int, block_k: int, n_q_blocks: int,
+    causal: bool, window: int | None,
+):
+    jk = pl.program_id(2)
+    jq = pl.program_id(3)
+
+    @pl.when(jq == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q_start = jq * block_q
+    k_start = jk * block_k
+    relevant = _block_relevant(q_start, k_start, block_q, block_k,
+                               causal, window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        p, ds = _recompute_p_ds(
+            q, k_ref[0, 0].astype(jnp.float32),
+            v_ref[0, 0].astype(jnp.float32), do,
+            lse_ref[0, 0], delta_ref[0, 0], scale=scale,
+            q_start=q_start, k_start=k_start, causal=causal, window=window)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # Σ_i p_ij do_i
+        dk_scr[...] += scale * jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # Σ_i dS_ij q_i
+
+    @pl.when(jq == n_q_blocks - 1)
+    def _finish():
+        dk_ref[0, 0] = dk_scr[...]
+        dv_ref[0, 0] = dv_scr[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention_bwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    o: jax.Array,
+    lse: jax.Array,
+    do: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    """Analytic flash backward from forward residuals ``(o, lse)``.
+
+    q/o/do: (B, H, Nq, d); k/v: (B, G, Nk, d); lse: (B, H, Nq) f32.
+    Returns (dq, dk, dv) in the corresponding input dtypes.
+    """
+    b, h, n_q, d = q.shape
+    g, n_k = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d))
+    bq, bk = _resolve_blocks(n_q, n_k, block_q, block_k)
+    group = h // g
+
+    # D_i = Σ_d do·o — one elementwise pass, shared by both kernels.
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    common = dict(scale=float(scale), block_q=bq, block_k=bk,
+                  causal=causal, window=window)
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
+        pl.BlockSpec((1, 1, bk, d),
+                     lambda ib, ih, jq, jk: (ib, ih // group, jk, 0)),
+        pl.BlockSpec((1, 1, bk, d),
+                     lambda ib, ih, jq, jk: (ib, ih // group, jk, 0)),
+        pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
+        pl.BlockSpec((1, 1, bq), lambda ib, ih, jq, jk: (ib, ih, jq)),
+        pl.BlockSpec((1, 1, bq), lambda ib, ih, jq, jk: (ib, ih, jq)),
+    ]
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, n_kv_blocks=n_k // bk,
+                          **common),
+        grid=(b, h, n_q // bq, n_k // bk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, n_q, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # dk/dv accumulate over queries: Q is the minor (sequential) grid axis.
+    # Accumulated per *query* head — the (b, g) output block for a KV head
+    # would be revisited non-contiguously across the h grid axis — then
+    # group-summed here (f32) and cast.
+    bwd_in_specs = [
+        pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jk, jq: (ib, ih, jq, 0)),
+        pl.BlockSpec((1, 1, bk, d),
+                     lambda ib, ih, jk, jq: (ib, ih // group, jk, 0)),
+        pl.BlockSpec((1, 1, bk, d),
+                     lambda ib, ih, jk, jq: (ib, ih // group, jk, 0)),
+        pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jk, jq: (ib, ih, jq, 0)),
+        pl.BlockSpec((1, 1, bq), lambda ib, ih, jk, jq: (ib, ih, jq)),
+        pl.BlockSpec((1, 1, bq), lambda ib, ih, jk, jq: (ib, ih, jq)),
+    ]
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, n_q_blocks=n_q // bq,
+                          **common),
+        grid=(b, h, n_k // bk, n_q // bq),
+        in_specs=bwd_in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, jk, jq: (ib, ih, jk, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, jk, jq: (ib, ih, jk, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, n_k, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, n_k, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, d), jnp.float32),
+            pltpu.VMEM((bk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk = jnp.sum(dk_h.reshape(b, g, group, n_k, d), axis=2).astype(k.dtype)
+    dv = jnp.sum(dv_h.reshape(b, g, group, n_k, d), axis=2).astype(v.dtype)
+    return dq, dk, dv

@@ -1,7 +1,7 @@
 """Jit'd public wrappers for the Pallas kernels, with backend dispatch + VJPs.
 
-Dispatch policy
----------------
+Dispatch policy (DESIGN.md §Dispatch)
+-------------------------------------
 * On TPU, ``aaren_prefix_attention`` / ``flash_mha`` run the Pallas kernels.
 * Everywhere else (CPU tests, the 512-host-device dry-run) they run the
   pure-jnp paths: ``lax.associative_scan`` for Aaren (XLA lowers it to a
@@ -12,10 +12,16 @@ Dispatch policy
 * ``REPRO_KERNEL_MODE`` env: ``auto`` (default) | ``pallas`` | ``interpret``
   (kernels in interpret mode — used by kernel-parity tests) | ``jnp``.
 
-Gradients: both ops carry a ``custom_vjp`` whose backward pass re-computes
-the forward with the jnp path and differentiates it (recompute-style, like
-flash-attention backward).  This keeps the kernels forward-only while the
-training path stays exactly differentiable.
+Gradients (DESIGN.md §Backward): both ops carry a ``custom_vjp`` that
+dispatches like the forward.  On the kernel path the forward saves compact
+residuals — ``(o, m, u)`` for the Aaren scan, ``(o, logsumexp)`` for flash —
+and the backward runs the *fused analytic* Pallas kernels
+(``aaren_scan_bwd.py`` / ``flash_attention.flash_attention_bwd``), so a
+training step never materialises the O(N²) score matrix nor pays the
+multi-pass ``associative_scan`` lowering.  On the jnp path the backward
+re-runs the jnp forward under ``jax.vjp`` — recompute-style autodiff, kept
+both as the any-backend fallback and as the parity oracle the kernel
+backwards are tested against (tests/test_kernels.py).
 """
 
 from __future__ import annotations
@@ -31,10 +37,10 @@ from repro.core.scan_attention import (
     NEG_INF,
     ScanState,
     combine,
-    make_leaf_state,
     prefix_scan_states,
 )
 from repro.kernels import aaren_scan as _aaren_kernel
+from repro.kernels import aaren_scan_bwd as _aaren_bwd_kernel
 from repro.kernels import flash_attention as _flash_kernel
 
 
@@ -69,8 +75,8 @@ def _aaren_dispatch(s, v, m0, u0, w0, block_n):
     if mode == "jnp":
         return _aaren_jnp(s, v, m0, u0, w0)
     interpret = mode == "interpret"
-    return tuple(_aaren_kernel.aaren_scan(
-        s, v, m0, u0, w0, block_n=block_n, interpret=interpret))
+    return _aaren_kernel.aaren_scan(
+        s, v, m0, u0, w0, block_n=block_n, interpret=interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
@@ -79,13 +85,60 @@ def _aaren_core(s, v, m0, u0, w0, block_n):
 
 
 def _aaren_fwd(s, v, m0, u0, w0, block_n):
-    return _aaren_dispatch(s, v, m0, u0, w0, block_n), (s, v, m0, u0, w0)
+    mode = kernel_mode()
+    if mode == "jnp":
+        # Recompute-style: save inputs, differentiate the jnp forward.
+        return _aaren_jnp(s, v, m0, u0, w0), (s, v, m0, u0, w0)
+    interpret = mode == "interpret"
+    o, m_f, u_f, w_f, m_all, u_all = _aaren_kernel.aaren_scan(
+        s, v, m0, u0, w0, block_n=block_n, return_residuals=True,
+        interpret=interpret)
+    res = (s, v, o, m_all, u_all, m_f, u_f, w_f, m0, u0, w0)
+    return (o, m_f, u_f, w_f), res
+
+
+def aaren_bwd_epilogue(s, m0, u0, w0, m_f, u_f, w_f, g_m, g_u, g_w,
+                       ds, n1, g1, b1):
+    """Elementwise epilogue of the fused Aaren backward (DESIGN.md §Backward).
+
+    Turns the kernel's final reverse-carry state ``(n1, g1, b1)`` into the
+    incoming-carry cotangents and adds the max-subgradient of the ``m_f``
+    output to ``ds``, split across exact ties the way autodiff's
+    balanced-eq rule does.  Shared by ops and the parity tests so the
+    shipped formula is the tested one.  Returns (ds, dm0, du0, dw0).
+    """
+    e01 = jnp.exp(m0 + n1)                       # exp(m0 - M_N-ish), <= 1
+    dw0 = e01 * g1
+    du0 = -e01 * b1
+    c = g_m - g_u * u_f - jnp.sum(g_w * w_f, axis=-1, keepdims=True)
+    hit_s = (s == m_f).astype(s.dtype)
+    hit_0 = (m0 == m_f).astype(s.dtype)
+    cnt = jnp.sum(hit_s, axis=-1, keepdims=True) + hit_0
+    c = c / jnp.maximum(cnt, 1.0)
+    ds = ds + c * hit_s
+    dm0 = u0 * du0 + jnp.sum(w0 * dw0, axis=-1, keepdims=True) + c * hit_0
+    return ds, dm0, du0, dw0
 
 
 def _aaren_bwd(block_n, res, g):
-    s, v, m0, u0, w0 = res
-    _, vjp = jax.vjp(_aaren_jnp, s, v, m0, u0, w0)
-    return vjp(g)
+    # Residual arity identifies the forward path (pytrees can't carry tags):
+    # 5 = jnp-mode raw inputs, 11 = kernel-mode compact residuals.
+    if len(res) == 5:
+        s, v, m0, u0, w0 = res
+        _, vjp = jax.vjp(_aaren_jnp, s, v, m0, u0, w0)
+        return vjp(g)
+
+    s, v, o, m_all, u_all, m_f, u_f, w_f, m0, u0, w0 = res
+    g_o, g_m, g_u, g_w = g
+    interpret = kernel_mode() == "interpret"
+    # (u_f, w_f) cotangents seed the reverse carry (suffix "past" token N);
+    # see aaren_scan_bwd.py for the derivation.
+    ds, dv, n1, g1, b1 = _aaren_bwd_kernel.aaren_scan_bwd(
+        s, v, o, m_all, u_all, g_o,
+        -m_f, g_w, -g_u, block_n=block_n, interpret=interpret)
+    ds, dm0, du0, dw0 = aaren_bwd_epilogue(
+        s, m0, u0, w0, m_f, u_f, w_f, g_m, g_u, g_w, ds, n1, g1, b1)
+    return ds.astype(s.dtype), dv.astype(v.dtype), dm0, du0, dw0
 
 
 _aaren_core.defvjp(_aaren_fwd, _aaren_bwd)
@@ -153,15 +206,29 @@ def _flash_core(q, k, v, causal, window, scale):
 
 
 def _flash_fwd(q, k, v, causal, window, scale):
-    return _flash_dispatch(q, k, v, causal, window, scale), (q, k, v)
+    mode = kernel_mode()
+    if mode == "jnp":
+        return _flash_jnp(q, k, v, causal, window, scale), (q, k, v)
+    interpret = mode == "interpret"
+    o, lse = _flash_kernel.flash_attention(
+        q, k, v, causal=causal, window=window, scale=scale,
+        return_residuals=True, interpret=interpret)
+    return o, (q, k, v, o, lse)
 
 
 def _flash_bwd(causal, window, scale, res, g):
-    q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: _flash_jnp(q_, k_, v_, causal, window, scale),
-        q, k, v)
-    return vjp(g)
+    # 3 residuals = jnp-mode raw inputs; 5 = kernel-mode (+ o, logsumexp).
+    if len(res) == 3:
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: _flash_jnp(q_, k_, v_, causal, window, scale),
+            q, k, v)
+        return vjp(g)
+    q, k, v, o, lse = res
+    interpret = kernel_mode() == "interpret"
+    return _flash_kernel.flash_attention_bwd(
+        q, k, v, o, lse, g, causal=causal, window=window, scale=scale,
+        interpret=interpret)
 
 
 _flash_core.defvjp(_flash_fwd, _flash_bwd)

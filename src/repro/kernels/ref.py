@@ -47,6 +47,63 @@ def aaren_scan_reference(s, v, m0=None, u0=None, w0=None):
     return o, m_f, u_f, w_f
 
 
+def aaren_scan_vjp_reference(s, v, m0, u0, w0, g_o, g_m, g_u, g_w):
+    """Analytic cotangents of :func:`aaren_scan_reference`, densely.
+
+    Direct O(N^2) evaluation of the formulas the fused backward kernel
+    implements as a suffix scan (DESIGN.md §Backward): with prefix max/
+    denominator residuals ``(M_i, U_i)`` and ``p_ij = exp(s_j - M_i)/U_i``,
+
+        ds_j  = Σ_{i>=j} p_ij (g_i · (v_j - o_i))  +  seed + max terms
+        dv_j  = Σ_{i>=j} p_ij g_i                  +  seed term
+
+    Seed terms carry the (u_f, w_f) cotangents; the ``max`` subgradient of
+    ``m_f`` routes ``C = g_m - g_u u_f - g_w·w_f`` to the arg-max score.
+    Returns (ds, dv, dm0, du0, dw0).
+    """
+    r, n = s.shape
+    f32 = jnp.float32
+    s, v = s.astype(f32), v.astype(f32)
+    m0, u0, w0 = m0.astype(f32), u0.astype(f32), w0.astype(f32)
+    g_o, g_m, g_u, g_w = (g.astype(f32) for g in (g_o, g_m, g_u, g_w))
+
+    mask = jnp.tril(jnp.ones((n, n), bool))                   # (i, j): j <= i
+    m_pref = jnp.maximum(jax.lax.cummax(s, axis=1), m0)       # (R, N) = M_i
+    e = jnp.where(mask[None], jnp.exp(s[:, None, :] - m_pref[..., None]), 0.0)
+    e0 = jnp.exp(m0 - m_pref)                                 # (R, N): carry
+    u = jnp.sum(e, axis=-1) + e0 * u0                         # (R, N) = U_i
+    p = e / u[..., None]                                      # (R, N, N)
+    o = (jnp.einsum("rij,rjd->rid", p, v)
+         + (e0 * u0 / u)[..., None] * (
+             w0[:, None, :] / jnp.where(u0 == 0.0, 1.0, u0)[..., None]))
+    m_f, u_f = m_pref[:, -1:], u[:, -1:]
+
+    gdotv = jnp.einsum("rid,rjd->rij", g_o, v)                # g_i · v_j
+    gdoto = jnp.sum(g_o * o, axis=-1)                         # g_i · o_i
+    e_n = jnp.exp(s - m_f)                                    # exp(s_j - M_N)
+    ds = jnp.einsum("rij->rj", p * (gdotv - gdoto[..., None]))
+    ds = ds + e_n * (jnp.einsum("rjd,rd->rj", v, g_w) + g_u)
+    dv = jnp.einsum("rij,rid->rjd", p, g_o) + e_n[..., None] * g_w[:, None, :]
+
+    # Incoming-carry cotangents.
+    q0 = e0 / u                                               # (R, N)
+    dw0 = jnp.einsum("ri,rid->rd", q0, g_o) + jnp.exp(m0 - m_f) * g_w
+    du0 = (-jnp.sum(q0 * gdoto, axis=-1, keepdims=True)
+           + jnp.exp(m0 - m_f) * g_u)
+    # max subgradient of m_f, split across exact ties like autodiff.
+    w_f = (jnp.einsum("rj,rjd->rd", e[:, -1, :], v)
+           + (e0[:, -1:] * u0) * (
+               w0 / jnp.where(u0 == 0.0, 1.0, u0)))
+    c = g_m - g_u * u_f - jnp.sum(g_w * w_f, axis=-1, keepdims=True)
+    hit_s = (s == m_f).astype(f32)
+    hit_0 = (m0 == m_f).astype(f32)
+    cnt = jnp.sum(hit_s, axis=-1, keepdims=True) + hit_0
+    c = c / jnp.maximum(cnt, 1.0)
+    ds = ds + c * hit_s
+    dm0 = (u0 * du0 + jnp.sum(w0 * dw0, axis=-1, keepdims=True) + c * hit_0)
+    return ds, dv, dm0, du0, dw0
+
+
 def flash_reference(q, k, v, *, causal=True, window=None, scale=None):
     """Row-wise softmax attention with causal/window masks (GQA-aware).
 
@@ -72,3 +129,43 @@ def flash_reference(q, k, v, *, causal=True, window=None, scale=None):
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(p.dtype))
     return out.astype(q.dtype)
+
+
+def flash_vjp_reference(q, k, v, do, *, causal=True, window=None, scale=None):
+    """Analytic flash-attention cotangents, densely (the textbook formulas).
+
+    With ``p = softmax(mask(qk^T scale))``, ``D_i = do_i · o_i``:
+
+        dS = p ⊙ (do v^T - D),  dq = dS k · scale,
+        dk = dS^T q · scale,    dv = p^T do        (group-summed for GQA).
+
+    Returns (dq, dk, dv) in the input dtypes.
+    """
+    b, h, n_q, d = q.shape
+    g = k.shape[1]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d))
+    f32 = jnp.float32
+    ke = jnp.repeat(k, h // g, axis=1).astype(f32)
+    ve = jnp.repeat(v, h // g, axis=1).astype(f32)
+    qf, dof = q.astype(f32), do.astype(f32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, ke) * scale
+    n_k = k.shape[2]
+    q_pos = np.arange(n_q)[:, None]
+    k_pos = np.arange(n_k)[None, :]
+    mask = np.ones((n_q, n_k), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(jnp.asarray(mask), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, ve)
+    delta = jnp.sum(dof * o, axis=-1)                       # (b, h, nq)
+    dsc = p * (jnp.einsum("bhqd,bhkd->bhqk", dof, ve) - delta[..., None])
+    dq = (jnp.einsum("bhqk,bhkd->bhqd", dsc, ke) * scale).astype(q.dtype)
+    dk_h = jnp.einsum("bhqk,bhqd->bhkd", dsc, qf) * scale
+    dv_h = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+    dk = jnp.sum(dk_h.reshape(b, g, h // g, n_k, d), axis=2).astype(k.dtype)
+    dv = jnp.sum(dv_h.reshape(b, g, h // g, n_k, d), axis=2).astype(v.dtype)
+    return dq, dk, dv

@@ -156,7 +156,10 @@ class StreamingEngine:
             rid, prompt, max_new = self.queue.pop(0)
             logits, fresh = self._prefill(self.params, prompt)
             self._insert_slot(i, fresh)
-            first = self.sampler(logits[:, -1:], self.key)
+            # Split per fill: reusing self.key un-split would sample every
+            # refilled slot's first token with the same randomness.
+            self.key, sub = jax.random.split(self.key)
+            first = self.sampler(logits[:, -1:], sub)
             self.tok = self.tok.at[i].set(first[0])
             self.active[i] = _Slot(rid, [int(first[0, 0])], max_new - 1)
 

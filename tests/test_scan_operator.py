@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# Property tests need hypothesis; environments without it (e.g. the minimal
+# CI/container image) skip this module instead of erroring at collection.
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.scan_attention import (
     ScanState,

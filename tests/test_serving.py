@@ -57,6 +57,25 @@ def test_slot_reuse_correctness(aaren_model, rng):
         assert out[rid] == solo[i], f"request {i} diverged after slot reuse"
 
 
+def test_fill_slots_split_keys(aaren_model, rng):
+    """Every slot fill must sample its first token with a freshly split key
+    (the un-split ``self.key`` would give every refilled request the same
+    first-token randomness)."""
+    api, params = aaren_model
+    seen = []
+
+    def recording_sampler(logits, key):
+        seen.append(tuple(np.asarray(key).tolist()))
+        return greedy_sampler(logits, key)
+
+    eng = StreamingEngine(api, params, n_slots=2, sampler=recording_sampler)
+    for i in range(4):
+        prompt = jax.random.randint(jax.random.fold_in(rng, i), (4,), 0, 64)
+        eng.submit(prompt, 3)
+    eng.run()
+    assert len(seen) == len(set(seen)), "PRNG key reused across samples"
+
+
 def test_engine_rejects_kv_models(rng):
     cfg = smoke_config("phi3-mini-3.8b", attn_mode="softmax")
     api = build(cfg)
