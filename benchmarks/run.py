@@ -8,12 +8,15 @@
     Fig. 5 right (cumulative time)   -> bench_time
     S4.5 parameter counts            -> bench_params
     kernel work-scaling              -> bench_kernels
+    serving (tok/s + TTFT)           -> bench_serving  (BENCH_serving.json)
 
 Prints ``name,us_per_call,derived`` CSV rows (aggregated at the end).
+``--only serving`` runs a single module — the CI serving smoke step uses it.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 import traceback
 
@@ -23,6 +26,7 @@ from benchmarks import (
     bench_memory,
     bench_params,
     bench_rl,
+    bench_serving,
     bench_time,
     bench_tsc,
     bench_tsf,
@@ -34,6 +38,7 @@ MODULES = [
     ("memory", bench_memory),
     ("time", bench_time),
     ("kernels", bench_kernels),
+    ("serving", bench_serving),
     ("tsc", bench_tsc),
     ("tsf", bench_tsf),
     ("events", bench_events),
@@ -42,9 +47,20 @@ MODULES = [
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single module (e.g. 'serving')")
+    args = ap.parse_args()
+    modules = MODULES
+    if args.only:
+        modules = [(n, m) for n, m in MODULES if n == args.only]
+        if not modules:
+            raise SystemExit(f"unknown module {args.only!r}; "
+                             f"known: {[n for n, _ in MODULES]}")
+
     print("name,us_per_call,derived")
     failures = []
-    for name, mod in MODULES:
+    for name, mod in modules:
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
         try:

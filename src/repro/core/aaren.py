@@ -31,6 +31,7 @@ from repro.core.scan_attention import (
     combine,
     make_empty_state,
     make_leaf_state,
+    mask_to_identity,
     prefix_scan_states,
     readout,
 )
@@ -104,11 +105,19 @@ def aaren_attention_parallel(
 
 def aaren_attention_chunked(
     q_heads: jax.Array, k: jax.Array, v: jax.Array, carry: ScanState,
-    scale: float,
+    scale: float, mask: jax.Array | None = None,
 ) -> tuple[jax.Array, ScanState]:
-    """Prefix attention over one chunk, folding in an incoming carry."""
+    """Prefix attention over one chunk, folding in an incoming carry.
+
+    ``mask`` (B, N) bool marks valid chunk positions; invalid ones enter the
+    scan as ⊕-identity leaves so a fixed-shape chunk can hold a ragged tail
+    (serving feeds every slot the same (B, C) block regardless of how many
+    prompt tokens it actually has left).
+    """
     s = _scores(q_heads, k, scale)
     vh = _values_per_head(v, q_heads.shape[0]).astype(jnp.float32)
+    if mask is not None:
+        s, vh = mask_to_identity(s, vh, mask[:, None, :])  # (B,N) -> heads
     out, final = _chunk_with_carry(s, vh, carry)
     return jnp.swapaxes(out, 1, 2).astype(v.dtype), final
 

@@ -68,6 +68,20 @@ def make_leaf_state(s: jax.Array, v: jax.Array) -> ScanState:
     return ScanState(m=s, u=jnp.ones_like(s), w=v.astype(s.dtype))
 
 
+def mask_to_identity(s: jax.Array, v: jax.Array, mask: jax.Array):
+    """Turn masked-out positions into ⊕-identity leaves.
+
+    mask broadcasts against s (..., N); masked positions get ``s = NEG_INF``
+    (so ``exp(s - m)`` underflows to exact 0) and ``v = 0``.  Their leaves
+    then contribute nothing to any combine — the mechanism that lets a
+    fixed-shape chunk carry a shorter effective length (serving) or padded
+    tails (kernels).  Returns (s, v).
+    """
+    s = jnp.where(mask, s, NEG_INF)
+    v = jnp.where(mask[..., None], v, jnp.zeros((), v.dtype))
+    return s, v
+
+
 def combine(lhs: ScanState, rhs: ScanState) -> ScanState:
     """The paper's associative operator ``(+)`` (§3.2, App. B).
 
@@ -94,10 +108,17 @@ def combine(lhs: ScanState, rhs: ScanState) -> ScanState:
 
 
 def readout(state: ScanState, eps: float = 0.0) -> jax.Array:
-    """Attention output ``o = w / u`` of an accumulated state."""
-    if eps:
-        return state.w / (state.u + eps)[..., None]
-    return state.w / state.u[..., None]
+    """Attention output ``o = w / u`` of an accumulated state.
+
+    The empty state has ``u == 0`` and ``w == 0``; a raw division would give
+    ``0/0 = nan``.  An empty index set attends to nothing, so its readout is
+    defined as 0 (and because ``w`` is exactly 0 there, guarding the
+    denominator alone suffices — no second ``where`` needed).  For any
+    non-empty state ``u > 0`` and the result is bit-identical to ``w / u``.
+    """
+    u = state.u + eps if eps else state.u
+    safe_u = jnp.where(u == 0.0, 1.0, u)
+    return state.w / safe_u[..., None]
 
 
 def scores(q: jax.Array, k: jax.Array, scale: float | None = None) -> jax.Array:
@@ -214,14 +235,20 @@ def attention_many_to_many_with_state(
     v: jax.Array,
     carry: ScanState | None = None,
     scale: float | None = None,
+    mask: jax.Array | None = None,
 ) -> tuple[jax.Array, ScanState]:
     """Prefix-scan attention that also threads an incoming carry state.
 
     Used for chunked prefill: process a 32k prompt in sequence blocks, each
     block combining the previous blocks' state — exactly App. A at the
-    framework level.  Returns (outputs (..., N, d), final ScanState).
+    framework level.  ``mask`` (..., N) bool marks valid positions; masked
+    tokens become ⊕-identity leaves (``s = NEG_INF``, ``v = 0``), so a
+    fixed-shape chunk can carry a shorter effective length without touching
+    the state.  Returns (outputs (..., N, d), final ScanState).
     """
     s = scores(q, k, scale)
+    if mask is not None:
+        s, v = mask_to_identity(s, v, mask)
     states = prefix_scan_states(s, v)
     if carry is not None:
         # prepend carry: state_k <- carry (+) state_k (prefix property)

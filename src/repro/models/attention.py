@@ -23,7 +23,7 @@ from repro.configs.base import ArchConfig
 from repro.core import aaren as aaren_core
 from repro.core import softmax_attention as soft
 from repro.core.rope import rope_for_positions
-from repro.core.scan_attention import NEG_INF, ScanState
+from repro.core.scan_attention import NEG_INF, ScanState, mask_to_identity
 from repro.kernels import ops as kops
 from repro.models.param import ParamSpec
 
@@ -189,6 +189,32 @@ def aaren_step(p: dict, x_t: jax.Array, state: ScanState, cfg: ArchConfig):
     """O(1) streaming update — the paper's constant-memory inference."""
     w = _aaren_weights(p)
     return aaren_core.aaren_layer_step(w, x_t, state)
+
+
+def aaren_chunk(p: dict, x: jax.Array, state: ScanState, cfg: ArchConfig, *,
+                mask: jax.Array | None = None):
+    """Chunked prefill: fold a fixed-shape (B, C, D) chunk into the carry.
+
+    The serving engine's single jitted step function runs this for every slot
+    each tick — some slots mid-prefill (C prompt tokens), some decoding (one
+    valid token) — so ``mask`` (B, C) marks which positions are real.  Masked
+    positions enter the prefix scan as ⊕-identity leaves (``s = NEG_INF``,
+    ``v = 0``): they contribute nothing to the carry or to any valid
+    position's output.  A chunk of C == 1 with an all-true mask is exactly
+    :func:`aaren_step`.  Dispatches through the same kernel boundary as
+    prefill (``kops.aaren_prefix_attention`` threads the carry natively).
+    """
+    w = _aaren_weights(p)
+    scale = 1.0 / float(np.sqrt(cfg.resolved_head_dim))
+    q_heads = aaren_core.head_queries(w)
+    k, v = aaren_core._project_kv(w, x)
+    s = aaren_core._scores(q_heads, k, scale)          # (B, H, C) f32
+    vh = aaren_core._values_per_head(v, cfg.n_heads).astype(jnp.float32)
+    if mask is not None:
+        s, vh = mask_to_identity(s, vh, mask[:, None, :])
+    o, final = kops.aaren_prefix_attention(s, vh, state)
+    ctx = jnp.swapaxes(o, 1, 2).astype(v.dtype)        # (B, C, H, d)
+    return _proj_out(p, ctx), final
 
 
 # ---------------------------------------------------------------------------

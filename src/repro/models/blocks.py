@@ -153,6 +153,28 @@ def _apply_mixer_step(p, h_t, state, sig, cfg):
     raise ValueError(mixer)
 
 
+def _apply_mixer_chunk(p, h, state, sig, cfg, mask):
+    """Advance a mixer's carry state by one fixed-shape (B, C, D) chunk.
+
+    Aaren folds all C positions in one prefix scan (masked positions are
+    ⊕-identity).  RG-LRU/SSD carries advance strictly token-by-token — their
+    conv windows and decays have no masked identity element — so those
+    mixers require C == 1 (the engine enforces chunk == 1 for them).
+    """
+    mixer = sig[0]
+    if mixer == "aaren":
+        return attn.aaren_chunk(p, h, state, cfg, mask=mask)
+    if mixer in ("rglru", "ssd"):
+        if h.shape[1] != 1:
+            raise ValueError(
+                f"{mixer} carries advance one token at a time; chunked "
+                f"prefill needs chunk == 1, got chunk = {h.shape[1]}")
+        step = rglru_mod.rglru_step if mixer == "rglru" else ssd_mod.ssd_step
+        return step(p, h, state, cfg)
+    raise ValueError(
+        f"chunked prefill needs a position-free carry; {mixer!r} has none")
+
+
 def _apply_mlp(p, x, sig, cfg, want_aux: bool, decode: bool = False):
     mlp = sig[1]
     if mlp == "none":
@@ -188,3 +210,23 @@ def block_step(p: dict, x_t: jax.Array, state, sig: Sig, cfg: ArchConfig):
     x_t = x_t + y
     x_t, _ = _apply_mlp(p, x_t, sig, cfg, want_aux=False, decode=True)
     return x_t, new_state
+
+
+def block_chunk(p: dict, x: jax.Array, state, sig: Sig, cfg: ArchConfig, *,
+                mask: jax.Array | None = None):
+    """Fixed-shape chunk through one block's carry.  Returns (x, new_state).
+
+    x: (B, C, D); mask: (B, C) valid-position flags (None = all valid).
+    Norms and dense MLPs are position-wise, so padded positions cannot leak
+    into valid ones; only the mixer needs the mask.  MoE caveat: padded
+    tokens are routed too — they can never displace a valid token (capacity
+    rank is stable in token order and the valid prefix comes first), but
+    per-chunk capacity means *dropping* of valid tokens may differ from
+    one-shot prefill when capacity binds (inherent to chunked MoE serving;
+    irrelevant when capacity_factor leaves headroom).
+    """
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    y, new_state = _apply_mixer_chunk(p["mixer"], h, state, sig, cfg, mask)
+    x = x + y
+    x, _ = _apply_mlp(p, x, sig, cfg, want_aux=False, decode=x.shape[1] == 1)
+    return x, new_state

@@ -249,6 +249,69 @@ def lm_decode_step(cfg: ArchConfig, params: dict, token_t: jax.Array,
     return logits, new_states
 
 
+def lm_prefill_chunk(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                     states: dict, *, length_mask: jax.Array | None = None):
+    """Advance per-layer carries by one fixed-shape chunk of tokens.
+
+    tokens: (B, C) int32; states: decode-state tree (layout of
+    :func:`lm_decode_step`); length_mask: (B, C) bool, True at valid
+    positions (a *prefix* per row — row i carries ``lengths[i]`` real tokens,
+    the rest is padding).  Returns (logits (B, C, V) f32, new states).
+
+    This is the serving hot path: the chunk shape is static, so the engine
+    traces exactly one step function per (B, C) and serves every prompt
+    length through it — mid-prefill rows consume up to C prompt tokens,
+    decoding rows carry one valid token, padded positions are ⊕-identity in
+    the mixer scan (see :func:`repro.models.blocks.block_chunk`).  Logits at
+    padded positions are garbage by construction; callers read row i at
+    position ``lengths[i] - 1``.  C == 1 reproduces :func:`lm_decode_step`
+    bit-for-bit on Aaren layers.
+    """
+    n_periods, n_rest = cfg.layer_plan()
+    sigs = _sigs(cfg)
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    x = apply_embed(params["embed"], tokens, compute_dtype)
+
+    new_states: dict[str, Any] = {}
+    if n_periods:
+
+        def chunk_fn(x_c, scanned):
+            period_params, period_states = scanned
+            outs = []
+            for pos, sig in enumerate(sigs):
+                x_c, st = blocks.block_chunk(
+                    period_params[pos], x_c, period_states[pos], sig, cfg,
+                    mask=length_mask)
+                outs.append(st)
+            return x_c, tuple(outs)
+
+        if cfg.scan_layers:
+            x, per_states = jax.lax.scan(
+                chunk_fn, x, (params["periods"], states["periods"]))
+        else:
+            sts = []
+            for i in range(n_periods):
+                x, st = chunk_fn(x, jax.tree.map(
+                    lambda a: a[i], (params["periods"], states["periods"])))
+                sts.append(st)
+            per_states = jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+        new_states["periods"] = per_states
+    if n_rest:
+        rest_states = []
+        for i in range(n_rest):
+            sig = sigs[i % len(sigs)]
+            x, st = blocks.block_chunk(
+                params["rest"][i], x, states["rest"][i], sig, cfg,
+                mask=length_mask)
+            rest_states.append(st)
+        new_states["rest"] = tuple(rest_states)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = apply_unembed(
+        params.get("unembed"), params["embed"], x, cfg.logit_softcap)
+    return logits, new_states
+
+
 def lm_state_specs(cfg: ArchConfig, batch: int, cache_len: int):
     """ShapeDtypeStruct tree of the decode state (dry-run, no allocation)."""
     n_periods, n_rest = cfg.layer_plan()
@@ -290,6 +353,22 @@ def lm_state_axes(cfg: ArchConfig):
             blocks.block_state_axes(sigs[i % len(sigs)], cfg)
             for i in range(n_rest))
     return out
+
+
+def lm_state_batch_axes(cfg: ArchConfig):
+    """Tree of ints mirroring the decode-state tree: the batch-axis index of
+    every leaf (-1 if the leaf has no batch axis, e.g. a KV ring index).
+
+    This is the *explicit* metadata the serving engine uses to address slot
+    ``i`` of a batched state.  Inferring the axis from shapes (matching
+    ``1`` vs ``n_slots``) is unsound: any state dimension that happens to
+    equal ``n_slots`` — heads, layers, conv taps — is indistinguishable from
+    the batch dimension by shape alone.
+    """
+    axes = lm_state_axes(cfg)
+    return jax.tree.map(
+        lambda a: a.index("batch") if "batch" in a else -1, axes,
+        is_leaf=blocks.AXES_IS_LEAF)
 
 
 def lm_state_init(cfg: ArchConfig, batch: int, cache_len: int):

@@ -4,5 +4,6 @@ from repro.serving.engine import (  # noqa: F401
     StreamingEngine,
     decode_state_bytes,
     generate,
+    request_key,
 )
 from repro.serving.sampler import greedy_sampler, temperature_sampler  # noqa: F401

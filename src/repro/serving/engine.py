@@ -5,21 +5,42 @@ Two serving modes, matching the paper's efficiency analysis (§4.5):
 * :func:`generate` — wave-based batched generation for *any* arch: prefill
   the whole batch, then jit'd one-token decode steps.  KV-cache archs carry
   O(B·N) cache; Aaren archs carry O(B) state.
-* :class:`StreamingEngine` — **continuous batching** for Aaren-mode models.
+* :class:`StreamingEngine` — **chunked-prefill continuous batching** for
+  position-free-state models.  The engine is a scheduler/step-function
+  split (DESIGN.md §Serving): pure-Python bookkeeping decides what each of
+  the ``n_slots`` persistent decode slots feeds next, and exactly two
+  fixed-shape jitted functions touch the device —
+
+  - ``step(params, tokens (S, C), lengths (S,), states)`` advances a *mixed*
+    batch: mid-prefill slots consume up to C prompt tokens, decoding slots
+    carry one valid token, padding is ⊕-identity in the carry scan.  One
+    trace per (S, C), ever — no per-prompt-length recompilation, and a
+    refill longer than one chunk never stalls the decode of other slots.
+  - ``reset(states, mask (S,))`` re-initialises freed slots' carries in
+    place, addressed by the explicit batch-axis metadata of
+    :func:`repro.models.lm.lm_state_batch_axes` (shape-matching heuristics
+    break when a state dim equals ``n_slots``).
+
   Because the Aaren decode state is a position-free constant-size tuple
-  ``(m, u, w)`` per layer/head (no KV cache, no RoPE phase), a finished
-  sequence's slot can be handed to a queued request by a pure
-  ``tree.at[slot].set(fresh_state)`` — no cache reshaping, no position
-  bookkeeping.  This is the systems-level payoff of the paper's O(1)-state
-  formulation, and the engine exercises it literally.
+  ``(m, u, w)`` per layer/head (no KV cache, no RoPE phase), admitting a
+  queued request is a masked ``where`` against the zero state — no cache
+  reshaping, no position bookkeeping.  This is the systems-level payoff of
+  the paper's O(1)-state formulation, and the engine exercises it literally.
 
 ``decode_state_bytes`` measures the per-request inference state — the
 quantity plotted in the paper's Figure 5 (left).
+
+Sampling keys: both engines draw the token-t sample of request ``rid`` from
+``fold_in(fold_in(base_key, rid), t)`` (:func:`request_key`), so streaming
+and wave generation produce identical samples for the same submission order
+regardless of slot scheduling, refill timing, or chunk size.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
+import weakref
 from typing import Any, Callable
 
 import jax
@@ -30,10 +51,65 @@ from repro.models.factory import ModelAPI
 from repro.serving.sampler import greedy_sampler
 
 
+def _jit(fn):
+    """Single indirection over ``jax.jit`` so tests can count traces."""
+    return jax.jit(fn)
+
+
 def decode_state_bytes(states: Any) -> int:
     """Total bytes of a decode-state pytree (Fig. 5-left measurement)."""
     return int(sum(
         np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(states)))
+
+
+def request_key(base_key: jax.Array, request_id: int, step: int) -> jax.Array:
+    """Sampling key for generated token ``step`` of request ``request_id``.
+
+    Keyed on (request, position) only — never on engine scheduling — so any
+    two engines given the same base key and submission order sample
+    identically, and every (request, step) pair gets a distinct key.
+    """
+    return jax.random.fold_in(jax.random.fold_in(base_key, request_id), step)
+
+
+def _sample_rows(sampler: Callable, logits: jax.Array, base_key: jax.Array,
+                 rids, steps) -> jax.Array:
+    """Sample each row of (B, 1, V) logits with its own request/step key.
+
+    Eager per-row calls (not vmapped/jitted) so instrumented samplers see
+    concrete keys; B is small in serving.
+    """
+    toks = [sampler(logits[i:i + 1], request_key(base_key, rid, st))
+            for i, (rid, st) in enumerate(zip(rids, steps))]
+    return jnp.concatenate(toks, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Wave generation
+# ---------------------------------------------------------------------------
+
+# Jitted prefill/decode per ModelAPI, keyed weakly so repeated generate()
+# calls (and a warmup call before a timed one) reuse one trace instead of
+# rebuilding fresh jit wrappers — the old per-call lambdas recompiled on
+# every invocation.
+_GEN_FNS: "weakref.WeakKeyDictionary[ModelAPI, dict]" = (
+    weakref.WeakKeyDictionary())
+
+
+def _generate_fns(api: ModelAPI, cache_len: int):
+    fns = _GEN_FNS.setdefault(api, {})
+    # Close over the member functions, NOT over `api`: a value that captured
+    # the key would pin it strongly and defeat the weak eviction.
+    if "decode" not in fns:
+        decode_step = api.decode_step
+        fns["decode"] = jax.jit(lambda pr, sb: decode_step(pr, sb))
+    pf_key = ("prefill", cache_len)
+    if pf_key not in fns:
+        # cache_len is a static model property — close over it, don't trace.
+        prefill = api.prefill
+        fns[pf_key] = jax.jit(lambda pr, toks: prefill(
+            pr, {"tokens": toks, "cache_len": cache_len}))
+    return fns[pf_key], fns["decode"]
 
 
 def generate(
@@ -51,47 +127,54 @@ def generate(
     if cache_len is None:
         cache_len = p + max_new_tokens
     key = key if key is not None else jax.random.PRNGKey(0)
+    prefill, decode = _generate_fns(api, cache_len)
 
-    # cache_len is a static model property — close over it, don't trace it.
-    prefill = jax.jit(lambda pr, toks: api.prefill(
-        pr, {"tokens": toks, "cache_len": cache_len}))
     logits, states = prefill(params, prompts)
-    tok = sampler(logits[:, -1:], key)
-
-    decode = jax.jit(lambda pr, sb: api.decode_step(pr, sb))
+    rids = list(range(b))
+    tok = _sample_rows(sampler, logits[:, -1:], key, rids, [0] * b)
     out = [tok]
-    for i in range(max_new_tokens - 1):
-        key, sub = jax.random.split(key)
+    for t in range(1, max_new_tokens):
         logits, states = decode(params, {"token": tok, "states": states})
-        tok = sampler(logits, sub)
+        tok = _sample_rows(sampler, logits, key, rids, [t] * b)
         out.append(tok)
     return jnp.concatenate(out, axis=1), states
 
 
-def _batch_axis(single: tuple, batched: tuple, n_slots: int) -> int:
-    """Axis where a single-request leaf (B=1) sits in the batched tree."""
-    for i, (a, b) in enumerate(zip(single, batched)):
-        if a == 1 and b == n_slots:
-            return i
-    raise ValueError(f"no batch axis: {single} vs {batched}")
+# ---------------------------------------------------------------------------
+# Chunked-prefill continuous batching
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class _Slot:
+    """Scheduler-side bookkeeping for one decode slot."""
+
     request_id: int
-    tokens: list
-    remaining: int
+    pending: np.ndarray | None   # prompt tokens not yet consumed (None once decoding)
+    tokens: list                 # generated token ids
+    remaining: int               # generated tokens still owed
+    n_sampled: int = 0           # per-request step counter (key schedule)
+    last_token: int = 0          # input token while decoding
 
 
 class StreamingEngine:
-    """Continuous batching over ``n_slots`` persistent decode slots.
+    """Chunked-prefill continuous batching over ``n_slots`` decode slots.
 
-    Aaren-mode only (position-free O(1) state — see module docstring).
-    Requests are queued with :meth:`submit`; :meth:`run` decodes all slots in
-    lock-step, refilling finished slots from the queue mid-flight.
+    Position-free-state models only (aaren/rglru/ssd mixers — see module
+    docstring).  Requests are queued with :meth:`submit`; :meth:`run` (or
+    repeated :meth:`step`) advances all slots in lock-step: each tick is ONE
+    fixed-shape jitted call in which some slots consume a chunk of prompt,
+    others decode a token, and freed slots are refilled from the queue the
+    very next tick — decode never waits for a full-prompt prefill.
+
+    ``chunk`` is the prefill chunk size (prompt tokens consumed per slot per
+    tick).  All-Aaren patterns accept any chunk (masked positions are
+    ⊕-identity in the prefix scan); RG-LRU/SSD carries advance strictly
+    token-by-token, so mixed patterns require ``chunk == 1``.
     """
 
     def __init__(self, api: ModelAPI, params: Any, *, n_slots: int = 4,
+                 chunk: int | None = None,
                  sampler: Callable = greedy_sampler,
                  key: jax.Array | None = None):
         pattern = api.cfg.effective_pattern()
@@ -100,76 +183,155 @@ class StreamingEngine:
                 "StreamingEngine requires position-free decode state "
                 "(aaren/rglru/ssd mixers only); use generate() for "
                 "KV-cache models.")
+        pure_aaren = all(m == "aaren" for m in pattern)
+        if chunk is None:
+            chunk = 16 if pure_aaren else 1
+        if chunk > 1 and not pure_aaren:
+            raise ValueError(
+                f"chunk={chunk} needs an all-aaren pattern; rglru/ssd "
+                "carries advance one token at a time (use chunk=1).")
         self.api = api
         self.params = params
         self.n_slots = n_slots
+        self.chunk = chunk
         self.sampler = sampler
         self.key = key if key is not None else jax.random.PRNGKey(0)
-        # cache_len is irrelevant for position-free states; use 1.
-        from repro.models.lm import lm_state_init
 
-        self.states = lm_state_init(api.cfg, n_slots, 1)
-        self.tok = jnp.zeros((n_slots, 1), jnp.int32)
+        from repro.models.lm import (
+            lm_prefill_chunk,
+            lm_state_batch_axes,
+            lm_state_init,
+        )
+
+        cfg = api.cfg
+        # cache_len is irrelevant for position-free states; use 1.
+        self._init_states = lm_state_init(cfg, n_slots, 1)
+        self.states = self._init_states
+        batch_axes = lm_state_batch_axes(cfg)
+
+        def step(pr, tokens, lengths, states):
+            """(S, C) tokens + per-slot valid lengths -> last-valid logits."""
+            mask = jnp.arange(chunk)[None, :] < lengths[:, None]
+            logits, new_states = lm_prefill_chunk(
+                cfg, pr, tokens, states, length_mask=mask)
+            last = jnp.take_along_axis(
+                logits, (lengths - 1)[:, None, None], axis=1)  # (S, 1, V)
+            return last, new_states
+
+        def reset(states, mask):
+            """Zero the carries of slots where mask (S,) is True."""
+
+            def leaf(batched, fresh, ax):
+                if ax < 0:
+                    return batched
+                sel = mask.reshape(
+                    (1,) * ax + (n_slots,) + (1,) * (batched.ndim - ax - 1))
+                return jnp.where(sel, fresh, batched)
+
+            return jax.tree.map(leaf, states, self._init_states, batch_axes)
+
+        self._step_fn = _jit(step)
+        self._reset_fn = _jit(reset)
+
         self.active: list[_Slot | None] = [None] * n_slots
-        self.queue: list[tuple[int, jax.Array, int]] = []
+        self.queue: list[tuple[int, np.ndarray, int]] = []
         self.finished: dict[int, list[int]] = {}
+        self.submitted_at: dict[int, float] = {}
+        self.first_token_at: dict[int, float] = {}
         self._next_id = 0
-        self._decode = jax.jit(
-            lambda pr, tok, st: api.decode_step(
-                pr, {"token": tok, "states": st}))
-        self._prefill = jax.jit(
-            lambda pr, toks: api.prefill(pr, {"tokens": toks,
-                                              "cache_len": 1}))
 
     # ------------------------------------------------------------------ API
-    def submit(self, prompt: jax.Array, max_new_tokens: int) -> int:
-        """Queue a request.  prompt: (P,) int32.  Returns request id."""
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        """Queue a request.  prompt: (P,) int32, P >= 1.  Returns its id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
         rid = self._next_id
         self._next_id += 1
-        self.queue.append((rid, jnp.asarray(prompt)[None], max_new_tokens))
+        self.queue.append((rid, prompt, int(max_new_tokens)))
+        self.submitted_at[rid] = time.perf_counter()
         return rid
 
-    def run(self) -> dict[int, list[int]]:
-        """Decode until queue + slots drain.  Returns {request_id: tokens}."""
-        self._fill_slots()
-        while any(s is not None for s in self.active):
-            self.key, sub = jax.random.split(self.key)
-            logits, self.states = self._decode(
-                self.params, self.tok, self.states)
-            self.tok = self.sampler(logits, sub)
-            for i, slot in enumerate(self.active):
-                if slot is None:
+    def warmup(self) -> float:
+        """Trace + compile both fixed-shape entry points before serving.
+
+        Pure warm-up: results are discarded, ``self.states`` is untouched.
+        Returns the wall seconds spent (≈ compile time).
+        """
+        t0 = time.perf_counter()
+        tokens = jnp.zeros((self.n_slots, self.chunk), jnp.int32)
+        lengths = jnp.ones((self.n_slots,), jnp.int32)
+        last, states = self._step_fn(self.params, tokens, lengths, self.states)
+        states = self._reset_fn(states, jnp.zeros((self.n_slots,), bool))
+        jax.block_until_ready((last, states))
+        return time.perf_counter() - t0
+
+    def step(self) -> int:
+        """One engine tick: admit, advance the mixed batch, sample.
+
+        Returns the number of tokens emitted this tick (0 when idle).
+        """
+        self._admit()
+        if not any(s is not None for s in self.active):
+            return 0
+
+        tokens = np.zeros((self.n_slots, self.chunk), np.int32)
+        lengths = np.ones((self.n_slots,), np.int32)
+        for i, slot in enumerate(self.active):
+            if slot is None:
+                continue
+            if slot.pending is not None:      # mid-prefill: feed next chunk
+                take = min(slot.pending.size, self.chunk)
+                tokens[i, :take] = slot.pending[:take]
+                lengths[i] = take
+            else:                             # decoding: feed last sample
+                tokens[i, 0] = slot.last_token
+
+        last, self.states = self._step_fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            self.states)
+
+        emitted = 0
+        for i, slot in enumerate(self.active):
+            if slot is None:
+                continue
+            if slot.pending is not None:
+                slot.pending = slot.pending[int(lengths[i]):]
+                if slot.pending.size:         # prompt not done — no sample
                     continue
-                slot.tokens.append(int(self.tok[i, 0]))
-                slot.remaining -= 1
-                if slot.remaining <= 0:
-                    self.finished[slot.request_id] = slot.tokens
-                    self.active[i] = None
-            self._fill_slots()
+                slot.pending = None
+            tok = self.sampler(
+                last[i:i + 1],
+                request_key(self.key, slot.request_id, slot.n_sampled))
+            t = int(tok[0, 0])
+            if not slot.tokens:
+                self.first_token_at[slot.request_id] = time.perf_counter()
+            slot.last_token = t
+            slot.tokens.append(t)
+            slot.n_sampled += 1
+            slot.remaining -= 1
+            emitted += 1
+            if slot.remaining <= 0:
+                self.finished[slot.request_id] = slot.tokens
+                self.active[i] = None
+        return emitted
+
+    def run(self) -> dict[int, list[int]]:
+        """Serve until queue + slots drain.  Returns {request_id: tokens}."""
+        while self.queue or any(s is not None for s in self.active):
+            self.step()
         return self.finished
 
     # ------------------------------------------------------------ internals
-    def _fill_slots(self):
+    def _admit(self):
+        """Move queued requests into free slots; reset their carries once."""
+        freed = np.zeros((self.n_slots,), bool)
         for i in range(self.n_slots):
             if self.active[i] is not None or not self.queue:
                 continue
             rid, prompt, max_new = self.queue.pop(0)
-            logits, fresh = self._prefill(self.params, prompt)
-            self._insert_slot(i, fresh)
-            # Split per fill: reusing self.key un-split would sample every
-            # refilled slot's first token with the same randomness.
-            self.key, sub = jax.random.split(self.key)
-            first = self.sampler(logits[:, -1:], sub)
-            self.tok = self.tok.at[i].set(first[0])
-            self.active[i] = _Slot(rid, [int(first[0, 0])], max_new - 1)
-
-    def _insert_slot(self, slot: int, fresh_states: Any):
-        """states[..., slot, ...] <- fresh (B=1) state, per leaf."""
-
-        def insert(batched, single):
-            ax = _batch_axis(single.shape, batched.shape, self.n_slots)
-            idx = tuple([slice(None)] * ax + [slot])
-            return batched.at[idx].set(
-                jnp.squeeze(single, axis=ax).astype(batched.dtype))
-
-        self.states = jax.tree.map(insert, self.states, fresh_states)
+            self.active[i] = _Slot(request_id=rid, pending=prompt,
+                                   tokens=[], remaining=max_new)
+            freed[i] = True
+        if freed.any():
+            self.states = self._reset_fn(self.states, jnp.asarray(freed))

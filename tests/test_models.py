@@ -72,6 +72,40 @@ def test_prefill_then_decode_matches_full_forward(arch, rng):
         rtol=2e-4, atol=2e-4)
 
 
+def test_chunked_prefill_matches_one_shot(rng):
+    """lm_prefill_chunk over ragged fixed-shape chunks == one-shot prefill:
+    same per-position logits and same final carry — the serving engine's
+    fixed-shape-step correctness invariant."""
+    from repro.models.lm import lm_prefill_chunk, lm_state_init
+
+    cfg = smoke_config("phi3-mini-3.8b", n_layers=3, d_model=64, d_ff=128,
+                       vocab=64)
+    api = build(cfg)
+    params = api.init(rng)
+    n, chunk = 11, 4  # ragged: last chunk holds 3 valid + 1 padded position
+    toks = jax.random.randint(jax.random.fold_in(rng, 1), (2, n), 0,
+                              cfg.vocab)
+    logits_full, states_full = api.prefill(
+        params, {"tokens": toks, "cache_len": 1})
+
+    states = lm_state_init(cfg, 2, 1)
+    got = []
+    for lo in range(0, n, chunk):
+        valid = min(chunk, n - lo)
+        block = jnp.zeros((2, chunk), jnp.int32)
+        block = block.at[:, :valid].set(toks[:, lo:lo + valid])
+        mask = (jnp.arange(chunk) < valid)[None, :].repeat(2, axis=0)
+        logits, states = lm_prefill_chunk(cfg, params, block, states,
+                                          length_mask=mask)
+        got.append(logits[:, :valid])
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(got, axis=1)), np.asarray(logits_full),
+        rtol=2e-4, atol=2e-4)
+    for a, b in zip(jax.tree.leaves(states), jax.tree.leaves(states_full)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
 def test_whisper_prefill_decode(rng):
     """Enc-dec streaming: decode continues the prefilled decoder state."""
     cfg = smoke_config("whisper-medium", compute_dtype="float32",

@@ -1,13 +1,16 @@
-"""Serving tests: wave generation, continuous batching, the paper's
-constant-memory / linear-time claims measured literally."""
+"""Serving tests: wave generation, chunked-prefill continuous batching, the
+paper's constant-memory / linear-time claims measured literally."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.serving.engine as engine_mod
 from repro.configs import smoke_config
+from repro.core.scan_attention import combine, make_empty_state, make_leaf_state, readout
 from repro.models.factory import build
+from repro.models.lm import lm_state_batch_axes
 from repro.serving import StreamingEngine, decode_state_bytes, generate
 from repro.serving.sampler import greedy_sampler, temperature_sampler
 
@@ -99,6 +102,163 @@ def test_constant_memory_claim(aaren_model):
     _, kv_short = generate(api_kv, params_kv, p1, 4)
     _, kv_long = generate(api_kv, params_kv, p1, 32)
     assert decode_state_bytes(kv_long) > decode_state_bytes(kv_short)
+
+
+def test_streaming_matches_wave_temperature(aaren_model, rng):
+    """Seeded temperature sampling: streaming == wave, token for token.
+
+    Sampling keys are derived per (request, step), never from engine
+    scheduling, so the two engines must agree exactly."""
+    api, params = aaren_model
+    sampler = temperature_sampler(0.8, top_k=8)
+    prompts = jax.random.randint(rng, (3, 6), 0, 64)
+    key = jax.random.PRNGKey(7)
+    toks, _ = generate(api, params, prompts, 6, sampler=sampler, key=key)
+    eng = StreamingEngine(api, params, n_slots=3, sampler=sampler, key=key)
+    rids = [eng.submit(prompts[i], 6) for i in range(3)]
+    out = eng.run()
+    for i, rid in enumerate(rids):
+        assert out[rid] == [int(x) for x in toks[i]], f"request {i} diverged"
+
+
+def test_midflight_refill_unequal_max_new(aaren_model, rng):
+    """Mixed prompt lengths AND unequal max_new_tokens: slots free at
+    different ticks, refills prefill over multiple chunks while other slots
+    keep decoding — every request must still match its dedicated run."""
+    api, params = aaren_model
+    plens = [3, 9, 17, 4, 33]
+    news = [2, 7, 3, 5, 4]
+    prompts = [jax.random.randint(jax.random.fold_in(rng, i), (l,), 0, 64)
+               for i, l in enumerate(plens)]
+    solo = []
+    for p, n in zip(prompts, news):
+        t, _ = generate(api, params, p[None], n)
+        solo.append([int(x) for x in t[0]])
+    eng = StreamingEngine(api, params, n_slots=2, chunk=4)
+    rids = [eng.submit(p, n) for p, n in zip(prompts, news)]
+    out = eng.run()
+    for i, rid in enumerate(rids):
+        assert out[rid] == solo[i], f"request {i} diverged after refill"
+
+
+def test_one_trace_per_entry_point(aaren_model, rng, monkeypatch):
+    """The recompile-storm regression: serving mixed prompt lengths
+    (1..11 tokens, chunk 4) traces each jitted engine function exactly once.
+    The old engine re-traced its prefill for every distinct prompt length."""
+    api, params = aaren_model
+    counts = {}
+    real_jit = jax.jit
+
+    def counting_jit(fn):
+        counts[fn.__name__] = 0
+
+        def wrapped(*a, **k):
+            counts[fn.__name__] += 1
+            return fn(*a, **k)
+
+        wrapped.__name__ = fn.__name__
+        return real_jit(wrapped)
+
+    monkeypatch.setattr(engine_mod, "_jit", counting_jit)
+    eng = StreamingEngine(api, params, n_slots=2, chunk=4)
+    eng.warmup()
+    for i, plen in enumerate([1, 3, 4, 7, 11, 2]):
+        eng.submit(jax.random.randint(
+            jax.random.fold_in(rng, i), (plen,), 0, 64), 5)
+    eng.run()
+    assert counts == {"step": 1, "reset": 1}, counts
+
+
+def test_state_reset_batch_axis_at_nslots_eq_nheads(rng):
+    """Slot addressing must come from explicit batch-axis metadata: with
+    n_slots == n_heads every (B, H) state leaf is square and a shape-matching
+    heuristic can zero a *head* instead of a *slot*."""
+    cfg = smoke_config("phi3-mini-3.8b", n_layers=2, d_model=64, d_ff=128,
+                       vocab=64, n_heads=4, n_kv_heads=4, head_dim=16)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = StreamingEngine(api, params, n_slots=cfg.n_heads)
+    poisoned = jax.tree.map(lambda a: jnp.full_like(a, 7.0), eng.states)
+    mask = jnp.asarray([False, False, True, False])
+    out = eng._reset_fn(poisoned, mask)
+    axes = jax.tree.leaves(lm_state_batch_axes(cfg))
+    fresh = jax.tree.leaves(eng._init_states)
+    for leaf, init, ax in zip(jax.tree.leaves(out), fresh, axes):
+        got = jnp.moveaxis(leaf, ax, 0)
+        want_fresh = jnp.moveaxis(init, ax, 0)
+        np.testing.assert_array_equal(got[2], want_fresh[2])  # slot 2 reset
+        for s in (0, 1, 3):                                   # others intact
+            np.testing.assert_array_equal(got[s], jnp.full_like(got[s], 7.0))
+
+
+def test_mixed_pattern_engine_chunk1(rng):
+    """rglru + aaren pattern (recurrentgemma): carries advance token-by-token,
+    so the engine runs at chunk=1 — and must still match wave generation."""
+    cfg = smoke_config("recurrentgemma-9b", d_model=64, d_ff=128, vocab=64,
+                       rnn_width=64)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="all-aaren"):
+        StreamingEngine(api, params, chunk=4)
+    eng = StreamingEngine(api, params, n_slots=2)
+    assert eng.chunk == 1
+    prompts = jax.random.randint(rng, (3, 4), 0, 64)
+    toks, _ = generate(api, params, prompts, 4)
+    rids = [eng.submit(prompts[i], 4) for i in range(3)]
+    out = eng.run()
+    for i, rid in enumerate(rids):
+        assert out[rid] == [int(x) for x in toks[i]]
+
+
+def test_readout_empty_state_is_defined():
+    """readout(empty) used to be 0/0 = nan with the default eps=0; the empty
+    index set attends to nothing, so its readout is 0 — and folding in one
+    real token afterwards must behave exactly as if the nan never lurked."""
+    empty = make_empty_state((2, 3), 4)
+    out = readout(empty)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+    s = jnp.ones((2, 3)) * 0.5
+    v = jnp.arange(24, dtype=jnp.float32).reshape(2, 3, 4)
+    one = combine(empty, make_leaf_state(s, v))
+    np.testing.assert_allclose(np.asarray(readout(one)), np.asarray(v),
+                               rtol=1e-6)
+
+
+def test_masked_chunk_matches_sliced(rng):
+    """⊕-identity masking: a fixed-shape chunk with a ragged valid prefix
+    must equal the same chunk sliced to the prefix, on both the layer-level
+    reference (aaren_attention_chunked) and the core carry path
+    (attention_many_to_many_with_state)."""
+    from repro.core.aaren import aaren_attention_chunked, empty_carry
+    from repro.core.scan_attention import attention_many_to_many_with_state
+
+    b, n, valid, h, g, d = 2, 6, 4, 4, 2, 8
+    q = jax.random.normal(rng, (h, d))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (b, n, g, d))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (b, n, g, d))
+    carry = empty_carry(b, h, d)
+    mask = jnp.broadcast_to(jnp.arange(n)[None, :] < valid, (b, n))
+    out_m, fin_m = aaren_attention_chunked(q, k, v, carry, 0.5, mask=mask)
+    out_s, fin_s = aaren_attention_chunked(
+        q, k[:, :valid], v[:, :valid], carry, 0.5)
+    np.testing.assert_allclose(np.asarray(out_m[:, :valid]),
+                               np.asarray(out_s), rtol=1e-6)
+    for a, c in zip(jax.tree.leaves(fin_m), jax.tree.leaves(fin_s)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-6)
+
+    qv = jax.random.normal(jax.random.fold_in(rng, 3), (b, d))
+    kv = k[:, :, 0]
+    vv = v[:, :, 0]
+    out_m, fin_m = attention_many_to_many_with_state(
+        qv, kv, vv, mask=mask)
+    out_s, fin_s = attention_many_to_many_with_state(
+        qv, kv[:, :valid], vv[:, :valid])
+    np.testing.assert_allclose(np.asarray(out_m[:, :valid]),
+                               np.asarray(out_s), rtol=1e-6)
+    for a, c in zip(jax.tree.leaves(fin_m), jax.tree.leaves(fin_s)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-6)
 
 
 def test_temperature_sampler_topk(rng):
