@@ -1,0 +1,134 @@
+"""Context-parallelism benchmark: tokens/s and per-device peak activation
+bytes vs ``seq`` mesh-axis size at fixed global N, on emulated CPU devices.
+
+Writes ``BENCH_context.json``.  The claim under test (DESIGN.md
+§Context-parallelism): each device materialises only its 1/P sequence shard
+— activations shrink ~1/P per device — while the cross-device traffic is one
+``(m, u, w)`` carry per boundary, so the memory win is not bought with an
+activation-sized collective.
+
+Peak activation bytes come from XLA's ``compiled.memory_analysis()``
+(``temp_size_in_bytes`` of the SPMD per-device executable: the non-I/O
+buffers, i.e. activations + workspace).  Throughput on *emulated* devices is
+reported for completeness but is not a hardware claim — 8 fake devices share
+one physical CPU, so tokens/s stays roughly flat while the per-device bytes
+drop.
+
+This module keeps its import side-effect free: the 8-device XLA flag must be
+set before jax initialises, so ``run()`` (the ``benchmarks/run.py`` harness
+hook) re-executes this file as a subprocess with the flag in the
+environment, mirroring how launch/dryrun.py forces 512 hosts.
+
+Usage::
+
+    python benchmarks/run.py --only context         # harness (subprocess)
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python benchmarks/bench_context.py   # direct
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+SEQ_SIZES = (1, 2, 4, 8)
+OUT = "BENCH_context.json"
+
+
+def run():
+    """Harness hook: re-exec with 8 emulated devices, then emit the rows."""
+    from benchmarks.common import emit
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", ""))
+    subprocess.run([sys.executable, os.path.abspath(__file__)], check=True,
+                   env=env)
+    with open(OUT) as f:
+        data = json.load(f)
+    for point in data["points"]:
+        emit(f"context_seq{point['seq_axis']}_tokens_per_s", 0.0,
+             f"{point['tokens_per_s']:.0f}")
+        emit(f"context_seq{point['seq_axis']}_act_bytes_per_device", 0.0,
+             str(point["peak_activation_bytes_per_device"]))
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ArchConfig
+    from repro.distributed.context import (
+        ContextParallel, use_context_parallel)
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.factory import build
+    from repro.sharding import ShardingRules, use_rules
+
+    n_dev = len(jax.devices())
+    if n_dev < max(SEQ_SIZES):
+        raise SystemExit(
+            f"need {max(SEQ_SIZES)} devices, have {n_dev}; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+    cfg = ArchConfig(
+        name="bench-context", family="dense", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=4, d_ff=256, vocab=512, pattern=("attn",),
+        mlp_pattern=("swiglu",), attn_mode="aaren", param_dtype="float32",
+        compute_dtype="float32", remat="none")
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch_size, seq_len = 2, 2048  # global tokens fixed across seq sizes
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (batch_size, seq_len), 0, cfg.vocab)
+    batch = {"tokens": tokens}
+
+    points = []
+    for sp in SEQ_SIZES:
+        mesh = make_host_mesh(context_parallel=sp)
+        cp = ContextParallel(mesh)
+        with use_rules(ShardingRules(mesh)), use_context_parallel(cp):
+            step = jax.jit(jax.value_and_grad(
+                lambda p, b: api.loss(p, b)[0]))
+            compiled = step.lower(params, batch).compile()
+            mem = compiled.memory_analysis()
+            temp = int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+            loss, g = compiled(params, batch)  # warmup
+            jax.block_until_ready(g)
+            iters = 3
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                loss, g = compiled(params, batch)
+            jax.block_until_ready(g)
+            dt = (time.perf_counter() - t0) / iters
+        points.append({
+            "seq_axis": sp,
+            "tokens_per_s": batch_size * seq_len / dt,
+            "step_time_s": dt,
+            "peak_activation_bytes_per_device": temp,
+            "loss": float(loss),
+        })
+        print(f"seq={sp}: {points[-1]['tokens_per_s']:.0f} tok/s, "
+              f"{temp/1e6:.2f} MB/device temp, loss {float(loss):.4f}",
+              flush=True)
+
+    report = {
+        "config": {"model": cfg.name, "batch": batch_size,
+                   "seq_len": seq_len, "devices": n_dev,
+                   "kernel_mode": os.environ.get("REPRO_KERNEL_MODE",
+                                                 "auto")},
+        "points": points,
+    }
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {OUT}")
+
+    losses = [p["loss"] for p in points]
+    spread = max(losses) - min(losses)
+    assert spread < 1e-4, f"loss drifts across seq sizes: {losses}"
+
+
+if __name__ == "__main__":
+    main()

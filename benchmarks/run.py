@@ -9,6 +9,8 @@
     S4.5 parameter counts            -> bench_params
     kernel work-scaling              -> bench_kernels
     serving (tok/s + TTFT)           -> bench_serving  (BENCH_serving.json)
+    context parallelism              -> bench_context  (BENCH_context.json;
+                                        re-execs itself with 8 emulated devices)
 
 Prints ``name,us_per_call,derived`` CSV rows (aggregated at the end).
 ``--only serving`` runs a single module — the CI serving smoke step uses it.
@@ -21,6 +23,7 @@ import time
 import traceback
 
 from benchmarks import (
+    bench_context,
     bench_events,
     bench_kernels,
     bench_memory,
@@ -39,6 +42,7 @@ MODULES = [
     ("time", bench_time),
     ("kernels", bench_kernels),
     ("serving", bench_serving),
+    ("context", bench_context),
     ("tsc", bench_tsc),
     ("tsf", bench_tsf),
     ("events", bench_events),

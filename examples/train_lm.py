@@ -4,6 +4,12 @@ and an Aaren-vs-Transformer loss comparison at identical hyperparameters
 (the paper's protocol).
 
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--small]
+
+Context parallelism: ``--context-parallel P`` shards the sequence dimension
+over a ``seq`` mesh axis of size P (needs >= P devices; on CPU emulate with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  The loss curve is
+identical to the single-device run — only the activation footprint and the
+per-device scan length change (DESIGN.md §Context-parallelism).
 """
 
 import argparse
@@ -54,7 +60,8 @@ def train_one(attn_mode: str, args) -> list:
             LoopConfig(total_steps=args.steps, ckpt_dir=ckpt_dir,
                        save_every=max(args.steps // 4, 1),
                        log_every=max(args.steps // 10, 1),
-                       install_signal_handlers=False),
+                       install_signal_handlers=False,
+                       context_parallel=args.context_parallel),
             on_log=lambda s, m: print(
                 f"  [{attn_mode}] step {s:4d} loss {m['loss']:.4f} "
                 f"({m['step_time_s']*1e3:.0f} ms)"))
@@ -71,6 +78,8 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--small", action="store_true")
     ap.add_argument("--skip-baseline", action="store_true")
+    ap.add_argument("--context-parallel", type=int, default=1,
+                    help="size of the seq mesh axis (1 = off)")
     args = ap.parse_args()
 
     hist_aaren = train_one("aaren", args)

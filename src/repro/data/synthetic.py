@@ -7,10 +7,13 @@ algorithmic claims (Aaren ≈ Transformer parity; O(1) vs O(N) memory).
 
 Design points shared by all iterators:
 
-* **Determinism** — batch ``i`` of host ``h`` is a pure function of
-  ``(seed, h, i)``: restart-safe and byte-identical across runs.
-* **Per-host sharding** — each host draws only its slice of the global batch
-  (``host_id / num_hosts``), the standard multi-pod input pipeline layout.
+* **Determinism** — row ``r`` of batch ``i`` is a pure function of
+  ``(seed, i, r)`` with ``r`` a *global* row index: restart-safe,
+  byte-identical across runs, and independent of the host topology.
+* **Per-host sharding** — host ``h`` draws global rows
+  ``[h·B/H, (h+1)·B/H)``: the union of the host slices IS the single-host
+  global batch (tested in tests/test_training.py), so changing the host
+  count mid-training never changes the token stream.
 * **Restorable** — ``state()``/``restore()`` round-trip the batch counter;
   the train loop checkpoints it next to the params.
 """
@@ -59,23 +62,27 @@ class SyntheticLMIterator:
     def __iter__(self):
         return self
 
+    def _sample_row(self, i: int, row: int) -> np.ndarray:
+        """Row ``row`` (a *global* batch index) of batch ``i`` — a pure
+        function of ``(seed, i, row)``, so any host partitioning of the
+        global batch reproduces the identical stream."""
+        rng = np.random.default_rng((self.seed, i, row))
+        toks = np.zeros(self.seq_len, np.int64)
+        toks[0] = rng.integers(0, self._v)
+        unif = rng.random(self.seq_len)
+        for t in range(1, self.seq_len):
+            nxt = rng.choice(self._v, p=self._probs[toks[t - 1]])
+            if t > self.lag and unif[t] < self.copy_p:
+                nxt = toks[t - self.lag]
+            toks[t] = nxt
+        return toks
+
     def __next__(self) -> dict:
         i = self._count
         self._count += 1
-        rng = np.random.default_rng(
-            (self.seed, self.host_id, i))
         b = self.batch // self.num_hosts
-        toks = np.zeros((b, self.seq_len), np.int64)
-        toks[:, 0] = rng.integers(0, self._v, b)
-        unif = rng.random((b, self.seq_len))
-        for t in range(1, self.seq_len):
-            nxt = np.array([
-                rng.choice(self._v, p=self._probs[toks[j, t - 1]])
-                for j in range(b)])
-            if t > self.lag:
-                copy = unif[:, t] < self.copy_p
-                nxt = np.where(copy, toks[:, t - self.lag], nxt)
-            toks[:, t] = nxt
+        rows = range(self.host_id * b, (self.host_id + 1) * b)
+        toks = np.stack([self._sample_row(i, r) for r in rows])
         return {
             "tokens": toks.astype(np.int32),
             "loss_mask": np.ones((b, self.seq_len), np.float32),

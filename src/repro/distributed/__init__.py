@@ -1,5 +1,14 @@
-"""Distributed-optimization utilities: gradient compression, microbatching."""
+"""Distributed utilities: gradient compression, microbatching, context
+parallelism (cross-device prefix-scan attention over the `seq` mesh axis)."""
 
+from repro.distributed.context import (  # noqa: F401
+    ContextParallel,
+    context_parallel_session,
+    cp_aaren_prefix_attention,
+    cp_flash_mha,
+    current_cp,
+    use_context_parallel,
+)
 from repro.distributed.grad import (  # noqa: F401
     compress_gradients,
     dequantize_int8,

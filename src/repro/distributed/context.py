@@ -1,0 +1,399 @@
+"""Context parallelism: cross-device prefix-scan attention over a ``seq`` axis.
+
+The paper's claim (3) — the many-to-many attention output is an associative
+parallel prefix scan over ``(m, u, w)`` states — composes across devices
+exactly as it composes across Pallas blocks (App. A) and serving chunks
+(``lm_prefill_chunk``).  This module is the shards-on-a-mesh instance of
+that recurrence (DESIGN.md §Context-parallelism):
+
+* **Aaren scan mode** (:func:`cp_aaren_prefix_attention`): each device runs
+  the existing fused scan (``kops.aaren_prefix_attention`` with carry-in /
+  carry-out) on its local shard of the sequence.  The shard is *seeded* with
+  the ⊕-total of every earlier shard, obtained by an **exclusive cross-device
+  scan of the (m, u, w) carries**: a log₂(P)-step ``ppermute`` exchange under
+  the same ⊕ from ``scan_attention.combine``.  The per-boundary payload is
+  one carry — O(rows·(d+2)) floats — against the O(N·d) activations that
+  stay put; that asymmetry is the whole point of the subsystem.
+* **Softmax mode** (:func:`cp_flash_mha`): ring flash attention — K/V shards
+  rotate around the ``seq`` axis ring while each device folds one partial
+  softmax block per step into a running ``(m, u, w)`` accumulator (running
+  logsumexp is ``m + log u``), so causal/windowed softmax parity with
+  ``kops.flash_mha`` holds shard-by-shard.
+
+Gradients: the scan op carries a ``custom_vjp`` whose backward re-linearises
+the saved forward with ``jax.vjp``.  Transposing the forward's *prefix*
+``ppermute`` rounds yields exactly the mirrored *suffix* exchange (a
+``ppermute`` transpose is the same permutation with every edge reversed), and
+the inner ``kops.aaren_prefix_attention`` call hits its own custom VJP — the
+fused analytic reverse kernels of ``kernels/aaren_scan_bwd.py`` on the
+kernel path, recompute-autodiff on the jnp path.  The ring-flash backward is
+plain autodiff: the ring is an unrolled loop of linear ``ppermute`` ops plus
+the ⊕ algebra, so its transpose is the reverse-direction ring.
+
+Both entry points fall back to the single-device ``kops`` ops when no
+context-parallel session is active (or the ``seq`` axis has size 1), so model
+code can call them unconditionally.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.scan_attention import (
+    NEG_INF,
+    ScanState,
+    combine,
+    make_empty_state,
+    readout,
+)
+from repro.kernels import ops as kops
+
+SEQ_AXIS = "seq"
+
+
+@dataclasses.dataclass(frozen=True)
+class ContextParallel:
+    """Handle naming which mesh axis carries the sequence dimension."""
+
+    mesh: Mesh
+    axis: str = SEQ_AXIS
+
+    @property
+    def size(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def batch_axis(self, dim: int) -> str | None:
+        """Mesh axis for the leading batch dim inside the shard_map island.
+
+        Keeping the batch sharded over ``data`` (when present and divisible)
+        avoids an all-gather at the island boundary on combined data+context
+        parallel meshes; otherwise the batch dim rides along replicated.
+        """
+        if "data" in self.mesh.axis_names:
+            dp = int(self.mesh.shape["data"])
+            if dp > 1 and dim % dp == 0:
+                return "data"
+        return None
+
+
+_CTX = threading.local()
+
+
+def current_cp() -> ContextParallel | None:
+    return getattr(_CTX, "cp", None)
+
+
+@contextlib.contextmanager
+def use_context_parallel(cp: ContextParallel):
+    """Ambient-context activation, mirroring ``sharding.use_rules``.
+
+    Like ``use_rules`` (and ``REPRO_KERNEL_MODE`` in kernels/ops.py), the
+    ambient handle is read at **trace time**: it is not part of any jit
+    cache key, so a function jitted outside a session keeps its
+    single-device trace if called inside one later (and vice versa).  Build
+    the jitted step *inside* the session — the training loop enters the
+    session before its first step for exactly this reason.
+    """
+    prev = getattr(_CTX, "cp", None)
+    _CTX.cp = cp
+    try:
+        yield cp
+    finally:
+        _CTX.cp = prev
+
+
+@contextlib.contextmanager
+def context_parallel_session(seq: int):
+    """Build a host mesh with a ``seq`` axis and activate rules + dispatch.
+
+    The one-stop entry point for the training stack: constructs the mesh
+    (``launch.mesh.make_host_mesh``), installs the logical-axis sharding
+    rules (so ``constrain`` shards activation length dims over ``seq``) and
+    the context-parallel attention dispatch.  ``seq <= 1`` is a no-op scope.
+    """
+    if seq <= 1:
+        yield None
+        return
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import ShardingRules, use_rules
+
+    mesh = make_host_mesh(context_parallel=seq)
+    cp = ContextParallel(mesh)
+    with use_rules(ShardingRules(mesh)), use_context_parallel(cp):
+        yield cp
+
+
+# ---------------------------------------------------------------------------
+# Cross-device carry algebra (runs *inside* shard_map, per shard)
+# ---------------------------------------------------------------------------
+
+
+def shard_total(s: jax.Array, v: jax.Array) -> ScanState:
+    """⊕-total of one shard in a single cheap reduction (no scan).
+
+    ``(m, u, w) = (max s, Σ exp(s - m), Σ exp(s - m) v)`` — O(N·d) elementwise
+    work, so seeding the shards costs one reduction + the carry exchange
+    rather than a second full scan.  A fully ⊕-identity shard (every position
+    masked) must stay the identity: ``exp(NEG_INF - NEG_INF) = 1`` would
+    manufacture mass, hence the explicit guard.
+    """
+    m = jnp.max(s, axis=-1)
+    e = jnp.exp(s - m[..., None])
+    e = jnp.where((m == NEG_INF)[..., None], 0.0, e)
+    u = jnp.sum(e, axis=-1)
+    w = jnp.einsum("...n,...nd->...d", e, v)
+    return ScanState(m=m, u=u, w=w)
+
+
+def _shift_states(st: ScanState, shift: int, axis: str, axis_size: int,
+                  idx: jax.Array) -> ScanState:
+    """Receive the carry from ``shift`` ranks below; ⊕-identity at the edge.
+
+    ``ppermute`` hands devices without a sender *zeros*, which are not the
+    ⊕ identity (``m`` needs ``NEG_INF``), so the edge ranks are patched.
+    """
+    perm = [(i, i + shift) for i in range(axis_size - shift)]
+    recv = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), st)
+    has = idx >= shift
+    return ScanState(m=jnp.where(has, recv.m, NEG_INF),
+                     u=jnp.where(has, recv.u, 0.0),
+                     w=jnp.where(has, recv.w, 0.0))
+
+
+def device_exclusive_scan(total: ScanState, axis: str,
+                          axis_size: int) -> ScanState:
+    """Exclusive cross-device prefix scan of carries under ⊕.
+
+    One right-shift plus ⌈log₂ P⌉ doubling rounds of ``ppermute`` (the
+    Hillis–Steele / Blelloch-style log-step exchange): after the shift,
+    rank p holds T_{p-1}; round k folds in the carry from 2^k ranks below,
+    so rank p ends with E_p = T_0 ⊕ … ⊕ T_{p-1} (⊕-identity at rank 0).
+    Payload per round is one carry state per row — O(rows·(d+2)) floats,
+    independent of the shard length.
+    """
+    idx = jax.lax.axis_index(axis)
+    acc = _shift_states(total, 1, axis, axis_size, idx)
+    shift = 1
+    while shift < axis_size:
+        acc = combine(_shift_states(acc, shift, axis, axis_size, idx), acc)
+        shift *= 2
+    return acc
+
+
+def device_allreduce_state(total: ScanState, axis: str,
+                           axis_size: int) -> ScanState:
+    """⊕-allreduce of per-shard totals: the replicated global final carry.
+
+    ``all_gather`` + an ordered fold instead of ``pmax``/``psum`` trickery —
+    every step is differentiable (``pmax`` has no transpose rule), which the
+    custom-VJP backward relies on.  P is small (≤ mesh axis size), so the
+    O(P) fold is noise next to the local scans.
+    """
+    g = jax.tree.map(lambda x: jax.lax.all_gather(x, axis), total)
+    acc = ScanState(m=g.m[0], u=g.u[0], w=g.w[0])
+    for p in range(1, axis_size):
+        acc = combine(acc, ScanState(m=g.m[p], u=g.u[p], w=g.w[p]))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Context-parallel Aaren prefix attention (scan mode)
+# ---------------------------------------------------------------------------
+
+
+def _cp_scan_forward(s, v, m0, u0, w0, axis, axis_size):
+    """Per-shard forward: local total → carry exchange → seeded local scan.
+
+    Shapes are *local*: s (..., N/P), v (..., N/P, d); the incoming carry
+    (m0, u0, w0) is replicated across the ``seq`` axis.  Returns the local
+    output slice plus the replicated global final carry.
+    """
+    carry0 = ScanState(m=m0, u=u0, w=w0)
+    total = shard_total(s, v)
+    prefix = device_exclusive_scan(total, axis, axis_size)
+    seed = combine(carry0, prefix)
+    o, _ = kops.aaren_prefix_attention(s, v, seed)
+    fin = combine(carry0, device_allreduce_state(total, axis, axis_size))
+    return o, fin.m, fin.u, fin.w
+
+
+def _make_cp_scan_core(axis: str, axis_size: int):
+    """Build the custom-VJP per-shard op for one (axis, size) pair."""
+
+    def fwd_fn(s, v, m0, u0, w0):
+        return _cp_scan_forward(s, v, m0, u0, w0, axis, axis_size)
+
+    @jax.custom_vjp
+    def core(s, v, m0, u0, w0):
+        return fwd_fn(s, v, m0, u0, w0)
+
+    def core_fwd(s, v, m0, u0, w0):
+        # Save raw inputs (the jnp-path idiom of kernels/ops.py): the
+        # backward re-linearises the forward, which (a) transposes the
+        # prefix ppermutes into the mirrored suffix exchange and (b) enters
+        # the inner op's own custom VJP — the fused analytic reverse
+        # kernels on the Pallas path.
+        return fwd_fn(s, v, m0, u0, w0), (s, v, m0, u0, w0)
+
+    def core_bwd(res, g):
+        _, vjp = jax.vjp(fwd_fn, *res)
+        return vjp(g)
+
+    core.defvjp(core_fwd, core_bwd)
+    return core
+
+
+def cp_aaren_prefix_attention(
+    s: jax.Array,
+    v: jax.Array,
+    carry: ScanState | None = None,
+    *,
+    cp: ContextParallel | None = None,
+):
+    """Context-parallel drop-in for ``kops.aaren_prefix_attention``.
+
+    s: (..., N) scores; v: (..., N, d) values; carry leaves m,u (...,),
+    w (..., d).  N must divide by the ``seq`` axis size.  Falls back to the
+    single-device fused op when no session is active.  Returns
+    (o: (..., N, d), replicated global final ScanState).
+    """
+    cp = cp if cp is not None else current_cp()
+    if cp is None or cp.size == 1:
+        return kops.aaren_prefix_attention(s, v, carry)
+    n = s.shape[-1]
+    if n % cp.size:
+        raise ValueError(
+            f"sequence length {n} is not divisible by seq axis size {cp.size}")
+    batch_shape = s.shape[:-1]
+    d = v.shape[-1]
+    if carry is None:
+        carry = make_empty_state(batch_shape, d)
+    s32 = s.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    m0 = carry.m.astype(jnp.float32)
+    u0 = carry.u.astype(jnp.float32)
+    w0 = carry.w.astype(jnp.float32)
+
+    bax = cp.batch_axis(batch_shape[0]) if batch_shape else None
+    lead = (bax,) + (None,) * (len(batch_shape) - 1)
+    in_specs = (P(*lead, cp.axis),          # s: length dim sharded
+                P(*lead, cp.axis, None),    # v
+                P(*lead), P(*lead), P(*lead, None))  # carry: replicated
+    out_specs = (P(*lead, cp.axis, None),   # o
+                 P(*lead), P(*lead), P(*lead, None))
+    fn = shard_map(_make_cp_scan_core(cp.axis, cp.size), mesh=cp.mesh,
+                   in_specs=in_specs, out_specs=out_specs, check_rep=False)
+    o, m_f, u_f, w_f = fn(s32, v32, m0, u0, w0)
+    return o.astype(v.dtype), ScanState(m=m_f, u=u_f, w=w_f)
+
+
+# ---------------------------------------------------------------------------
+# Ring flash attention (softmax mode)
+# ---------------------------------------------------------------------------
+
+
+def _expand_kv(x: jax.Array, n_heads: int) -> jax.Array:
+    """(B, N, G, d) -> (B, N, H, d); head h reads kv head h // (H/G)."""
+    b, n, g, d = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, n, g, n_heads // g, d))
+    return x.reshape(b, n, n_heads, d)
+
+
+def _ring_flash_local(q, k, v, axis, axis_size, causal, window, scale):
+    """Per-shard ring flash: rotate K/V shards, fold blocks under ⊕.
+
+    q: (B, Nl, H, d) local queries; k/v: (B, Nl, G, d) local keys/values.
+    Step t folds the block attention of the local queries against the K/V
+    shard currently held (shard ``idx - t mod P``, masked by *absolute*
+    causal/window position) into a running ``(m, u, w)`` accumulator — the
+    running logsumexp is ``m + log u``.  K/V rotate in their compact G-head
+    layout, so the wire payload per step is O(Nl·G·d), and only P−1 of the
+    P steps move data.
+    """
+    idx = jax.lax.axis_index(axis)
+    b, nl, h, d = q.shape
+    q32 = q.astype(jnp.float32)
+    q_pos = idx * nl + jnp.arange(nl)
+    acc = ScanState(
+        m=jnp.full((b, h, nl), NEG_INF, jnp.float32),
+        u=jnp.zeros((b, h, nl), jnp.float32),
+        w=jnp.zeros((b, h, nl, d), jnp.float32),
+    )
+    ring = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+    k_cur, v_cur = k, v
+    for step in range(axis_size):
+        src = jnp.mod(idx - step, axis_size)  # shard id currently held
+        k_pos = src * nl + jnp.arange(nl)
+        kf = _expand_kv(k_cur, h).astype(jnp.float32)
+        vf = _expand_kv(v_cur, h).astype(jnp.float32)
+        srt = jnp.einsum("bqhd,bkhd->bhqk", q32, kf) * scale
+        allowed = jnp.ones((nl, nl), bool)
+        if causal:
+            allowed = allowed & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            allowed = allowed & (k_pos[None, :] > q_pos[:, None] - window)
+        srt = jnp.where(allowed[None, None], srt, NEG_INF)
+        blk_m = jnp.max(srt, axis=-1)
+        e = jnp.exp(srt - blk_m[..., None])
+        e = jnp.where((blk_m == NEG_INF)[..., None], 0.0, e)  # empty block
+        blk = ScanState(
+            m=blk_m,
+            u=jnp.sum(e, axis=-1),
+            w=jnp.einsum("bhqk,bkhd->bhqd", e, vf),
+        )
+        acc = combine(acc, blk)
+        if step != axis_size - 1:
+            k_cur, v_cur = jax.tree.map(
+                lambda x: jax.lax.ppermute(x, axis, ring), (k_cur, v_cur))
+    o = readout(acc)  # (B, H, Nl, d); empty rows (fully masked) read 0
+    return jnp.swapaxes(o, 1, 2)
+
+
+def cp_flash_mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    cp: ContextParallel | None = None,
+) -> jax.Array:
+    """Context-parallel drop-in for ``kops.flash_mha`` (self-attention).
+
+    q: (B, N, H, d); k/v: (B, N, G, d) — sequence-major framework layout,
+    N divisible by the ``seq`` axis size.  Falls back to the single-device
+    flash op when no session is active.
+    """
+    cp = cp if cp is not None else current_cp()
+    if cp is None or cp.size == 1:
+        return kops.flash_mha(q, k, v, causal=causal, window=window,
+                              scale=scale)
+    b, n, _, d = q.shape
+    if k.shape[1] != n:
+        raise ValueError("ring flash is self-attention: Nq must equal Nk")
+    if n % cp.size:
+        raise ValueError(
+            f"sequence length {n} is not divisible by seq axis size {cp.size}")
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d))
+
+    bax = cp.batch_axis(b)
+    spec = P(bax, cp.axis, None, None)
+    axis, size, scale_f = cp.axis, cp.size, float(scale)
+
+    def local(q_, k_, v_):
+        return _ring_flash_local(q_, k_, v_, axis, size, causal, window,
+                                 scale_f)
+
+    fn = shard_map(local, mesh=cp.mesh, in_specs=(spec, spec, spec),
+                   out_specs=spec, check_rep=False)
+    return fn(q, k, v).astype(v.dtype)

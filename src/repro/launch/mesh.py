@@ -8,7 +8,15 @@ Axes are logical roles (DESIGN.md §6):
 
 * ``pod``   — data parallelism across pods over DCN (slowest links);
 * ``data``  — intra-pod FSDP: batch sharding + ZeRO-style weight sharding;
+* ``seq``   — context parallelism: the sequence dimension of activations
+  (DESIGN.md §Context-parallelism).  Carved out of the ``data`` plane —
+  carry exchanges are tiny (one ``(m, u, w)`` state per boundary) but
+  latency-sensitive, so they ride the same ICI links as FSDP traffic;
 * ``model`` — tensor/expert parallelism on the fastest ICI links.
+
+``context_parallel=1`` keeps a size-1 ``seq`` axis in the mesh: the sharding
+rules then resolve ``seq``-named dims to a no-op sharding and every
+downstream spec stays mesh-shape independent.
 """
 
 from __future__ import annotations
@@ -16,17 +24,30 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, context_parallel: int = 1):
+    cp = context_parallel
+    if 16 % cp:
+        raise ValueError(f"context_parallel={cp} must divide the 16-wide "
+                         "data plane")
+    if multi_pod:
+        shape = (2, 16 // cp, cp, 16)
+        axes = ("pod", "data", "seq", "model")
+    else:
+        shape = (16 // cp, cp, 16)
+        axes = ("data", "seq", "model")
     import numpy as np
 
     n = int(np.prod(shape))
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
-def make_host_mesh(model_parallel: int = 1):
+def make_host_mesh(model_parallel: int = 1, context_parallel: int = 1):
     """Mesh over whatever devices exist (tests / single-host examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n // model_parallel, model_parallel),
-                         ("data", "model"))
+    denom = model_parallel * context_parallel
+    if n % denom:
+        raise ValueError(
+            f"{n} devices not divisible by model_parallel={model_parallel} "
+            f"x context_parallel={context_parallel}")
+    return jax.make_mesh((n // denom, context_parallel, model_parallel),
+                         ("data", "seq", "model"))

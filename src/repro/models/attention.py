@@ -24,6 +24,7 @@ from repro.core import aaren as aaren_core
 from repro.core import softmax_attention as soft
 from repro.core.rope import rope_for_positions
 from repro.core.scan_attention import NEG_INF, ScanState, mask_to_identity
+from repro.distributed import context as dctx
 from repro.kernels import ops as kops
 from repro.models.param import ParamSpec
 
@@ -90,9 +91,11 @@ def softmax_sequence(p: dict, x: jax.Array, cfg: ArchConfig, *,
     positions = jnp.arange(n) + pos_offset
     q = rope_for_positions(q, positions[None, :], cfg.rope_theta)
     k = rope_for_positions(k, positions[None, :], cfg.rope_theta)
-    # flash_mha dispatches: Pallas flash kernel on TPU, masked softmax jnp
-    # reference elsewhere (CPU smoke tests + dry-run lowering).
-    ctx = kops.flash_mha(q, k, v, causal=True, window=window)
+    # cp_flash_mha: ring flash attention when a context-parallel session is
+    # active (the sequence dim lives on the `seq` mesh axis); otherwise the
+    # usual flash_mha dispatch — Pallas flash kernel on TPU, masked softmax
+    # jnp reference elsewhere (CPU smoke tests + dry-run lowering).
+    ctx = dctx.cp_flash_mha(q, k, v, causal=True, window=window)
     y = _proj_out(p, ctx)
 
     cl = cache_len if cache_len is not None else n
@@ -168,11 +171,14 @@ def _aaren_attention_dispatch(q_heads, k, v, scale):
     """Scores + per-head values, then the dispatched prefix-scan attention.
 
     Pallas ``aaren_scan`` kernel on TPU; ``lax.associative_scan`` elsewhere.
-    Same semantics as :func:`aaren_core.aaren_attention_parallel`.
+    Under a context-parallel session the sequence dim additionally shards
+    over the ``seq`` mesh axis: each device scans its shard and the carries
+    travel the log-step exchange (``distributed/context.py``).  Same
+    semantics as :func:`aaren_core.aaren_attention_parallel` in every mode.
     """
     s = aaren_core._scores(q_heads, k, scale)  # (B, H, N) f32
     vh = aaren_core._values_per_head(v, q_heads.shape[0]).astype(jnp.float32)
-    o, final = kops.aaren_prefix_attention(s, vh)  # (B, H, N, d)
+    o, final = dctx.cp_aaren_prefix_attention(s, vh)  # (B, H, N, d)
     return jnp.swapaxes(o, 1, 2).astype(v.dtype), final
 
 

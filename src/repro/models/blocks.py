@@ -26,8 +26,16 @@ from repro.models.layers import (
     norm_specs,
     swiglu_specs,
 )
+from repro.sharding import constrain
 
 Sig = tuple[str, str]
+
+# Residual-stream logical axes (shared with models/lm.py).  Under context
+# parallelism the `seq` entry maps the length dim to the `seq` mesh axis, so
+# re-asserting it at the mixer/MLP seams keeps GSPMD from round-tripping the
+# residual stream through a gathered layout between the sharded mixer island
+# and the position-wise MLP.
+RESIDUAL_AXES = ("batch", "seq", "act_embed")
 
 ZERO_AUX = {"load_balance_loss": 0.0, "dropped_frac": 0.0}
 
@@ -198,8 +206,9 @@ def block_sequence(p: dict, x: jax.Array, sig: Sig, cfg: ArchConfig, *,
     """Full-sequence block.  Returns (x, state_or_None, aux)."""
     h = apply_norm(p["norm1"], x, cfg.norm)
     y, state = _apply_mixer_sequence(p["mixer"], h, sig, cfg, cache_len)
-    x = x + y
+    x = constrain(x + y, RESIDUAL_AXES)
     x, aux = _apply_mlp(p, x, sig, cfg, want_aux)
+    x = constrain(x, RESIDUAL_AXES)
     return x, (state if collect_state else None), aux
 
 

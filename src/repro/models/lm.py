@@ -40,7 +40,9 @@ from repro.models.layers import (
 from repro.models.param import ParamSpec, stack_specs
 from repro.sharding import constrain
 
-ACT_AXES = ("batch", "seq", "act_embed")
+# Residual-stream logical axes; under a context-parallel mesh the `seq`
+# entry shards the token dim across devices (see distributed/context.py).
+ACT_AXES = blocks.RESIDUAL_AXES
 
 
 def _sigs(cfg: ArchConfig) -> list[tuple[str, str]]:
@@ -403,6 +405,10 @@ def lm_loss(cfg: ArchConfig, params: dict, batch: dict,
     logits = logits[:, :-1]
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    # Keep the per-token loss sequence-sharded under context parallelism
+    # (N-1 may not divide the seq axis — the divisibility fallback then
+    # replicates, which is still correct, just not free).
+    nll = constrain(nll, ("batch", "seq"))
     mask = batch.get("loss_mask")
     mask = jnp.ones_like(nll) if mask is None else mask[:, 1:].astype(nll.dtype)
     ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -9,4 +9,5 @@ from repro.sharding.rules import (  # noqa: F401
     param_shardings,
     spec_for_axes,
     use_rules,
+    validate_rules,
 )

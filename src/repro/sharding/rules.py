@@ -12,6 +12,9 @@ fallback* that lets one rule table serve GQA kv_heads=1..32, expert counts
 Mesh axes (launch/mesh.py):
   ``pod``    — inter-pod data parallelism (DCN-linked, slowest);
   ``data``   — intra-pod FSDP: batch + parameter/optimizer-state sharding;
+  ``seq``    — context parallelism: activation *length* dims shard here
+               (DESIGN.md §Context-parallelism); meshes without the axis
+               (or pre-seq checkpoint tooling) fall back to replication;
   ``model``  — tensor/expert parallelism (fastest links).
 """
 
@@ -29,33 +32,37 @@ from repro.models.param import ParamSpec, is_spec
 
 # Candidate lists: each entry is a tuple of mesh axes to use *jointly*.
 # First fit (divisibility + availability) wins; no fit -> replicated.
+# NOTE every entry must be a *tuple of axis names*: a bare string entry like
+# "data" iterates as single characters through the fallback machinery and
+# silently replicates (each 1-char "axis" misses the mesh) — see
+# validate_rules below, which rejects that shape at import time.
 DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
     # --- parameters -------------------------------------------------------
-    "embed": ((("data",)), ),             # FSDP shard of every weight matrix
-    "vocab": ((("model",)), ),            # TP over the huge embed/unembed
-    "mlp": ((("model",)), ),              # TP over FFN hidden
-    "moe_mlp": ((("model",)), ),          # TP over per-expert hidden
-    "heads": ((("model",)), ),            # TP over attention heads
-    "kv_heads": ((("model",)), ),         # TP over kv heads (GQA: may fall back)
+    "embed": (("data",),),                # FSDP shard of every weight matrix
+    "vocab": (("model",),),               # TP over the huge embed/unembed
+    "mlp": (("model",),),                 # TP over FFN hidden
+    "moe_mlp": (("model",),),             # TP over per-expert hidden
+    "heads": (("model",),),               # TP over attention heads
+    "kv_heads": (("model",),),            # TP over kv heads (GQA: may fall back)
     "head_dim": (),                       # never sharded
-    "experts": ((("model",)), ),          # expert parallelism
+    "experts": (("model",),),             # expert parallelism
     "experts_router": (),                 # router stays replicated
     "layers": (),                         # scan-stacking axis
-    "rnn": ((("model",)), ),              # RG-LRU width
+    "rnn": (("model",),),                 # RG-LRU width
     "rnn_blocks": (),
-    "ssm_in": ((("model",)), ),
-    "ssm_conv": ((("model",)), ),
-    "ssm_inner": ((("model",)), ),
-    "ssm_heads": ((("model",)), ),
+    "ssm_in": (("model",),),
+    "ssm_conv": (("model",),),
+    "ssm_inner": (("model",),),
+    "ssm_heads": (("model",),),
     # --- activations ------------------------------------------------------
-    "batch": (("pod", "data"), (("data",))),
-    "seq": (),                            # sequence stays unsharded (no SP yet)
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (("seq",),),                   # context parallelism over length
     "act_embed": (),                      # residual stream replicated on model
-    "act_heads": ((("model",)), ),
-    "act_mlp": ((("model",)), ),
-    "act_experts": ((("model",)), ),
-    "act_vocab": ((("model",)), ),
-    "act_data": ((("data",)), ),          # weight-stationary decode layouts
+    "act_heads": (("model",),),
+    "act_mlp": (("model",),),
+    "act_experts": (("model",),),
+    "act_vocab": (("model",),),
+    "act_data": (("data",),),             # weight-stationary decode layouts
 }
 
 # Multi-pod: identical table (batch already prefers ("pod","data") jointly and
@@ -63,8 +70,37 @@ DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
 MULTIPOD_RULES = DEFAULT_RULES
 
 
+def validate_rules(rules: dict) -> None:
+    """Structural sanity check: every rule is a tuple of tuples of names.
+
+    Guards against the two quiet misconfigurations this table invites:
+    ``"seq": ("data",)`` (a tuple of *strings* — each string then plays the
+    role of a candidate entry) and ``"seq": (("data"))`` (parens collapse to
+    a bare string whose characters iterate as candidates).  Both previously
+    degraded to silent replication; now they raise at import.
+    """
+    for name, entries in rules.items():
+        if not isinstance(entries, tuple):
+            raise TypeError(
+                f"rule {name!r}: candidate list must be a tuple, "
+                f"got {type(entries).__name__}")
+        for e in entries:
+            if not (isinstance(e, tuple)
+                    and all(isinstance(a, str) for a in e)):
+                raise TypeError(
+                    f"rule {name!r}: entry {e!r} must be a tuple of "
+                    "mesh-axis names, e.g. ('data',) or ('pod', 'data')")
+
+
+validate_rules(DEFAULT_RULES)
+
+
 def _normalize(entry):
-    """Rule entries may be written as 'axis' or ('a','b') — normalise."""
+    """Rule entries may be written as 'axis' or ('a','b') — normalise.
+
+    DEFAULT_RULES is validated to the canonical tuple-of-tuples shape, but
+    ad-hoc rule tables built in tests/tools may still use bare strings.
+    """
     if isinstance(entry, str):
         return (entry,)
     return tuple(entry)

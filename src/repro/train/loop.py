@@ -28,6 +28,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import Checkpointer, latest_step, restore_checkpoint
+from repro.distributed.context import context_parallel_session
 from repro.train.state import TrainState
 
 
@@ -40,6 +41,11 @@ class LoopConfig:
     straggler_k: float = 3.0
     seed: int = 0
     install_signal_handlers: bool = True
+    # Sequence (context) parallelism: size of the `seq` mesh axis.  > 1 runs
+    # every train_step inside a context-parallel session — host mesh with a
+    # seq axis, sharding rules installed, and attention dispatched to the
+    # cross-device prefix-scan / ring-flash paths (distributed/context.py).
+    context_parallel: int = 1
 
 
 @dataclasses.dataclass
@@ -90,43 +96,46 @@ def run_train_loop(
     hooks = _test_hooks or {}
 
     try:
-        while int(state.step) < cfg.total_steps and not preempt["flag"]:
-            step = int(state.step)
-            batch = next(data_iter)
-            key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
-            t0 = time.perf_counter()
-            state, metrics = train_step(state, batch, key)
-            jax.block_until_ready(state.params)
-            dt = time.perf_counter() - t0
-            if "sleep" in hooks and step in hooks["sleep"]:
-                dt += hooks["sleep"][step]  # injected straggler (tests)
+        # Context-parallel session (no-op scope when context_parallel <= 1):
+        # train_step traces inside it, so the mixers see the ambient mesh.
+        with context_parallel_session(cfg.context_parallel):
+            while int(state.step) < cfg.total_steps and not preempt["flag"]:
+                step = int(state.step)
+                batch = next(data_iter)
+                key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+                t0 = time.perf_counter()
+                state, metrics = train_step(state, batch, key)
+                jax.block_until_ready(state.params)
+                dt = time.perf_counter() - t0
+                if "sleep" in hooks and step in hooks["sleep"]:
+                    dt += hooks["sleep"][step]  # injected straggler (tests)
 
-            # straggler EWMA (skip the compile step)
-            if step > 0:
-                if ewma_t is None:
-                    ewma_t = dt
-                else:
-                    thresh = ewma_t + cfg.straggler_k * np.sqrt(ewma_var)
-                    if dt > thresh and ewma_var > 0:
-                        stragglers.append((step, dt, float(thresh)))
-                    delta = dt - ewma_t
-                    ewma_t += 0.1 * delta
-                    ewma_var = 0.9 * (ewma_var + 0.1 * delta * delta)
+                # straggler EWMA (skip the compile step)
+                if step > 0:
+                    if ewma_t is None:
+                        ewma_t = dt
+                    else:
+                        thresh = ewma_t + cfg.straggler_k * np.sqrt(ewma_var)
+                        if dt > thresh and ewma_var > 0:
+                            stragglers.append((step, dt, float(thresh)))
+                        delta = dt - ewma_t
+                        ewma_t += 0.1 * delta
+                        ewma_var = 0.9 * (ewma_var + 0.1 * delta * delta)
 
-            if step % cfg.log_every == 0:
-                m = {k: float(v) for k, v in metrics.items()}
-                m["step_time_s"] = dt
-                history.append((step, m))
-                if on_log:
-                    on_log(step, m)
+                if step % cfg.log_every == 0:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step_time_s"] = dt
+                    history.append((step, m))
+                    if on_log:
+                        on_log(step, m)
 
-            new_step = int(state.step)
-            if ckpt is not None and new_step % cfg.save_every == 0:
-                extra = {"data": data_iter.state()} if hasattr(
-                    data_iter, "state") else {}
-                ckpt.save_async(new_step, state, extra=extra)
-            if "crash_at" in hooks and new_step >= hooks["crash_at"]:
-                raise KeyboardInterrupt("injected crash")
+                new_step = int(state.step)
+                if ckpt is not None and new_step % cfg.save_every == 0:
+                    extra = {"data": data_iter.state()} if hasattr(
+                        data_iter, "state") else {}
+                    ckpt.save_async(new_step, state, extra=extra)
+                if "crash_at" in hooks and new_step >= hooks["crash_at"]:
+                    raise KeyboardInterrupt("injected crash")
 
         # ---- final / preemption checkpoint --------------------------------
         if ckpt is not None:

@@ -12,6 +12,7 @@ from repro.sharding import (
     ShardingRules,
     param_shardings,
     spec_for_axes,
+    validate_rules,
 )
 
 
@@ -80,6 +81,37 @@ def test_no_mesh_axis_reuse():
     """Two dims wanting the same mesh axis: only the first gets it."""
     assert _spec(("mlp", "moe_mlp"), (1024, 1024), data=16, model=16) \
         == P("model", None)
+
+
+def test_seq_axis_context_parallel():
+    """Activation length dims shard over `seq` when the mesh carries it and
+    degrade to replicated on seq-less (or size-mismatched) meshes."""
+    assert _spec(("batch", "seq", "act_embed"), (64, 4096, 1024),
+                 data=4, seq=4, model=1) == P("data", "seq", None)
+    # no seq axis on the mesh -> replicated length dim (pre-seq behaviour)
+    assert _spec(("batch", "seq", "act_embed"), (64, 4096, 1024),
+                 data=16, model=16) == P("data", None, None)
+    # indivisible length (e.g. the N-1 loss slice) -> divisibility fallback
+    assert _spec(("batch", "seq"), (64, 4095), data=4, seq=4, model=1) \
+        == P("data", None)
+
+
+def test_default_rules_structure():
+    """Every rule entry must be a tuple of tuples of axis names; the two
+    quiet misconfigurations (tuple-of-strings, parens collapsing to a bare
+    string) must raise."""
+    validate_rules(DEFAULT_RULES)  # the shipped table is canonical
+    for name, entries in DEFAULT_RULES.items():
+        assert isinstance(entries, tuple), name
+        for e in entries:
+            assert isinstance(e, tuple), (name, e)
+            assert all(isinstance(a, str) for a in e), (name, e)
+    with pytest.raises(TypeError):
+        validate_rules({"seq": ("data",)})      # tuple of strings
+    with pytest.raises(TypeError):
+        validate_rules({"seq": (("data"))})     # parens, not a tuple
+    with pytest.raises(TypeError):
+        validate_rules({"seq": [("data",)]})    # list, not a tuple
 
 
 def test_experts_to_model():

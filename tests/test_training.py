@@ -68,6 +68,54 @@ def test_int8_quantization_unbiased(rng):
                                atol=scale * 0.35)
 
 
+def test_int8_quantization_roundtrip_property():
+    """Property test over shapes/scales: quantize→dequantize round-trips
+    shape and dtype, every error is below one quantization step, the codes
+    are genuine int8, and repeated draws average back toward g (unbiased —
+    momentum must not accumulate quantization bias, DESIGN.md §6)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    given, settings, st = (hypothesis.given, hypothesis.settings,
+                           hypothesis.strategies)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        shape=st.sampled_from([(7,), (4, 5), (2, 3, 4), (1,), (128,)]),
+        log_scale=st.floats(-6.0, 4.0),
+    )
+    def check(seed, shape, log_scale):
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(
+            rng.standard_normal(shape) * 10.0 ** log_scale, jnp.float32)
+        key = jax.random.PRNGKey(seed)
+        q, scale = quantize_int8_stochastic(g, key)
+        assert q.shape == g.shape and q.dtype == jnp.int8
+        assert np.ndim(scale) == 0 and float(scale) > 0
+        back = q.astype(jnp.float32) * scale
+        assert back.shape == g.shape and back.dtype == g.dtype
+        # one stochastic-rounding step of error, never more
+        assert float(jnp.max(jnp.abs(back - g))) <= float(scale) * (1 + 1e-6)
+        # unbiasedness: the mean over independent keys approaches g
+        n = 64
+        acc = jnp.zeros_like(g)
+        for i in range(n):
+            qi, si = quantize_int8_stochastic(g, jax.random.fold_in(key, i))
+            acc = acc + qi.astype(jnp.float32) * si
+        # SE of a U(-.5,.5) rounding residual is scale/sqrt(12 n); 6 sigma
+        tol = float(scale) * 6.0 / np.sqrt(12 * n)
+        np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g),
+                                   atol=tol)
+
+    check()
+
+
+def test_int8_quantization_zero_gradient():
+    """All-zero g must survive the scale floor: finite scale, zero codes."""
+    q, scale = quantize_int8_stochastic(jnp.zeros((16,)), jax.random.PRNGKey(0))
+    assert np.isfinite(float(scale))
+    np.testing.assert_array_equal(np.asarray(q), np.zeros((16,), np.int8))
+
+
 def test_compression_modes(rng):
     g = {"a": jax.random.normal(rng, (32, 32)),
          "b": jax.random.normal(jax.random.fold_in(rng, 1), (8,))}
@@ -182,3 +230,35 @@ def test_data_iterator_determinism_and_restore():
     h1 = SyntheticLMIterator(vocab=128, seq_len=16, batch=4, seed=7,
                              host_id=1, num_hosts=2)
     assert not np.array_equal(next(h0)["tokens"], next(h1)["tokens"])
+
+
+def test_data_iterator_host_slices_union_is_global_batch():
+    """Concatenating every host's slice must reproduce the single-host
+    global batch exactly, batch after batch — the property that makes the
+    stream invariant to host-count changes (and lets the multi-host loop
+    resume on a different topology)."""
+    kw = dict(vocab=128, seq_len=24, batch=8, seed=11)
+    global_it = SyntheticLMIterator(**kw)
+    hosts = [SyntheticLMIterator(**kw, host_id=h, num_hosts=4)
+             for h in range(4)]
+    for _ in range(3):
+        ref = next(global_it)["tokens"]
+        union = np.concatenate([next(h)["tokens"] for h in hosts], axis=0)
+        np.testing.assert_array_equal(union, ref)
+
+
+def test_data_iterator_state_roundtrip_mid_epoch():
+    """state()/restore() round-trips mid-stream on every host: the restored
+    iterator replays the exact remaining batches."""
+    kw = dict(vocab=64, seq_len=12, batch=6, seed=3)
+    for host_id, num_hosts in ((0, 1), (1, 3)):
+        it = SyntheticLMIterator(**kw, host_id=host_id, num_hosts=num_hosts)
+        next(it), next(it)
+        snap = it.state()
+        tail = [next(it)["tokens"] for _ in range(3)]
+        it2 = SyntheticLMIterator(**kw, host_id=host_id,
+                                  num_hosts=num_hosts)
+        it2.restore(snap)
+        assert it2.state() == snap
+        for want in tail:
+            np.testing.assert_array_equal(next(it2)["tokens"], want)
