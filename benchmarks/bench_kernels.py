@@ -11,7 +11,12 @@ kernels replace, plus HLO FLOP counts:
 * **training path** (``*_fwdbwd`` rows): ``jax.value_and_grad`` through the
   dispatched ops — the compiled forward+backward cost per step that the
   fused analytic backward kernels improve on TPU (here the jnp-mode
-  recompute VJP compiles; the rows track its trajectory over PRs).
+  recompute VJP compiles; the rows track its trajectory over PRs);
+* **ragged-N rows** (N = 1000, 1023 next to the power-of-two rows): the
+  block-halving cliff removal (DESIGN.md §Masking).  The ``kern_flash_grid``
+  rows record the tiles the kernel wrapper would launch — before in-kernel
+  true-length masking, N = 1000 collapsed ``bq`` to 8 (125 sequential
+  q-steps); now every N keeps the dense default tiles.
 
 Derived column: seconds per call (median of 5) at each N."""
 
@@ -24,10 +29,17 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.scan_attention import prefix_scan_states, readout
+from repro.kernels.flash_attention import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    resolve_blocks,
+    round_up,
+)
 from repro.kernels.ops import aaren_prefix_attention, flash_mha
 from repro.kernels.ref import aaren_scan_reference, flash_reference
 
 NS = (256, 1024, 4096)
+NS_RAGGED = (1000, 1023)    # non-power-of-two: the ex-cliff lengths
 D, H = 64, 4
 FLASH_BWD_MAX_N = 1024  # O(N^2) jnp recompute-VJP; cap the CPU time budget
 
@@ -56,7 +68,7 @@ def run():
         o, *_ = aaren_scan_reference(s, v)
         return o
 
-    for n in NS:
+    for n in sorted(NS + NS_RAGGED):
         s = jax.random.normal(key, (H, n))
         v = jax.random.normal(jax.random.fold_in(key, 1), (H, n, D))
         t_scan = _time(aaren_scan_path, s, v)
@@ -70,12 +82,23 @@ def run():
     def softmax_attn(q, k, v):
         return flash_reference(q, k, v, causal=True)
 
-    for n in NS:
+    for n in sorted(NS + NS_RAGGED):
         q = jax.random.normal(key, (1, H, n, D))
         k = jax.random.normal(jax.random.fold_in(key, 2), (1, H, n, D))
         v = jax.random.normal(jax.random.fold_in(key, 3), (1, H, n, D))
         t_sm = _time(softmax_attn, q, k, v)
         emit(f"kern_causal_softmax_N{n}", t_sm * 1e6, f"{t_sm:.5f}")
+
+    # Dense-grid evidence for the cliff removal: the tiles the flash kernel
+    # wrapper launches at ragged N (cannot time Pallas on this CPU container,
+    # but the grid shape IS the cliff — 125 sequential q-steps before,
+    # ceil(N/256) dense blocks now).
+    for n in NS_RAGGED:
+        bq, bk = resolve_blocks(n, n, DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K)
+        n_q_blocks = round_up(n, bq) // bq
+        n_k_blocks = round_up(n, bk) // bk
+        emit(f"kern_flash_grid_N{n}", float(n_q_blocks * n_k_blocks),
+             f"bq{bq}xbk{bk}_grid{n_q_blocks}x{n_k_blocks}")
 
     # ---- training path: forward + backward through the dispatched ops ----
 
@@ -100,7 +123,7 @@ def run():
 
         return jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
 
-    for n in NS:
+    for n in sorted(NS + NS_RAGGED):
         if n > FLASH_BWD_MAX_N:
             continue
         q = jax.random.normal(key, (1, n, H, D))

@@ -26,6 +26,54 @@ def _expand_kv(x: jax.Array, n_heads: int) -> jax.Array:
     return jnp.repeat(x, reps, axis=-2)
 
 
+def masked_softmax(s: jax.Array, mask: jax.Array) -> jax.Array:
+    """Stable softmax over the last axis with fully-masked rows defined as 0.
+
+    ``s`` must already hold ``NEG_INF`` at masked positions; ``mask`` is the
+    boolean validity map (broadcastable against ``s``).  A plain
+    ``jax.nn.softmax`` over an all-``NEG_INF`` row returns *uniform* weights
+    (NEG_INF is finite — ``s - max == 0`` everywhere); this guard pins empty
+    rows to 0, the empty-set convention shared with the flash kernels and
+    ``scan_attention.readout`` (DESIGN.md §Masking).  For rows with any
+    valid entry it is bit-identical to the plain softmax.
+    """
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.where(mask, jnp.exp(s - m), 0.0)
+    u = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.where(u == 0.0, 1.0, u)
+
+
+def attention_mask(n_q: int, n_k: int, *, causal: bool = True,
+                   window: int | None = None,
+                   q_lens: jax.Array | None = None,
+                   kv_lens: jax.Array | None = None,
+                   q_offset: int = 0) -> jax.Array:
+    """(B-or-1, 1, Nq, Nk) boolean validity mask — the one shared builder.
+
+    Causal/window compare *absolute* positions (``q_offset`` is the absolute
+    position of query row 0, for decode chunks against a cache); ``q_lens``
+    counts valid **local** query rows of this block and ``kv_lens`` valid
+    keys, each (B,) int.  Feed the result to :func:`masked_softmax` after
+    ``where(mask, s, NEG_INF)``.  ``ref.flash_reference`` (the kernel parity
+    oracle) and :func:`multihead_attention` both build their masks here, so
+    the two cannot drift.
+    """
+    q_pos = jnp.arange(n_q)[:, None] + q_offset
+    k_pos = jnp.arange(n_k)[None, :]
+    mask = jnp.ones((n_q, n_k), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    mask = mask[None, None]                               # (1, 1, Nq, Nk)
+    if q_lens is not None:
+        row = jnp.arange(n_q)[:, None]                    # local row index
+        mask = mask & (row[None, None] < q_lens[:, None, None, None])
+    if kv_lens is not None:
+        mask = mask & (k_pos[None, None] < kv_lens[:, None, None, None])
+    return mask
+
+
 def causal_mask_bias(n_q: int, n_k: int, *, window: int | None = None,
                      q_offset: int = 0) -> jax.Array:
     """(n_q, n_k) additive bias: 0 where attendable, NEG_INF elsewhere.
@@ -51,12 +99,18 @@ def multihead_attention(
     window: int | None = None,
     q_offset: int = 0,
     lengths: jax.Array | None = None,
+    q_lens: jax.Array | None = None,
     scale: float | None = None,
 ) -> jax.Array:
     """softmax(q k^T) v with optional causal / sliding-window / length masks.
 
     q: (B, Nq, H, d); k, v: (B, Nk, G, d) with G | H.  Returns (B, Nq, H, d).
-    ``lengths``: (B,) number of valid key positions (for decode with caches).
+    ``lengths``: (B,) number of valid key positions (for decode with caches
+    and ragged batches); ``q_lens``: (B,) number of valid query rows —
+    rows at or beyond it output 0.  A row with no attendable key reads 0
+    (the empty-set convention shared with the flash kernels, DESIGN.md
+    §Masking) instead of the uniform average a raw softmax over finite
+    ``NEG_INF`` biases would produce.
     """
     b, n_q, h, d = q.shape
     n_k = k.shape[1]
@@ -67,12 +121,14 @@ def multihead_attention(
     s = jnp.einsum(
         "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
     ) * scale
-    if causal:
-        s = s + causal_mask_bias(n_q, n_k, window=window, q_offset=q_offset)
-    if lengths is not None:
-        valid = jnp.arange(n_k)[None, :] < lengths[:, None]  # (B, Nk)
-        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    # One boolean validity map feeds both the NEG_INF fill and the guarded
+    # softmax.  Window is historically causal-only here (the old additive
+    # causal_mask_bias gated it); flash applies it unconditionally.
+    mask = attention_mask(n_q, n_k, causal=causal,
+                          window=window if causal else None,
+                          q_lens=q_lens, kv_lens=lengths, q_offset=q_offset)
+    s = jnp.where(mask, s, NEG_INF)
+    p = masked_softmax(s, mask)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(p.dtype))
     return out.astype(q.dtype)
 

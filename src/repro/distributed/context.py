@@ -54,6 +54,7 @@ from repro.core.scan_attention import (
     make_empty_state,
     readout,
 )
+from repro.kernels import flash_attention as _kflash
 from repro.kernels import ops as kops
 
 SEQ_AXIS = "seq"
@@ -261,23 +262,31 @@ def cp_aaren_prefix_attention(
     """Context-parallel drop-in for ``kops.aaren_prefix_attention``.
 
     s: (..., N) scores; v: (..., N, d) values; carry leaves m,u (...,),
-    w (..., d).  N must divide by the ``seq`` axis size.  Falls back to the
-    single-device fused op when no session is active.  Returns
-    (o: (..., N, d), replicated global final ScanState).
+    w (..., d).  Any N: an indivisible tail is padded with ⊕-identity
+    leaves (contributing nothing to outputs or the final carry) and sliced
+    off.  Falls back to the single-device fused op when no session is
+    active.  Returns (o: (..., N, d), replicated global final ScanState).
     """
     cp = cp if cp is not None else current_cp()
     if cp is None or cp.size == 1:
         return kops.aaren_prefix_attention(s, v, carry)
     n = s.shape[-1]
-    if n % cp.size:
-        raise ValueError(
-            f"sequence length {n} is not divisible by seq axis size {cp.size}")
     batch_shape = s.shape[:-1]
     d = v.shape[-1]
     if carry is None:
         carry = make_empty_state(batch_shape, d)
     s32 = s.astype(jnp.float32)
     v32 = v.astype(jnp.float32)
+    # Arbitrary N: pad the sequence dim up to the seq-axis multiple with
+    # ⊕-identity leaves (s = NEG_INF, v = 0) — they contribute nothing to
+    # any prefix or to the global final carry — and slice the tail off
+    # after the island.
+    n_pad = _kflash.round_up(n, cp.size)
+    if n_pad != n:
+        widths = [(0, 0)] * s32.ndim
+        widths[-1] = (0, n_pad - n)
+        s32 = jnp.pad(s32, widths, constant_values=NEG_INF)
+        v32 = jnp.pad(v32, [*widths, (0, 0)])
     m0 = carry.m.astype(jnp.float32)
     u0 = carry.u.astype(jnp.float32)
     w0 = carry.w.astype(jnp.float32)
@@ -292,7 +301,7 @@ def cp_aaren_prefix_attention(
     fn = shard_map(_make_cp_scan_core(cp.axis, cp.size), mesh=cp.mesh,
                    in_specs=in_specs, out_specs=out_specs, check_rep=False)
     o, m_f, u_f, w_f = fn(s32, v32, m0, u0, w0)
-    return o.astype(v.dtype), ScanState(m=m_f, u=u_f, w=w_f)
+    return o[..., :n, :].astype(v.dtype), ScanState(m=m_f, u=u_f, w=w_f)
 
 
 # ---------------------------------------------------------------------------
@@ -307,21 +316,25 @@ def _expand_kv(x: jax.Array, n_heads: int) -> jax.Array:
     return x.reshape(b, n, n_heads, d)
 
 
-def _ring_flash_local(q, k, v, axis, axis_size, causal, window, scale):
+def _ring_flash_local(q, k, v, lens, axis, axis_size, causal, window, scale):
     """Per-shard ring flash: rotate K/V shards, fold blocks under ⊕.
 
-    q: (B, Nl, H, d) local queries; k/v: (B, Nl, G, d) local keys/values.
-    Step t folds the block attention of the local queries against the K/V
-    shard currently held (shard ``idx - t mod P``, masked by *absolute*
-    causal/window position) into a running ``(m, u, w)`` accumulator — the
-    running logsumexp is ``m + log u``.  K/V rotate in their compact G-head
-    layout, so the wire payload per step is O(Nl·G·d), and only P−1 of the
-    P steps move data.
+    q: (B, Nl, H, d) local queries; k/v: (B, Nl, G, d) local keys/values;
+    lens: (B,) int32 true lengths, replicated across the ring.  Step t folds
+    the block attention of the local queries against the K/V shard currently
+    held (shard ``idx - t mod P``, masked by *absolute* causal/window
+    position AND by the true length — each rank derives its shard's valid
+    span from ``lens`` and its absolute offset, so padded global tails and
+    ragged batch rows contribute the ⊕ identity) into a running ``(m, u, w)``
+    accumulator — the running logsumexp is ``m + log u``.  K/V rotate in
+    their compact G-head layout, so the wire payload per step is O(Nl·G·d),
+    and only P−1 of the P steps move data.
     """
     idx = jax.lax.axis_index(axis)
     b, nl, h, d = q.shape
     q32 = q.astype(jnp.float32)
     q_pos = idx * nl + jnp.arange(nl)
+    row_ok = (q_pos[None, :] < lens[:, None])[:, None, :, None]  # (B,1,nl,1)
     acc = ScanState(
         m=jnp.full((b, h, nl), NEG_INF, jnp.float32),
         u=jnp.zeros((b, h, nl), jnp.float32),
@@ -340,7 +353,9 @@ def _ring_flash_local(q, k, v, axis, axis_size, causal, window, scale):
             allowed = allowed & (k_pos[None, :] <= q_pos[:, None])
         if window is not None:
             allowed = allowed & (k_pos[None, :] > q_pos[:, None] - window)
-        srt = jnp.where(allowed[None, None], srt, NEG_INF)
+        lane_ok = (k_pos[None, :] < lens[:, None])[:, None, None, :]
+        ok = allowed[None, None] & row_ok & lane_ok        # (B, 1|H, nl, nl)
+        srt = jnp.where(ok, srt, NEG_INF)
         blk_m = jnp.max(srt, axis=-1)
         e = jnp.exp(srt - blk_m[..., None])
         e = jnp.where((blk_m == NEG_INF)[..., None], 0.0, e)  # empty block
@@ -365,35 +380,47 @@ def cp_flash_mha(
     causal: bool = True,
     window: int | None = None,
     scale: float | None = None,
+    lengths: jax.Array | None = None,
     cp: ContextParallel | None = None,
 ) -> jax.Array:
     """Context-parallel drop-in for ``kops.flash_mha`` (self-attention).
 
     q: (B, N, H, d); k/v: (B, N, G, d) — sequence-major framework layout,
-    N divisible by the ``seq`` axis size.  Falls back to the single-device
-    flash op when no session is active.
+    any N: the wrapper zero-pads the sequence dim up to the ``seq``-axis
+    multiple and every rank masks by true length in-kernel (a zero-padded
+    K/V is *not* an identity under softmax — the mask is what makes the
+    padding free; DESIGN.md §Masking).  ``lengths``: optional (B,) int32
+    per-row true lengths for ragged batches; defaults to N.  Falls back to
+    the single-device flash op when no session is active.
     """
     cp = cp if cp is not None else current_cp()
     if cp is None or cp.size == 1:
         return kops.flash_mha(q, k, v, causal=causal, window=window,
-                              scale=scale)
+                              scale=scale, q_lens=lengths, kv_lens=lengths)
     b, n, _, d = q.shape
     if k.shape[1] != n:
         raise ValueError("ring flash is self-attention: Nq must equal Nk")
-    if n % cp.size:
-        raise ValueError(
-            f"sequence length {n} is not divisible by seq axis size {cp.size}")
     if scale is None:
         scale = 1.0 / float(np.sqrt(d))
+    # Clamped to [0, n]: an oversized length would unmask the zero-padded
+    # ring tail (same rule as the kernel wrapper's _as_lens).
+    lens = (jnp.full((b,), n, jnp.int32) if lengths is None
+            else jnp.clip(jnp.asarray(lengths, jnp.int32), 0, n))
+    n_pad = _kflash.round_up(n, cp.size)
+    if n_pad != n:
+        widths = [(0, 0), (0, n_pad - n), (0, 0), (0, 0)]
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
 
     bax = cp.batch_axis(b)
     spec = P(bax, cp.axis, None, None)
     axis, size, scale_f = cp.axis, cp.size, float(scale)
 
-    def local(q_, k_, v_):
-        return _ring_flash_local(q_, k_, v_, axis, size, causal, window,
-                                 scale_f)
+    def local(q_, k_, v_, lens_):
+        return _ring_flash_local(q_, k_, v_, lens_, axis, size, causal,
+                                 window, scale_f)
 
-    fn = shard_map(local, mesh=cp.mesh, in_specs=(spec, spec, spec),
+    fn = shard_map(local, mesh=cp.mesh, in_specs=(spec, spec, spec, P(bax)),
                    out_specs=spec, check_rep=False)
-    return fn(q, k, v).astype(v.dtype)
+    return fn(q, k, v, lens)[:, :n].astype(v.dtype)

@@ -6,7 +6,9 @@
   right-to-left suffix scan over the saved (o, m, u) residuals;
 * ``flash_attention``  — online-softmax causal/sliding-window attention (the
   baseline; same (m, c, a) combine as the paper's RNN cell), forward +
-  two-pass analytic backward from the logsumexp residual;
+  two-pass analytic backward from the logsumexp residual, with in-kernel
+  per-row true-length masking (dense block grid at any N — DESIGN.md
+  §Masking);
 * ``ops``              — backend dispatch + custom VJPs;
 * ``ref``              — pure-jnp oracles (values and VJPs) the kernels are
   tested against.

@@ -1,5 +1,5 @@
 """Pallas TPU kernels: causal (optionally sliding-window) flash attention,
-forward and analytic backward.
+forward and analytic backward, with in-kernel true-length masking.
 
 The softmax-attention baseline the paper compares Aaren against.  The online
 softmax recurrence carried across KV blocks is *literally the paper's
@@ -17,6 +17,19 @@ in VMEM scratch across KV steps.  The forward also writes the logsumexp
 the backward re-materialise ``p_ij = exp(s_ij - L_i)`` tile-by-tile without
 ever holding the N x N matrix in HBM.
 
+True-length masking (DESIGN.md §Masking): every kernel reads per-batch-row
+``(q_len, kv_len)`` scalars from SMEM and masks score-tile positions at or
+beyond the true length to ``-inf`` *before* the online-softmax update (and
+re-applies the mask to the re-materialised probability tile in the
+backward).  Zero-padded K/V is **not** an identity under softmax — a padded
+key would get weight ``exp((q·0)·scale − m) > 0`` — so the mask is the only
+correct way to run a dense block grid at arbitrary N.  The wrappers pad all
+sequence dims up to the block multiple and the grid never shrinks its tiles
+(the old ``bq //= 2`` fallback, which degenerated to a fully sequential
+grid at odd/prime N, is gone).  Rows with no attendable key (beyond their
+``q_len``, or ``window == 0`` configs) output 0 with ``lse = NEG_INF`` —
+the same empty-set convention as ``scan_attention.readout``.
+
 Backward (standard two-pass flash-bwd, DESIGN.md §Backward): with
 ``D_i = Σ_d do_id o_id`` precomputed by the caller,
 
@@ -25,16 +38,19 @@ Backward (standard two-pass flash-bwd, DESIGN.md §Backward): with
     dk_j  = scale · Σ_i dS_ij q_i      — kernel B, Q minor, dk/dv in scratch
     dv_j  = Σ_i p_ij do_i
 
-Causal and sliding-window block-level skipping avoids both compute and (via
-index re-mapping) HBM traffic for masked-out blocks in all three kernels.
-GQA is handled by index arithmetic in the forward and in dq: query head ``h``
-reads KV head ``h // (H // G)`` — KV is never expanded in HBM.  dk/dv are
-accumulated per *query* head and group-summed by the wrapper (a ``(B, H)``
-vs ``(B, G)`` HBM round-trip; see DESIGN.md §Backward for why the in-kernel
-alternative revisits output blocks non-contiguously).
+Causal, sliding-window, and true-length block-level relevance gating skips
+the *compute* of masked-out blocks in all three kernels (the BlockSpec index
+maps are static grid functions, so dead tiles still stream through VMEM —
+skipping their HBM traffic would need a scalar-prefetch grid).  GQA is
+handled by index arithmetic in the forward and in dq:
+query head ``h`` reads KV head ``h // (H // G)`` — KV is never expanded in
+HBM.  dk/dv are accumulated per *query* head and group-summed by the wrapper
+(a ``(B, H)`` vs ``(B, G)`` HBM round-trip; see DESIGN.md §Backward for why
+the in-kernel alternative revisits output blocks non-contiguously).
 
 Validated in interpret mode against ``ref.flash_reference`` /
-``ref.flash_vjp_reference`` over shape/dtype sweeps (tests/test_kernels.py).
+``ref.flash_vjp_reference`` over shape/dtype sweeps (tests/test_kernels.py)
+and over ragged/odd/prime lengths (tests/test_flash_masking.py).
 """
 
 from __future__ import annotations
@@ -52,22 +68,83 @@ from repro.core.scan_attention import NEG_INF
 DEFAULT_BLOCK_Q = 256
 DEFAULT_BLOCK_K = 256
 
+# Dense-grid tile quanta for sequences shorter than the requested block:
+# the f32 sublane count for query rows, the lane width for key columns.
+MIN_BLOCK_Q = 8
+MIN_BLOCK_K = 128
 
-def _block_relevant(q_start, k_start, block_q, block_k, causal, window):
-    """Does any (q, k) pair in this tile survive the causal/window mask?"""
-    relevant = True
+
+def round_up(x: int, m: int) -> int:
+    """Ceil ``x`` to a multiple of ``m`` (shared by wrappers and benches)."""
+    return -(-x // m) * m
+
+
+def resolve_blocks(n_q, n_k, block_q, block_k):
+    """Dense tiles at any N — the grid never shrinks below the request.
+
+    Sequences at least one block long keep the requested ``(bq, bk)``
+    verbatim (the wrapper pads the arrays up to the block multiple; the
+    in-kernel true-length mask keeps the padding out of the softmax).
+    Shorter sequences get a single tile rounded up to the hardware quantum.
+    The invariant tests/test_flash_masking.py pins: prime N launches the
+    same tiles as N rounded up to the block multiple.
+    """
+    bq = block_q if n_q >= block_q else round_up(n_q, MIN_BLOCK_Q)
+    bk = block_k if n_k >= block_k else round_up(n_k, MIN_BLOCK_K)
+    return bq, bk
+
+
+def _pad_dim(x: jax.Array, n_to: int, axis: int, value=0.0) -> jax.Array:
+    """Pad ``axis`` up to ``n_to`` with ``value`` (no-op when already there)."""
+    n = x.shape[axis]
+    if n == n_to:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, n_to - n)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _as_lens(lens, batch: int, n: int) -> jax.Array:
+    """Normalise an optional per-row lengths array to (B, 1) int32 for SMEM.
+
+    Clamped to [0, n]: an oversized length would unmask the zero-padded
+    tail (whose keys score ``exp(-m) > 0`` and absorb real probability
+    mass), where the dense reference — whose mask index range simply ends
+    at n — treats it as a no-op.
+    """
+    if lens is None:
+        lens = jnp.full((batch,), n, jnp.int32)
+    lens = jnp.clip(jnp.asarray(lens, jnp.int32), 0, n)
+    return lens.reshape(batch, 1)
+
+
+def _lens_spec():
+    """(1, 1) per-batch-row scalar block in SMEM (scalars must be 2D there)."""
+    return pl.BlockSpec((1, 1), lambda ib, ih, j0, j1: (ib, 0),
+                        memory_space=pltpu.SMEM)
+
+
+def _block_relevant(q_start, k_start, block_q, block_k, causal, window,
+                    q_len, kv_len):
+    """Does any (q, k) pair in this tile survive the mask?
+
+    Causal/window bounds are static per tile; the true-length bounds come
+    from the per-row SMEM scalars, so irrelevant tail blocks of a short row
+    skip compute exactly like causally-masked blocks do.
+    """
+    relevant = jnp.logical_and(q_start < q_len, k_start < kv_len)
     if causal:
-        relevant = k_start <= q_start + block_q - 1
+        relevant = jnp.logical_and(relevant, k_start <= q_start + block_q - 1)
     if window is not None:
         relevant = jnp.logical_and(
             relevant, k_start + block_k - 1 > q_start - window)
     return relevant
 
 
-def _tile_mask(s_shape, q_start, k_start, causal, window):
+def _tile_mask(s_shape, q_start, k_start, causal, window, q_len, kv_len):
     q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s_shape, 0)
     k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s_shape, 1)
-    mask = jnp.ones(s_shape, dtype=jnp.bool_)
+    mask = (q_pos < q_len) & (k_pos < kv_len)
     if causal:
         mask &= k_pos <= q_pos
     if window is not None:
@@ -77,6 +154,7 @@ def _tile_mask(s_shape, q_start, k_start, causal, window):
 
 def _flash_kernel(
     q_ref, k_ref, v_ref,      # (1, 1, bq, d), (1, 1, bk, d), (1, 1, bk, d)
+    qlen_ref, klen_ref,       # SMEM (1, 1) int32: this batch row's lengths
     o_ref, lse_ref,           # (1, 1, bq, d), (1, 1, bq)
     m_scr, l_scr, acc_scr,    # VMEM scratch: (bq, 1), (bq, 1), (bq, d)
     *, scale: float, block_q: int, block_k: int, n_kv_blocks: int,
@@ -93,8 +171,10 @@ def _flash_kernel(
 
     q_start = jq * block_q
     k_start = jk * block_k
+    q_len = qlen_ref[0, 0]
+    kv_len = klen_ref[0, 0]
     relevant = _block_relevant(q_start, k_start, block_q, block_k,
-                               causal, window)
+                               causal, window, q_len, kv_len)
 
     @pl.when(relevant)
     def _compute():
@@ -104,8 +184,9 @@ def _flash_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (bq, bk)
-        s = jnp.where(_tile_mask(s.shape, q_start, k_start, causal, window),
-                      s, NEG_INF)
+        mask = _tile_mask(s.shape, q_start, k_start, causal, window,
+                          q_len, kv_len)
+        s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]                          # (bq, 1)
         l_prev = l_scr[...]
@@ -113,6 +194,11 @@ def _flash_kernel(
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         alpha = jnp.exp(m_prev - m_new)              # the paper's carry rescale
         p = jnp.exp(s - m_new)                       # (bq, bk)
+        # A fully-masked row has m_new == NEG_INF, where exp(s - m_new) is
+        # exp(0) = 1 per masked entry — phantom mass.  Re-applying the mask
+        # keeps empty rows exactly at the ⊕ identity (l = 0, acc = 0); for
+        # rows with any live entry it is a no-op (masked entries underflow).
+        p = jnp.where(mask, p, 0.0)
         l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
         acc_scr[...] = acc_prev * alpha + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
@@ -121,22 +207,12 @@ def _flash_kernel(
 
     @pl.when(jk == n_kv_blocks - 1)
     def _finish():
-        # Fully-masked rows (can't happen causally, row i attends to itself)
-        # would be 0/0; guard anyway for window=0 edge configs.
+        # Empty rows (beyond q_len, or window == 0 configs) read out as 0
+        # with lse = NEG_INF — the empty-set convention of readout().
         l = l_scr[...]
         l_safe = jnp.where(l == 0.0, 1.0, l)
         o_ref[0, 0] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
         lse_ref[0, 0] = (m_scr[...] + jnp.log(l_safe))[:, 0]
-
-
-def _resolve_blocks(n_q, n_k, block_q, block_k):
-    bq = min(block_q, n_q)
-    while n_q % bq:
-        bq //= 2
-    bk = min(block_k, n_k)
-    while n_k % bk:
-        bk //= 2
-    return bq, bk
 
 
 @functools.partial(
@@ -151,12 +227,19 @@ def flash_attention(
     causal: bool = True,
     window: int | None = None,
     scale: float | None = None,
+    q_lens: jax.Array | None = None,
+    kv_lens: jax.Array | None = None,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
     return_residuals: bool = False,
     interpret: bool = False,
 ):
     """Flash attention.  q: (B, H, Nq, d); k/v: (B, G, Nk, d), G | H.
+
+    ``q_lens`` / ``kv_lens``: optional (B,) int32 true lengths per batch
+    row; positions at or beyond them are masked in-kernel (queries there
+    output 0).  Any Nq/Nk launches a dense grid — the wrapper pads to the
+    block multiple and the mask keeps the padding out of the softmax.
 
     Returns (B, H, Nq, d) in q.dtype; with ``return_residuals`` also the
     per-row logsumexp (B, H, Nq) f32 the backward consumes.
@@ -165,9 +248,15 @@ def flash_attention(
     g, n_k = k.shape[1], k.shape[2]
     if scale is None:
         scale = 1.0 / float(np.sqrt(d))
-    bq, bk = _resolve_blocks(n_q, n_k, block_q, block_k)
-    n_kv_blocks = n_k // bk
-    grid = (b, h, n_q // bq, n_kv_blocks)
+    bq, bk = resolve_blocks(n_q, n_k, block_q, block_k)
+    n_qp, n_kp = round_up(n_q, bq), round_up(n_k, bk)
+    ql = _as_lens(q_lens, b, n_q)
+    kl = _as_lens(kv_lens, b, n_k)
+    q = _pad_dim(q, n_qp, 2)
+    k = _pad_dim(k, n_kp, 2)
+    v = _pad_dim(v, n_kp, 2)
+    n_kv_blocks = n_kp // bk
+    grid = (b, h, n_qp // bq, n_kv_blocks)
     group = h // g  # queries per kv head
 
     kernel = functools.partial(
@@ -185,14 +274,16 @@ def flash_attention(
             pl.BlockSpec(
                 (1, 1, bk, d),
                 lambda ib, ih, jq, jk: (ib, ih // group, jk, 0)),
+            _lens_spec(),
+            _lens_spec(),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
             pl.BlockSpec((1, 1, bq), lambda ib, ih, jq, jk: (ib, ih, jq)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, h, n_q, d), q.dtype),
-            jax.ShapeDtypeStruct((b, h, n_q), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, n_qp, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, n_qp), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -200,7 +291,8 @@ def flash_attention(
             pltpu.VMEM((bq, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(q, k, v, ql, kl)
+    o, lse = o[:, :, :n_q], lse[:, :, :n_q]
     return (o, lse) if return_residuals else o
 
 
@@ -210,7 +302,7 @@ def flash_attention(
 
 
 def _recompute_p_ds(q, k, v, do, lse, delta, *, scale, q_start, k_start,
-                    causal, window):
+                    causal, window, q_len, kv_len):
     """Re-materialise the probability tile and dS tile from residuals.
 
     q/do: (bq, d); k/v: (bk, d); lse/delta: (bq,).
@@ -219,9 +311,14 @@ def _recompute_p_ds(q, k, v, do, lse, delta, *, scale, q_start, k_start,
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale
-    s = jnp.where(_tile_mask(s.shape, q_start, k_start, causal, window),
-                  s, NEG_INF)
+    mask = _tile_mask(s.shape, q_start, k_start, causal, window,
+                      q_len, kv_len)
+    s = jnp.where(mask, s, NEG_INF)
     p = jnp.exp(s - lse[:, None])                    # (bq, bk)
+    # Empty rows carry lse == NEG_INF, where exp(NEG_INF - NEG_INF) = 1;
+    # the mask pins them (and their dS) to exactly 0, mirroring the
+    # forward's zero output for rows with no attendable key.
+    p = jnp.where(mask, p, 0.0)
     dp = jax.lax.dot_general(
         do, v, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)          # do_i · v_j
@@ -231,6 +328,7 @@ def _recompute_p_ds(q, k, v, do, lse, delta, *, scale, q_start, k_start,
 
 def _flash_bwd_dq_kernel(
     q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    qlen_ref, klen_ref,
     dq_ref,
     dq_scr,
     *, scale: float, block_q: int, block_k: int, n_kv_blocks: int,
@@ -245,8 +343,10 @@ def _flash_bwd_dq_kernel(
 
     q_start = jq * block_q
     k_start = jk * block_k
+    q_len = qlen_ref[0, 0]
+    kv_len = klen_ref[0, 0]
     relevant = _block_relevant(q_start, k_start, block_q, block_k,
-                               causal, window)
+                               causal, window, q_len, kv_len)
 
     @pl.when(relevant)
     def _compute():
@@ -254,7 +354,8 @@ def _flash_bwd_dq_kernel(
             q_ref[0, 0].astype(jnp.float32), k_ref[0, 0].astype(jnp.float32),
             v_ref[0, 0].astype(jnp.float32), do_ref[0, 0].astype(jnp.float32),
             lse_ref[0, 0], delta_ref[0, 0], scale=scale,
-            q_start=q_start, k_start=k_start, causal=causal, window=window)
+            q_start=q_start, k_start=k_start, causal=causal, window=window,
+            q_len=q_len, kv_len=kv_len)
         dq_scr[...] += scale * jax.lax.dot_general(
             ds, k_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -266,6 +367,7 @@ def _flash_bwd_dq_kernel(
 
 def _flash_bwd_dkv_kernel(
     q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    qlen_ref, klen_ref,
     dk_ref, dv_ref,
     dk_scr, dv_scr,
     *, scale: float, block_q: int, block_k: int, n_q_blocks: int,
@@ -281,8 +383,10 @@ def _flash_bwd_dkv_kernel(
 
     q_start = jq * block_q
     k_start = jk * block_k
+    q_len = qlen_ref[0, 0]
+    kv_len = klen_ref[0, 0]
     relevant = _block_relevant(q_start, k_start, block_q, block_k,
-                               causal, window)
+                               causal, window, q_len, kv_len)
 
     @pl.when(relevant)
     def _compute():
@@ -292,7 +396,8 @@ def _flash_bwd_dkv_kernel(
             q, k_ref[0, 0].astype(jnp.float32),
             v_ref[0, 0].astype(jnp.float32), do,
             lse_ref[0, 0], delta_ref[0, 0], scale=scale,
-            q_start=q_start, k_start=k_start, causal=causal, window=window)
+            q_start=q_start, k_start=k_start, causal=causal, window=window,
+            q_len=q_len, kv_len=kv_len)
         dv_scr[...] += jax.lax.dot_general(
             p, do, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)      # Σ_i p_ij do_i
@@ -321,6 +426,8 @@ def flash_attention_bwd(
     causal: bool = True,
     window: int | None = None,
     scale: float | None = None,
+    q_lens: jax.Array | None = None,
+    kv_lens: jax.Array | None = None,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False,
@@ -328,13 +435,26 @@ def flash_attention_bwd(
     """Analytic flash backward from forward residuals ``(o, lse)``.
 
     q/o/do: (B, H, Nq, d); k/v: (B, G, Nk, d); lse: (B, H, Nq) f32.
+    ``q_lens`` / ``kv_lens`` must match the forward call: the probability
+    tiles are re-materialised under the same true-length mask, so masked
+    queries get dq = 0 and masked keys get dk = dv = 0.
     Returns (dq, dk, dv) in the corresponding input dtypes.
     """
     b, h, n_q, d = q.shape
     g, n_k = k.shape[1], k.shape[2]
     if scale is None:
         scale = 1.0 / float(np.sqrt(d))
-    bq, bk = _resolve_blocks(n_q, n_k, block_q, block_k)
+    bq, bk = resolve_blocks(n_q, n_k, block_q, block_k)
+    n_qp, n_kp = round_up(n_q, bq), round_up(n_k, bk)
+    ql = _as_lens(q_lens, b, n_q)
+    kl = _as_lens(kv_lens, b, n_k)
+    q = _pad_dim(q, n_qp, 2)
+    o = _pad_dim(o, n_qp, 2)
+    do = _pad_dim(do, n_qp, 2)
+    # Padded lse rows read NEG_INF (the empty-row residual convention).
+    lse = _pad_dim(lse, n_qp, 2, value=NEG_INF)
+    k = _pad_dim(k, n_kp, 2)
+    v = _pad_dim(v, n_kp, 2)
     group = h // g
 
     # D_i = Σ_d do·o — one elementwise pass, shared by both kernels.
@@ -351,19 +471,21 @@ def flash_attention_bwd(
         pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
         pl.BlockSpec((1, 1, bq), lambda ib, ih, jq, jk: (ib, ih, jq)),
         pl.BlockSpec((1, 1, bq), lambda ib, ih, jq, jk: (ib, ih, jq)),
+        _lens_spec(),
+        _lens_spec(),
     ]
 
     dq = pl.pallas_call(
-        functools.partial(_flash_bwd_dq_kernel, n_kv_blocks=n_k // bk,
+        functools.partial(_flash_bwd_dq_kernel, n_kv_blocks=n_kp // bk,
                           **common),
-        grid=(b, h, n_q // bq, n_k // bk),
+        grid=(b, h, n_qp // bq, n_kp // bk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, n_q, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, h, n_qp, d), q.dtype),
         scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(q, k, v, do, lse, delta, ql, kl)
 
     # dk/dv accumulate over queries: Q is the minor (sequential) grid axis.
     # Accumulated per *query* head — the (b, g) output block for a KV head
@@ -378,27 +500,31 @@ def flash_attention_bwd(
         pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jk, jq: (ib, ih, jq, 0)),
         pl.BlockSpec((1, 1, bq), lambda ib, ih, jk, jq: (ib, ih, jq)),
         pl.BlockSpec((1, 1, bq), lambda ib, ih, jk, jq: (ib, ih, jq)),
+        _lens_spec(),
+        _lens_spec(),
     ]
     dk_h, dv_h = pl.pallas_call(
-        functools.partial(_flash_bwd_dkv_kernel, n_q_blocks=n_q // bq,
+        functools.partial(_flash_bwd_dkv_kernel, n_q_blocks=n_qp // bq,
                           **common),
-        grid=(b, h, n_k // bk, n_q // bq),
+        grid=(b, h, n_kp // bk, n_qp // bq),
         in_specs=bwd_in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, bk, d), lambda ib, ih, jk, jq: (ib, ih, jk, 0)),
             pl.BlockSpec((1, 1, bk, d), lambda ib, ih, jk, jq: (ib, ih, jk, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, h, n_k, d), jnp.float32),
-            jax.ShapeDtypeStruct((b, h, n_k, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, n_kp, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, n_kp, d), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bk, d), jnp.float32),
             pltpu.VMEM((bk, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(q, k, v, do, lse, delta, ql, kl)
 
+    dq = dq[:, :, :n_q]
+    dk_h, dv_h = dk_h[:, :, :n_k], dv_h[:, :, :n_k]
     dk = jnp.sum(dk_h.reshape(b, g, group, n_k, d), axis=2).astype(k.dtype)
     dv = jnp.sum(dv_h.reshape(b, g, group, n_k, d), axis=2).astype(v.dtype)
     return dq, dk, dv

@@ -184,51 +184,63 @@ def aaren_prefix_attention(
 # ---------------------------------------------------------------------------
 
 
-def _flash_jnp(q, k, v, causal, window, scale):
+def _flash_jnp(q, k, v, q_lens, kv_lens, causal, window, scale):
     from repro.kernels.ref import flash_reference
 
-    return flash_reference(q, k, v, causal=causal, window=window, scale=scale)
+    return flash_reference(q, k, v, causal=causal, window=window, scale=scale,
+                           q_lens=q_lens, kv_lens=kv_lens)
 
 
-def _flash_dispatch(q, k, v, causal, window, scale):
+def _flash_dispatch(q, k, v, q_lens, kv_lens, causal, window, scale):
     mode = kernel_mode()
     if mode == "jnp":
-        return _flash_jnp(q, k, v, causal, window, scale)
+        return _flash_jnp(q, k, v, q_lens, kv_lens, causal, window, scale)
     interpret = mode == "interpret"
     return _flash_kernel.flash_attention(
         q, k, v, causal=causal, window=window, scale=scale,
-        interpret=interpret)
+        q_lens=q_lens, kv_lens=kv_lens, interpret=interpret)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _flash_core(q, k, v, causal, window, scale):
-    return _flash_dispatch(q, k, v, causal, window, scale)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _flash_core(q, k, v, q_lens, kv_lens, causal, window, scale):
+    return _flash_dispatch(q, k, v, q_lens, kv_lens, causal, window, scale)
 
 
-def _flash_fwd(q, k, v, causal, window, scale):
+def _flash_fwd(q, k, v, q_lens, kv_lens, causal, window, scale):
     mode = kernel_mode()
     if mode == "jnp":
-        return _flash_jnp(q, k, v, causal, window, scale), (q, k, v)
+        out = _flash_jnp(q, k, v, q_lens, kv_lens, causal, window, scale)
+        return out, (q, k, v, q_lens, kv_lens)
     interpret = mode == "interpret"
     o, lse = _flash_kernel.flash_attention(
         q, k, v, causal=causal, window=window, scale=scale,
-        return_residuals=True, interpret=interpret)
-    return o, (q, k, v, o, lse)
+        q_lens=q_lens, kv_lens=kv_lens, return_residuals=True,
+        interpret=interpret)
+    return o, (q, k, v, q_lens, kv_lens, o, lse)
+
+
+def _len_cotangent(lens):
+    """Symbolic-zero cotangent for an integer lengths array (float0)."""
+    if lens is None:
+        return None
+    return np.zeros(np.shape(lens), jax.dtypes.float0)
 
 
 def _flash_bwd(causal, window, scale, res, g):
-    # 3 residuals = jnp-mode raw inputs; 5 = kernel-mode (+ o, logsumexp).
-    if len(res) == 3:
-        q, k, v = res
+    # 5 residuals = jnp-mode raw inputs; 7 = kernel-mode (+ o, logsumexp).
+    if len(res) == 5:
+        q, k, v, q_lens, kv_lens = res
         _, vjp = jax.vjp(
-            lambda q_, k_, v_: _flash_jnp(q_, k_, v_, causal, window, scale),
+            lambda q_, k_, v_: _flash_jnp(q_, k_, v_, q_lens, kv_lens,
+                                          causal, window, scale),
             q, k, v)
-        return vjp(g)
-    q, k, v, o, lse = res
+        return (*vjp(g), _len_cotangent(q_lens), _len_cotangent(kv_lens))
+    q, k, v, q_lens, kv_lens, o, lse = res
     interpret = kernel_mode() == "interpret"
-    return _flash_kernel.flash_attention_bwd(
+    dq, dk, dv = _flash_kernel.flash_attention_bwd(
         q, k, v, o, lse, g, causal=causal, window=window, scale=scale,
-        interpret=interpret)
+        q_lens=q_lens, kv_lens=kv_lens, interpret=interpret)
+    return dq, dk, dv, _len_cotangent(q_lens), _len_cotangent(kv_lens)
 
 
 _flash_core.defvjp(_flash_fwd, _flash_bwd)
@@ -242,16 +254,25 @@ def flash_mha(
     causal: bool = True,
     window: int | None = None,
     scale: float | None = None,
+    q_lens: jax.Array | None = None,
+    kv_lens: jax.Array | None = None,
 ) -> jax.Array:
     """Flash attention over (B, Nq, H, d) q and (B, Nk, G, d) k/v.
 
     Framework layout is sequence-major (B, N, H, d); the kernel wants head-
-    major (B, H, N, d) — transpose at the boundary.
+    major (B, H, N, d) — transpose at the boundary.  ``q_lens``/``kv_lens``:
+    optional (B,) int32 true lengths; positions at or beyond them are masked
+    inside the kernel (and its backward), so ragged batches run the dense
+    block grid with no sequence-length divisibility requirement.
     """
     if scale is None:
         scale = 1.0 / float(np.sqrt(q.shape[-1]))
+    if q_lens is not None:
+        q_lens = jnp.asarray(q_lens, jnp.int32)
+    if kv_lens is not None:
+        kv_lens = jnp.asarray(kv_lens, jnp.int32)
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
-    o = _flash_core(qt, kt, vt, causal, window, float(scale))
+    o = _flash_core(qt, kt, vt, q_lens, kv_lens, causal, window, float(scale))
     return jnp.swapaxes(o, 1, 2)

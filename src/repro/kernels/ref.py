@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scan_attention import NEG_INF
+from repro.core.softmax_attention import attention_mask, masked_softmax
 
 
 def aaren_scan_reference(s, v, m0=None, u0=None, w0=None):
@@ -104,10 +105,14 @@ def aaren_scan_vjp_reference(s, v, m0, u0, w0, g_o, g_m, g_u, g_w):
     return ds, dv, dm0, du0, dw0
 
 
-def flash_reference(q, k, v, *, causal=True, window=None, scale=None):
-    """Row-wise softmax attention with causal/window masks (GQA-aware).
+def flash_reference(q, k, v, *, causal=True, window=None, scale=None,
+                    q_lens=None, kv_lens=None):
+    """Row-wise softmax attention with causal/window/true-length masks
+    (GQA-aware).
 
-    q: (B, H, Nq, d); k/v: (B, G, Nk, d).  Returns (B, H, Nq, d).
+    q: (B, H, Nq, d); k/v: (B, G, Nk, d).  ``q_lens``/``kv_lens``: optional
+    (B,) int true lengths — queries at or beyond ``q_lens`` output 0, keys
+    at or beyond ``kv_lens`` are unattendable.  Returns (B, H, Nq, d).
     """
     b, h, n_q, d = q.shape
     g, n_k = k.shape[1], k.shape[2]
@@ -118,20 +123,16 @@ def flash_reference(q, k, v, *, causal=True, window=None, scale=None):
         v = jnp.repeat(v, h // g, axis=1)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    q_pos = np.arange(n_q)[:, None]
-    k_pos = np.arange(n_k)[None, :]
-    mask = np.ones((n_q, n_k), bool)
-    if causal:
-        mask &= k_pos <= q_pos
-    if window is not None:
-        mask &= k_pos > q_pos - window
-    s = jnp.where(jnp.asarray(mask), s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    mask = attention_mask(n_q, n_k, causal=causal, window=window,
+                          q_lens=q_lens, kv_lens=kv_lens)
+    s = jnp.where(mask, s, NEG_INF)
+    p = masked_softmax(s, mask)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(p.dtype))
     return out.astype(q.dtype)
 
 
-def flash_vjp_reference(q, k, v, do, *, causal=True, window=None, scale=None):
+def flash_vjp_reference(q, k, v, do, *, causal=True, window=None, scale=None,
+                        q_lens=None, kv_lens=None):
     """Analytic flash-attention cotangents, densely (the textbook formulas).
 
     With ``p = softmax(mask(qk^T scale))``, ``D_i = do_i · o_i``:
@@ -139,7 +140,10 @@ def flash_vjp_reference(q, k, v, do, *, causal=True, window=None, scale=None):
         dS = p ⊙ (do v^T - D),  dq = dS k · scale,
         dk = dS^T q · scale,    dv = p^T do        (group-summed for GQA).
 
-    Returns (dq, dk, dv) in the input dtypes.
+    True-length masking zeroes the masked entries of ``p`` (empty rows are
+    all-zero), so masked queries get dq = 0 and masked keys dk = dv = 0 —
+    their outputs are the constant 0.  Returns (dq, dk, dv) in the input
+    dtypes.
     """
     b, h, n_q, d = q.shape
     g = k.shape[1]
@@ -151,15 +155,10 @@ def flash_vjp_reference(q, k, v, do, *, causal=True, window=None, scale=None):
     qf, dof = q.astype(f32), do.astype(f32)
     s = jnp.einsum("bhqd,bhkd->bhqk", qf, ke) * scale
     n_k = k.shape[2]
-    q_pos = np.arange(n_q)[:, None]
-    k_pos = np.arange(n_k)[None, :]
-    mask = np.ones((n_q, n_k), bool)
-    if causal:
-        mask &= k_pos <= q_pos
-    if window is not None:
-        mask &= k_pos > q_pos - window
-    s = jnp.where(jnp.asarray(mask), s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    mask = attention_mask(n_q, n_k, causal=causal, window=window,
+                          q_lens=q_lens, kv_lens=kv_lens)
+    s = jnp.where(mask, s, NEG_INF)
+    p = masked_softmax(s, mask)
     o = jnp.einsum("bhqk,bhkd->bhqd", p, ve)
     delta = jnp.sum(dof * o, axis=-1)                       # (b, h, nq)
     dsc = p * (jnp.einsum("bhqd,bhkd->bhqk", dof, ve) - delta[..., None])

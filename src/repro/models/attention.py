@@ -79,12 +79,23 @@ def softmax_state_specs(cfg: ArchConfig, batch: int, cache_len: int):
 
 def softmax_sequence(p: dict, x: jax.Array, cfg: ArchConfig, *,
                      window: int | None, cache_len: int | None = None,
-                     pos_offset: int = 0):
+                     pos_offset: int = 0, lengths: jax.Array | None = None):
     """Causal (optionally windowed) self-attention over a full sequence.
 
+    ``lengths``: optional (B,) true lengths for ragged batches — positions
+    at or beyond a row's length are masked inside the attention kernel (the
+    padded tail reads 0), so ragged training/scoring never rounds batch
+    rows up.  Training/scoring only: the returned kv_cache is built from
+    the *full* fixed-shape sequence (its scalar ``index`` counts all N
+    positions), so decode handoff from a ragged prefill would attend the
+    padded keys as if real — per-row cache indices are the missing piece.
     Returns (y, kv_cache) — the cache holds the last ``cache_len`` positions
     (or everything if None ⇒ cache_len = N) for decode handoff.
     """
+    if lengths is not None and cache_len is not None:
+        raise NotImplementedError(
+            "ragged lengths with decode handoff needs per-row cache "
+            "indices; pass lengths only on training/scoring paths")
     b, n, _ = x.shape
     q = _proj_q(p, x)
     k, v = _proj_kv(p, x)
@@ -94,8 +105,10 @@ def softmax_sequence(p: dict, x: jax.Array, cfg: ArchConfig, *,
     # cp_flash_mha: ring flash attention when a context-parallel session is
     # active (the sequence dim lives on the `seq` mesh axis); otherwise the
     # usual flash_mha dispatch — Pallas flash kernel on TPU, masked softmax
-    # jnp reference elsewhere (CPU smoke tests + dry-run lowering).
-    ctx = dctx.cp_flash_mha(q, k, v, causal=True, window=window)
+    # jnp reference elsewhere (CPU smoke tests + dry-run lowering).  Either
+    # way true-length masking happens in-kernel (DESIGN.md §Masking).
+    ctx = dctx.cp_flash_mha(q, k, v, causal=True, window=window,
+                            lengths=lengths)
     y = _proj_out(p, ctx)
 
     cl = cache_len if cache_len is not None else n

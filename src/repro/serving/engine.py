@@ -214,8 +214,15 @@ class StreamingEngine:
             mask = jnp.arange(chunk)[None, :] < lengths[:, None]
             logits, new_states = lm_prefill_chunk(
                 cfg, pr, tokens, states, length_mask=mask)
+            # A slot scheduled with lengths == 0 (all-padding row) has no
+            # valid position: `lengths - 1` would gather index −1 — position
+            # 0's logits under clip semantics, silently, and the *last*
+            # position's under NumPy semantics.  Clamp to 0; the scheduler
+            # never samples such a slot, and its carry is untouched (the
+            # whole row enters the scan as ⊕-identity leaves).
+            last_idx = jnp.maximum(lengths - 1, 0)
             last = jnp.take_along_axis(
-                logits, (lengths - 1)[:, None, None], axis=1)  # (S, 1, V)
+                logits, last_idx[:, None, None], axis=1)  # (S, 1, V)
             return last, new_states
 
         def reset(states, mask):

@@ -237,12 +237,26 @@ def test_cp_session_noop_when_off(rng):
         assert current_cp() is None
 
 
-def test_cp_rejects_indivisible_length(rng):
+def test_cp_accepts_indivisible_length(rng):
+    """Arbitrary global N (N % P != 0) matches the single-device ops.
+
+    Scan mode pads the tail with ⊕-identity leaves; ring flash masks by
+    true length in-kernel (DESIGN.md §Masking) — both slice the pad off.
+    The old code raised ValueError here; the restriction is gone.
+    """
     cp8 = ContextParallel(make_host_mesh(context_parallel=8))
-    s = jnp.zeros((2, 2, 60))
-    v = jnp.zeros((2, 2, 60, 4))
-    with pytest.raises(ValueError, match="not divisible"):
-        cp_aaren_prefix_attention(s, v, cp=cp8)
-    q = jnp.zeros((1, 60, 2, 4))
-    with pytest.raises(ValueError, match="not divisible"):
-        cp_flash_mha(q, q, q, cp=cp8)
+    ks = jax.random.split(rng, 5)
+    s = jax.random.normal(ks[0], (2, 2, 60))
+    v = jax.random.normal(ks[1], (2, 2, 60, 4))
+    o_ref, f_ref = kops.aaren_prefix_attention(s, v)
+    o_cp, f_cp = cp_aaren_prefix_attention(s, v, cp=cp8)
+    _assert_close(o_cp, o_ref, msg="scan outputs at N=60, P=8")
+    for name in ("m", "u", "w"):
+        _assert_close(getattr(f_cp, name), getattr(f_ref, name),
+                      msg=f"final carry {name}")
+    q = jax.random.normal(ks[2], (1, 60, 2, 4))
+    k = jax.random.normal(ks[3], (1, 60, 2, 4))
+    vv = jax.random.normal(ks[4], (1, 60, 2, 4))
+    o_ref = kops.flash_mha(q, k, vv, causal=True)
+    o_cp = cp_flash_mha(q, k, vv, causal=True, cp=cp8)
+    _assert_close(o_cp, o_ref, msg="ring flash outputs at N=60, P=8")

@@ -1,0 +1,368 @@
+"""True-length masking for the flash kernels (DESIGN.md §Masking).
+
+Three invariants, all at ragged/odd/prime sequence lengths:
+
+* **Parity** — interpret-mode flash forward AND analytic backward match the
+  dense masked-softmax oracle (``ref.flash_reference`` /
+  ``ref.flash_vjp_reference``) across causal × windowed × GQA × dtype,
+  including per-batch-row ragged lengths.  A hypothesis property sweep
+  fuzzes the same contract over random shapes/lengths.
+* **Dense grid** — the launch never shrinks its tiles: prime N uses the same
+  ``(bq, bk)`` as N rounded up to the block multiple (the old ``bq //= 2``
+  fallback, which degenerated to a sequential grid, must not re-grow).
+* **Ring flash at arbitrary global N** — ``distributed/context.py`` accepts
+  ``N % P != 0`` (each rank masks by true length) with fwd+grad parity
+  against the single-device op; needs the 8-emulated-device CI job.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    resolve_blocks,
+    round_up,
+    flash_attention,
+    flash_attention_bwd,
+)
+from repro.kernels.ref import flash_reference, flash_vjp_reference
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+def _qkv(rng, b, h, g, n, d, dtype=jnp.float32):
+    q = jax.random.normal(rng, (b, h, n, d)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (b, g, n, d)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (b, g, n, d)).astype(dtype)
+    return q, k, v
+
+
+def _ragged_lens(n):
+    """Two batch rows: one genuinely ragged, one full-length."""
+    return jnp.asarray([max(1, (2 * n) // 3), n], jnp.int32)
+
+
+def _grad_close(got, ref, rtol=1e-4):
+    for a, b, name in zip(got, ref, ("dq", "dk", "dv")):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        scale = max(np.abs(b).max(), 1e-6)
+        np.testing.assert_allclose(a / scale, b / scale, rtol=rtol, atol=rtol,
+                                   err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Forward parity at ragged / odd / prime N
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 7, 97, 255, 257, 1000])
+@pytest.mark.parametrize("ragged", [False, True])
+def test_flash_fwd_ragged_n(n, ragged, rng):
+    """Interpret-mode forward == dense reference at every awkward N,
+    with and without per-row true lengths."""
+    b, h, g, d = 2, 2, 2, 16
+    q, k, v = _qkv(jax.random.fold_in(rng, n), b, h, g, n, d)
+    lens = _ragged_lens(n) if ragged else None
+    o_k = flash_attention(q, k, v, causal=True, q_lens=lens, kv_lens=lens,
+                          block_q=64, block_k=64, interpret=True)
+    o_r = flash_reference(q, k, v, causal=True, q_lens=lens, kv_lens=lens)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 48),
+                                           (False, None)])
+@pytest.mark.parametrize("g", [4, 2])
+def test_flash_fwd_mask_matrix(causal, window, g, rng):
+    """causal × windowed × noncausal × GQA at prime N with ragged lengths."""
+    b, h, n, d = 2, 4, 97, 16
+    q, k, v = _qkv(jax.random.fold_in(rng, 7 * g + window if window else g),
+                   b, h, g, n, d)
+    lens = _ragged_lens(n)
+    o_k = flash_attention(q, k, v, causal=causal, window=window,
+                          q_lens=lens, kv_lens=lens,
+                          block_q=64, block_k=64, interpret=True)
+    o_r = flash_reference(q, k, v, causal=causal, window=window,
+                          q_lens=lens, kv_lens=lens)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_fwd_ragged_dtypes(dtype, rng):
+    b, h, g, n, d = 2, 4, 2, 250, 32
+    q, k, v = _qkv(rng, b, h, g, n, d, dtype)
+    lens = _ragged_lens(n)
+    o_k = flash_attention(q, k, v, causal=True, q_lens=lens, kv_lens=lens,
+                          block_q=64, block_k=64, interpret=True)
+    o_r = flash_reference(q, k, v, causal=True, q_lens=lens, kv_lens=lens)
+    assert o_k.dtype == dtype
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32), **_tol(dtype))
+
+
+def test_flash_masked_queries_read_zero(rng):
+    """Rows at or beyond q_lens output exactly 0 (the empty-set rule), and
+    keys at or beyond kv_lens are unattendable even when their zero-padded
+    values would otherwise pull every output toward the value mean."""
+    b, h, g, n, d = 1, 2, 2, 37, 8
+    q, k, v = _qkv(rng, b, h, g, n, d)
+    # Make padded keys adversarial: huge values beyond the true length.
+    v = v.at[:, :, 20:, :].set(1e4)
+    lens = jnp.asarray([20], jnp.int32)
+    o = flash_attention(q, k, v, causal=True, q_lens=lens, kv_lens=lens,
+                        block_q=16, block_k=128, interpret=True)
+    o = np.asarray(o)
+    assert np.all(o[:, :, 20:, :] == 0.0)
+    assert np.all(np.abs(o[:, :, :20, :]) < 1e2), \
+        "a padded key leaked into a valid row"
+
+
+def test_flash_oversized_lengths_are_noop(rng):
+    """Lengths beyond N are clamped: they must match lens=None, not unmask
+    the zero-padded block tail (whose keys score exp(-m) > 0 and would
+    absorb real probability mass — worst in the non-causal path)."""
+    b, h, g, n, d = 1, 2, 2, 37, 8
+    q, k, v = _qkv(rng, b, h, g, n, d)
+    big = jnp.asarray([n + 100], jnp.int32)
+    for causal in (True, False):
+        o_big = flash_attention(q, k, v, causal=causal, q_lens=big,
+                                kv_lens=big, block_q=16, block_k=128,
+                                interpret=True)
+        o_ref = flash_reference(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(o_big), np.asarray(o_ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Backward parity (analytic kernels and the ops custom-VJP path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,window", [(97, None), (250, 48), (255, None)])
+def test_flash_bwd_kernel_ragged(n, window, rng):
+    """flash_attention_bwd == dense analytic formulas under ragged lengths."""
+    b, h, g, d = 2, 4, 2, 16
+    q, k, v = _qkv(jax.random.fold_in(rng, n), b, h, g, n, d)
+    do = jax.random.normal(jax.random.fold_in(rng, 3), (b, h, n, d))
+    lens = _ragged_lens(n)
+    o, lse = flash_attention(q, k, v, causal=True, window=window,
+                             q_lens=lens, kv_lens=lens, block_q=64,
+                             block_k=64, return_residuals=True,
+                             interpret=True)
+    got = flash_attention_bwd(q, k, v, o, lse, do, causal=True, window=window,
+                              q_lens=lens, kv_lens=lens, block_q=64,
+                              block_k=64, interpret=True)
+    ref = flash_vjp_reference(q, k, v, do, causal=True, window=window,
+                              q_lens=lens, kv_lens=lens)
+    _grad_close(got, ref)
+
+
+@pytest.mark.parametrize("n", [97, 255])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_grad_parity_ragged(n, dtype, rng, monkeypatch):
+    """jax.grad through the dispatched op (interpret mode) == jnp autodiff
+    at odd/prime N with per-row ragged lengths."""
+    from repro.kernels.ops import flash_mha
+
+    b, h, g, d = 2, 4, 2, 16
+    q = jax.random.normal(rng, (b, n, h, d)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (b, n, g, d)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (b, n, g, d)).astype(dtype)
+    lens = _ragged_lens(n)
+
+    def loss(q_, k_, v_):
+        return jnp.sum(flash_mha(q_, k_, v_, causal=True,
+                                 q_lens=lens, kv_lens=lens) ** 2)
+
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    g_kernel = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "jnp")
+    g_jnp = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    _grad_close(g_kernel, g_jnp,
+                rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_flash_fwd_bwd_n1000_acceptance(rng):
+    """Acceptance: fwd+bwd at N = 1000 matches the dense reference to 1e-5
+    (f32) on the DEFAULT block sizes — i.e. with no ``bq`` halving."""
+    b, h, g, n, d = 1, 2, 2, 1000, 16
+    bq, bk = resolve_blocks(n, n, DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K)
+    assert (bq, bk) == (DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K)
+    q, k, v = _qkv(rng, b, h, g, n, d)
+    do = jax.random.normal(jax.random.fold_in(rng, 3), (b, h, n, d))
+    o, lse = flash_attention(q, k, v, causal=True, return_residuals=True,
+                             interpret=True)
+    o_r = flash_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
+                               rtol=1e-5, atol=1e-5)
+    got = flash_attention_bwd(q, k, v, o, lse, do, causal=True,
+                              interpret=True)
+    ref = flash_vjp_reference(q, k, v, do, causal=True)
+    _grad_close(got, ref, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Dense-grid invariant: no halving path left to re-grow
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [97, 251, 997, 1000, 1023])
+def test_dense_grid_invariant(n):
+    """A prime/ragged N launches the same tiles as N rounded up to the
+    block multiple, and the grid is the dense ceil(N / block) — the old
+    fallback collapsed e.g. N = 1000 to bq = 8 (125 sequential q-steps)."""
+    for blocks in ((DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K), (64, 64)):
+        got = resolve_blocks(n, n, *blocks)
+        # Fixpoint: the padded length (N rounded up to the resolved block
+        # multiple) resolves to the same tiles — there is no halving-then-
+        # regrow asymmetry between a ragged N and its padded launch shape.
+        n_round = round_up(n, got[0]), round_up(n, got[1])
+        assert got == resolve_blocks(n_round[0], n_round[1], *blocks)
+        if n >= blocks[0]:
+            assert got[0] == blocks[0], "q tile shrank below the request"
+        if n >= blocks[1]:
+            assert got[1] == blocks[1], "kv tile shrank below the request"
+        assert round_up(n, got[0]) // got[0] == -(-n // got[0])
+
+
+def test_short_sequence_single_tile():
+    """N below one block pads to a single hardware-quantum tile."""
+    assert resolve_blocks(1, 1, 256, 256) == (8, 128)
+    assert resolve_blocks(7, 7, 256, 256) == (8, 128)
+    assert resolve_blocks(200, 200, 256, 256) == (200, 256)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property sweep
+# ---------------------------------------------------------------------------
+
+# Property tests need hypothesis; environments without it (e.g. the minimal
+# CI/container image) keep the parametrized suite above and lose only the
+# fuzz sweep — a module-level importorskip would skip the whole file.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=160),
+        data=st.data(),
+        window=st.one_of(st.none(), st.integers(min_value=1, max_value=64)),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_flash_masking_property(n, data, window, seed):
+        """For any N, any per-row lengths ≤ N, any window: interpret-mode
+        flash fwd == dense reference, and the analytic bwd == dense VJP."""
+        b, h, g, d = 2, 2, 1, 8
+        lens = jnp.asarray(
+            [data.draw(st.integers(min_value=0, max_value=n))
+             for _ in range(b)], jnp.int32)
+        key = jax.random.PRNGKey(seed)
+        q, k, v = _qkv(key, b, h, g, n, d)
+        do = jax.random.normal(jax.random.fold_in(key, 3), (b, h, n, d))
+        kw = dict(causal=True, window=window, q_lens=lens, kv_lens=lens)
+        o, lse = flash_attention(q, k, v, block_q=32, block_k=128,
+                                 return_residuals=True, interpret=True, **kw)
+        o_r = flash_reference(q, k, v, **kw)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
+                                   rtol=2e-5, atol=2e-5)
+        got = flash_attention_bwd(q, k, v, o, lse, do, block_q=32,
+                                  block_k=128, interpret=True, **kw)
+        ref = flash_vjp_reference(q, k, v, do, **kw)
+        _grad_close(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# Ring flash at arbitrary global N (8 emulated devices)
+# ---------------------------------------------------------------------------
+
+ring = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 (emulated) devices: "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@ring
+def test_ring_flash_global_n1000_grad_parity(rng):
+    """Global N = 1000 on the 8-device mesh (1000 % 8 == 0 but 1000 is not
+    a power of two — and the per-shard length 125 is odd): train-style loss
+    and gradients match the single-device op to ≤ 1e-5."""
+    from repro.distributed.context import ContextParallel, cp_flash_mha
+    from repro.kernels import ops as kops
+    from repro.launch.mesh import make_host_mesh
+
+    cp8 = ContextParallel(make_host_mesh(context_parallel=8))
+    b, n, h, g, d = 1, 1000, 2, 1, 8
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, n, h, d))
+    k = jax.random.normal(ks[1], (b, n, g, d))
+    v = jax.random.normal(ks[2], (b, n, g, d))
+
+    def loss(fn):
+        return lambda q_, k_, v_: jnp.sum(jnp.cos(fn(q_, k_, v_)))
+
+    l_ref = loss(lambda a, b_, c: kops.flash_mha(a, b_, c, causal=True))
+    l_cp = loss(lambda a, b_, c: cp_flash_mha(a, b_, c, causal=True, cp=cp8))
+    np.testing.assert_allclose(float(l_cp(q, k, v)), float(l_ref(q, k, v)),
+                               rtol=1e-6, atol=1e-6)
+    g_ref = jax.grad(l_ref, argnums=(0, 1, 2))(q, k, v)
+    g_cp = jax.grad(l_cp, argnums=(0, 1, 2))(q, k, v)
+    for a, b_, name in zip(g_cp, g_ref, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=1e-5, rtol=1e-5, err_msg=name)
+
+
+@ring
+@pytest.mark.parametrize("n", [57, 1000])
+def test_ring_flash_indivisible_and_ragged(rng, n):
+    """N % P != 0 (57 on 8 devices) and ragged per-row lengths both run the
+    ring and match the single-device true-length-masked op — forward AND
+    gradients (the acceptance criterion: the padded ring tail must be inert
+    under autodiff too, not just in the forward)."""
+    from repro.distributed.context import ContextParallel, cp_flash_mha
+    from repro.kernels import ops as kops
+    from repro.launch.mesh import make_host_mesh
+
+    cp8 = ContextParallel(make_host_mesh(context_parallel=8))
+    b, h, g, d = 2, 4, 2, 8
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, n, h, d))
+    k = jax.random.normal(ks[1], (b, n, g, d))
+    v = jax.random.normal(ks[2], (b, n, g, d))
+    lens = jnp.asarray([max(1, n - n // 3), n], jnp.int32)
+    for lengths in (None, lens):
+        o_ref = kops.flash_mha(q, k, v, causal=True, q_lens=lengths,
+                               kv_lens=lengths)
+        o_cp = cp_flash_mha(q, k, v, causal=True, lengths=lengths, cp=cp8)
+        np.testing.assert_allclose(np.asarray(o_cp), np.asarray(o_ref),
+                                   atol=1e-5, rtol=1e-5)
+    if n != 57:
+        return  # grad parity at the indivisible N (the expensive half)
+
+    def loss(fn):
+        return lambda q_, k_, v_: jnp.sum(jnp.cos(fn(q_, k_, v_)))
+
+    g_ref = jax.grad(
+        loss(lambda a, b_, c: kops.flash_mha(a, b_, c, causal=True,
+                                             q_lens=lens, kv_lens=lens)),
+        argnums=(0, 1, 2))(q, k, v)
+    g_cp = jax.grad(
+        loss(lambda a, b_, c: cp_flash_mha(a, b_, c, causal=True,
+                                           lengths=lens, cp=cp8)),
+        argnums=(0, 1, 2))(q, k, v)
+    for a, b_, name in zip(g_cp, g_ref, ("dq", "dk", "dv")):
+        assert np.all(np.isfinite(np.asarray(a))), name
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=1e-5, rtol=1e-5, err_msg=name)

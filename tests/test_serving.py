@@ -226,6 +226,40 @@ def test_readout_empty_state_is_defined():
                                rtol=1e-6)
 
 
+def test_all_padding_step_is_safe(aaren_model, rng):
+    """A slot scheduled with ``lengths == 0`` (all-padding row) used to
+    gather last-valid logits at index ``lengths - 1 == -1`` — silently
+    reading some other position's logits.  The guarded step must (a) return
+    finite logits for every slot and (b) leave the padded slot's carries
+    exactly untouched (the whole row enters the scan as ⊕-identity
+    leaves)."""
+    api, params = aaren_model
+    eng = StreamingEngine(api, params, n_slots=2, chunk=4,
+                          key=jax.random.PRNGKey(1))
+    # Give slot carries non-trivial values first: serve one real request.
+    eng.submit(np.asarray([3, 5, 7], np.int32), 2)
+    eng.step()
+    before = jax.tree.map(np.asarray, eng.states)
+
+    tokens = jnp.zeros((2, 4), jnp.int32)
+    lengths = jnp.asarray([0, 0], jnp.int32)      # every slot all-padding
+    last, after = eng._step_fn(eng.params, tokens, lengths, eng.states)
+    assert np.all(np.isfinite(np.asarray(last)))
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_allclose(np.asarray(b), a, rtol=0, atol=0)
+
+    # Mixed tick: one real decode row next to an all-padding row must give
+    # the real row exactly the logits it gets when every slot is live —
+    # the padded row must not leak into it through any cross-row path.
+    last_live, _ = eng._step_fn(
+        eng.params, tokens, jnp.asarray([1, 1], jnp.int32), eng.states)
+    last_mixed, _ = eng._step_fn(
+        eng.params, tokens, jnp.asarray([1, 0], jnp.int32), eng.states)
+    assert np.all(np.isfinite(np.asarray(last_mixed)))
+    np.testing.assert_allclose(np.asarray(last_mixed[0]),
+                               np.asarray(last_live[0]), rtol=0, atol=0)
+
+
 def test_masked_chunk_matches_sliced(rng):
     """⊕-identity masking: a fixed-shape chunk with a ragged valid prefix
     must equal the same chunk sliced to the prefix, on both the layer-level
