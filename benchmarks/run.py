@@ -50,17 +50,32 @@ MODULES = [
 ]
 
 
+def select_modules(only: str | None) -> list:
+    """Resolve a ``--only`` selector (comma-separated names) to modules.
+
+    Every unknown name is an error listing the valid selectors — a typo'd
+    selector must never silently run nothing (and in a CI pipeline, never
+    silently "pass" by skipping the benchmark it was supposed to gate).
+    """
+    if not only:
+        return MODULES
+    names = [n.strip() for n in only.split(",") if n.strip()]
+    known = {n for n, _ in MODULES}
+    unknown = [n for n in names if n not in known]
+    if unknown or not names:
+        raise SystemExit(
+            f"unknown module(s) {unknown or [only]!r}; "
+            f"known: {sorted(known)}")
+    return [(n, m) for n, m in MODULES if n in names]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="run a single module (e.g. 'serving')")
+                    help="run a subset of modules, comma-separated "
+                         "(e.g. 'serving' or 'kernels,serving')")
     args = ap.parse_args()
-    modules = MODULES
-    if args.only:
-        modules = [(n, m) for n, m in MODULES if n == args.only]
-        if not modules:
-            raise SystemExit(f"unknown module {args.only!r}; "
-                             f"known: {[n for n, _ in MODULES]}")
+    modules = select_modules(args.only)
 
     print("name,us_per_call,derived")
     failures = []

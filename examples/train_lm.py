@@ -10,6 +10,13 @@ over a ``seq`` mesh axis of size P (needs >= P devices; on CPU emulate with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  The loss curve is
 identical to the single-device run — only the activation footprint and the
 per-device scan length change (DESIGN.md §Context-parallelism).
+
+Sequence packing: ``--pack`` switches the data stream to ragged documents
+bin-packed into fixed rows (segment ids + per-document positions,
+DESIGN.md §Packing) — the attention stack keeps documents independent via
+segment masks / carry resets, and the logs gain a ``token_util`` column
+(real tokens per row slot; 1.0 ≡ zero padding waste).  Composes with
+``--context-parallel``.
 """
 
 import argparse
@@ -19,6 +26,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.data.packing import PackedLMIterator
 from repro.data.synthetic import SyntheticLMIterator
 from repro.models.factory import build
 from repro.models.param import count_params
@@ -52,8 +60,18 @@ def train_one(attn_mode: str, args) -> list:
     state = init_train_state(params, opt)
     step = jax.jit(make_train_step(api.loss, opt,
                                    n_microbatches=args.microbatches))
-    data = SyntheticLMIterator(vocab=cfg.vocab, seq_len=args.seq_len,
-                               batch=args.batch, seed=args.seed)
+    if args.pack:
+        data = PackedLMIterator(vocab=cfg.vocab, seq_len=args.seq_len,
+                                batch=args.batch, seed=args.seed)
+    else:
+        data = SyntheticLMIterator(vocab=cfg.vocab, seq_len=args.seq_len,
+                                   batch=args.batch, seed=args.seed)
+
+    def log(s, m):
+        util = f" util {m['token_util']:.2f}" if "token_util" in m else ""
+        print(f"  [{attn_mode}] step {s:4d} loss {m['loss']:.4f} "
+              f"({m['step_time_s']*1e3:.0f} ms){util}")
+
     with tempfile.TemporaryDirectory() as ckpt_dir:
         res = run_train_loop(
             step, state, data,
@@ -61,10 +79,9 @@ def train_one(attn_mode: str, args) -> list:
                        save_every=max(args.steps // 4, 1),
                        log_every=max(args.steps // 10, 1),
                        install_signal_handlers=False,
-                       context_parallel=args.context_parallel),
-            on_log=lambda s, m: print(
-                f"  [{attn_mode}] step {s:4d} loss {m['loss']:.4f} "
-                f"({m['step_time_s']*1e3:.0f} ms)"))
+                       context_parallel=args.context_parallel,
+                       pack_sequences=args.pack),
+            on_log=log)
     return res.history
 
 
@@ -80,6 +97,9 @@ def main():
     ap.add_argument("--skip-baseline", action="store_true")
     ap.add_argument("--context-parallel", type=int, default=1,
                     help="size of the seq mesh axis (1 = off)")
+    ap.add_argument("--pack", action="store_true",
+                    help="train on bin-packed ragged documents "
+                         "(segment-aware attention, DESIGN.md §Packing)")
     args = ap.parse_args()
 
     hist_aaren = train_one("aaren", args)

@@ -44,3 +44,27 @@ def rope_for_positions(x: jax.Array, positions: jax.Array, theta: float = 10000.
     cos, sin = rope_freqs(positions, x.shape[-1], theta)
     # insert head axis for broadcasting: (..., N, 1, d/2)
     return apply_rope(x, cos[..., None, :], sin[..., None, :])
+
+
+def segment_positions(segment_ids: jax.Array) -> jax.Array:
+    """Within-segment positions for a packed row: the RoPE restart array.
+
+    segment_ids: (..., N) int with contiguous same-id runs (0 = padding).
+    Each run's positions restart at 0, so a packed document is rotated by
+    exactly the phases its unpacked twin would see — keeping K/V phase
+    differences within a document and never leaking absolute row offsets
+    across documents (DESIGN.md §Packing).  Padding positions read 0.
+    Data pipelines usually ship a precomputed ``positions`` array
+    (``data/packing.py``); this is the fallback for callers that only have
+    segment ids.
+    """
+    n = segment_ids.shape[-1]
+    idx = jnp.arange(n)
+    prev = jnp.pad(segment_ids[..., :-1],
+                   [(0, 0)] * (segment_ids.ndim - 1) + [(1, 0)],
+                   constant_values=-1)
+    starts = segment_ids != prev
+    # index of the most recent segment start at or before each position
+    last_start = jax.lax.cummax(jnp.where(starts, idx, 0), axis=segment_ids.ndim - 1)
+    pos = idx - last_start
+    return jnp.where(segment_ids != 0, pos, 0)

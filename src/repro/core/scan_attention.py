@@ -82,6 +82,51 @@ def mask_to_identity(s: jax.Array, v: jax.Array, mask: jax.Array):
     return s, v
 
 
+def segment_starts_from_ids(segment_ids: jax.Array) -> jax.Array:
+    """Boolean start flags from a packed row's segment ids (..., N).
+
+    Position ``i`` starts a segment iff its id differs from position
+    ``i-1``'s *and* is a real segment (``id != 0`` — 0 is the padding id,
+    whose positions are ⊕-identity leaves, never resets).  Position 0 is
+    deliberately *not* flagged: a reset there would cut off the incoming
+    carry, but the carry is what a scan is continued *with* — identity for
+    a fresh packed row (folding it is a no-op), a real state when a
+    sequence-sharded or chunked caller seeds the row's first document with
+    its already-scanned prefix.  Computed *before* any sequence sharding:
+    a shard-local recomputation would see a false boundary at shard edges
+    (DESIGN.md §Packing).
+    """
+    prev = jnp.concatenate(
+        [segment_ids[..., :1], segment_ids[..., :-1]], axis=-1)
+    return (segment_ids != prev) & (segment_ids != 0)
+
+
+def combine_segmented(lhs, rhs):
+    """Segmented ⊕ on flagged states (paper's ⊕ + a reset flag).
+
+    Operands are ``(m, u, w, f)`` tuples where ``f > 0`` marks "this
+    operand's index window contains a segment start".  ``rhs`` covers the
+    *later* window: if it contains a start, the earlier operand is dropped
+    entirely (the scan restarts at the boundary); otherwise this is exactly
+    :func:`combine`.  The flag composes by OR.  Associativity of the lifted
+    operator is the standard segmented-scan construction (Blelloch 1990) and
+    is property-tested in tests/test_packing.py.
+    """
+    m_l, u_l, w_l, f_l = lhs
+    m_r, u_r, w_r, f_r = rhs
+    keep = f_r == 0.0
+    m = jnp.where(keep, jnp.maximum(m_l, m_r), m_r)
+    alpha = jnp.where(keep, jnp.exp(m_l - m), 0.0)
+    beta = jnp.exp(m_r - m)  # == 1 where the reset pinned m to m_r
+    if alpha.ndim < w_l.ndim:
+        alpha_w, beta_w = alpha[..., None], beta[..., None]
+    else:
+        alpha_w, beta_w = alpha, beta
+    u = u_l * alpha + u_r * beta
+    w = w_l * alpha_w + w_r * beta_w
+    return m, u, w, jnp.maximum(f_l, f_r)
+
+
 def combine(lhs: ScanState, rhs: ScanState) -> ScanState:
     """The paper's associative operator ``(+)`` (§3.2, App. B).
 
@@ -215,6 +260,27 @@ def prefix_scan_states(s: jax.Array, v: jax.Array) -> ScanState:
     lifted = ScanState(m=leaves.m[..., None], u=leaves.u[..., None], w=leaves.w)
     out = jax.lax.associative_scan(combine, lifted, axis=-2)
     return ScanState(m=out.m[..., 0], u=out.u[..., 0], w=out.w)
+
+
+def prefix_scan_states_segmented(
+    s: jax.Array, v: jax.Array, segment_starts: jax.Array
+) -> tuple[ScanState, jax.Array]:
+    """Per-segment all-prefix states: the scan restarts at every start flag.
+
+    s: (..., N) scores; v: (..., N, d) values; segment_starts: (..., N)
+    bool/int — True at the first token of each segment.  Returns
+    ``(states, seen)`` where ``states``'s leaves match
+    :func:`prefix_scan_states` but position ``i`` accumulates only tokens of
+    its own segment, and ``seen: (..., N)`` is 1.0 once any start has
+    occurred at or before ``i`` (used to gate an incoming carry: a carry may
+    only fold into positions before the first reset).
+    """
+    leaves = make_leaf_state(s.astype(jnp.float32), v.astype(jnp.float32))
+    f = segment_starts.astype(jnp.float32)
+    lifted = (leaves.m[..., None], leaves.u[..., None], leaves.w, f[..., None])
+    m, u, w, seen = jax.lax.associative_scan(combine_segmented, lifted,
+                                             axis=-2)
+    return ScanState(m=m[..., 0], u=u[..., 0], w=w), seen[..., 0]
 
 
 def attention_many_to_many(

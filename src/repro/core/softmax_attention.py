@@ -47,16 +47,22 @@ def attention_mask(n_q: int, n_k: int, *, causal: bool = True,
                    window: int | None = None,
                    q_lens: jax.Array | None = None,
                    kv_lens: jax.Array | None = None,
+                   q_segment_ids: jax.Array | None = None,
+                   kv_segment_ids: jax.Array | None = None,
                    q_offset: int = 0) -> jax.Array:
     """(B-or-1, 1, Nq, Nk) boolean validity mask — the one shared builder.
 
     Causal/window compare *absolute* positions (``q_offset`` is the absolute
     position of query row 0, for decode chunks against a cache); ``q_lens``
     counts valid **local** query rows of this block and ``kv_lens`` valid
-    keys, each (B,) int.  Feed the result to :func:`masked_softmax` after
-    ``where(mask, s, NEG_INF)``.  ``ref.flash_reference`` (the kernel parity
-    oracle) and :func:`multihead_attention` both build their masks here, so
-    the two cannot drift.
+    keys, each (B,) int.  ``q_segment_ids``/``kv_segment_ids``: optional
+    (B, Nq)/(B, Nk) int packed-sequence segment ids — a (q, k) pair is
+    attendable only when both carry the same nonzero id (0 is the padding
+    id, whose rows/keys are fully masked; DESIGN.md §Packing).  Feed the
+    result to :func:`masked_softmax` after ``where(mask, s, NEG_INF)``.
+    ``ref.flash_reference`` (the kernel parity oracle) and
+    :func:`multihead_attention` both build their masks here, so the two
+    cannot drift.
     """
     q_pos = jnp.arange(n_q)[:, None] + q_offset
     k_pos = jnp.arange(n_k)[None, :]
@@ -71,6 +77,12 @@ def attention_mask(n_q: int, n_k: int, *, causal: bool = True,
         mask = mask & (row[None, None] < q_lens[:, None, None, None])
     if kv_lens is not None:
         mask = mask & (k_pos[None, None] < kv_lens[:, None, None, None])
+    if q_segment_ids is not None or kv_segment_ids is not None:
+        seg_q = q_segment_ids if q_segment_ids is not None else kv_segment_ids
+        seg_k = kv_segment_ids if kv_segment_ids is not None else q_segment_ids
+        sq = seg_q[:, None, :, None]                      # (B, 1, Nq, 1)
+        sk = seg_k[:, None, None, :]                      # (B, 1, 1, Nk)
+        mask = mask & (sq == sk) & (sq != 0)
     return mask
 
 
@@ -100,6 +112,7 @@ def multihead_attention(
     q_offset: int = 0,
     lengths: jax.Array | None = None,
     q_lens: jax.Array | None = None,
+    segment_ids: jax.Array | None = None,
     scale: float | None = None,
 ) -> jax.Array:
     """softmax(q k^T) v with optional causal / sliding-window / length masks.
@@ -107,7 +120,10 @@ def multihead_attention(
     q: (B, Nq, H, d); k, v: (B, Nk, G, d) with G | H.  Returns (B, Nq, H, d).
     ``lengths``: (B,) number of valid key positions (for decode with caches
     and ragged batches); ``q_lens``: (B,) number of valid query rows —
-    rows at or beyond it output 0.  A row with no attendable key reads 0
+    rows at or beyond it output 0.  ``segment_ids``: (B, N) packed-sequence
+    ids for self-attention (Nq == Nk) — attention never crosses a segment
+    boundary and padding (id 0) is fully masked.  A row with no attendable
+    key reads 0
     (the empty-set convention shared with the flash kernels, DESIGN.md
     §Masking) instead of the uniform average a raw softmax over finite
     ``NEG_INF`` biases would produce.
@@ -126,7 +142,9 @@ def multihead_attention(
     # causal_mask_bias gated it); flash applies it unconditionally.
     mask = attention_mask(n_q, n_k, causal=causal,
                           window=window if causal else None,
-                          q_lens=q_lens, kv_lens=lengths, q_offset=q_offset)
+                          q_lens=q_lens, kv_lens=lengths,
+                          q_segment_ids=segment_ids,
+                          kv_segment_ids=segment_ids, q_offset=q_offset)
     s = jnp.where(mask, s, NEG_INF)
     p = masked_softmax(s, mask)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(p.dtype))

@@ -1,6 +1,12 @@
 """Deterministic synthetic data pipelines (offline stand-ins for the paper's
 datasets), per-host sharded and state-restorable."""
 
+from repro.data.packing import (  # noqa: F401
+    PackedLMIterator,
+    pack_documents,
+    packing_stats,
+    unpack_documents,
+)
 from repro.data.synthetic import (  # noqa: F401
     CopyTaskIterator,
     EventStreamGenerator,

@@ -51,8 +51,11 @@ from repro.core.scan_attention import (
     NEG_INF,
     ScanState,
     combine,
+    combine_segmented,
     make_empty_state,
+    mask_to_identity,
     readout,
+    segment_starts_from_ids,
 )
 from repro.kernels import flash_attention as _kflash
 from repro.kernels import ops as kops
@@ -206,6 +209,74 @@ def device_allreduce_state(total: ScanState, axis: str,
 
 
 # ---------------------------------------------------------------------------
+# Segmented carry algebra (packed sequences; DESIGN.md §Packing)
+# ---------------------------------------------------------------------------
+
+
+def _seg_combine(lhs: ScanState, f_l, rhs: ScanState, f_r):
+    """Segmented ⊕ on (state, has-reset) pairs; ``rhs`` is the later span.
+
+    If the later span contains a segment start, the earlier state is
+    dropped (the scan restarted inside ``rhs``); flags compose by OR.
+    ScanState-shaped adapter over the one shared operator
+    (``scan_attention.combine_segmented`` — also the kernels' formula), so
+    the reset/rescale algebra exists in exactly one place.
+    """
+    m, u, w, f = combine_segmented((lhs.m, lhs.u, lhs.w, f_l),
+                                   (rhs.m, rhs.u, rhs.w, f_r))
+    return ScanState(m=m, u=u, w=w), f
+
+
+def shard_total_segmented(s, v, starts):
+    """⊕-total of a shard *since its last segment start* + a has-start flag.
+
+    Positions before the shard's last flagged start are masked to the
+    ⊕ identity (they belong to documents the running carry must not cross),
+    so the pair ``(total, flag)`` is exactly the shard's aggregate under
+    the segmented operator: composing shards with :func:`_seg_combine`
+    reproduces the sequential segmented fold.
+    """
+    n = s.shape[-1]
+    axis = starts.ndim - 1
+    # has a start at a position strictly AFTER t  ⇔  t precedes the last
+    # start  ⇒  masked out of the running total.
+    at_or_after = jnp.flip(jax.lax.cummax(jnp.flip(starts, -1), axis=axis), -1)
+    after = jnp.concatenate(
+        [at_or_after[..., 1:], jnp.zeros_like(at_or_after[..., :1])], axis=-1)
+    s_m, v_m = mask_to_identity(s, v, after == 0)
+    flag = (jnp.max(starts, axis=-1) > 0).astype(jnp.float32)
+    return shard_total(s_m, v_m), flag
+
+
+def device_exclusive_scan_segmented(total: ScanState, flag, axis: str,
+                                    axis_size: int):
+    """Exclusive cross-device prefix scan under the *segmented* ⊕.
+
+    Same log-step ppermute ladder as :func:`device_exclusive_scan`, lifted
+    to (state, flag) pairs: rank p ends with the segmented fold of shards
+    0..p-1 — i.e. the state of the document still open at its left
+    boundary, and the ⊕ identity if a start occurred in between.  Returns
+    (prefix state, prefix flag); a shard whose prefix flag is set must not
+    fold the global incoming carry (a reset separates them).
+    """
+    idx = jax.lax.axis_index(axis)
+
+    def shift(st, f, k):
+        recv = _shift_states(st, k, axis, axis_size, idx)
+        perm = [(i, i + k) for i in range(axis_size - k)]
+        f_recv = jax.lax.ppermute(f, axis, perm)
+        return recv, jnp.where(idx >= k, f_recv, 0.0)
+
+    acc, f_acc = shift(total, flag, 1)
+    k = 1
+    while k < axis_size:
+        older, f_old = shift(acc, f_acc, k)
+        acc, f_acc = _seg_combine(older, f_old, acc, f_acc)
+        k *= 2
+    return acc, f_acc
+
+
+# ---------------------------------------------------------------------------
 # Context-parallel Aaren prefix attention (scan mode)
 # ---------------------------------------------------------------------------
 
@@ -226,8 +297,64 @@ def _cp_scan_forward(s, v, m0, u0, w0, axis, axis_size):
     return o, fin.m, fin.u, fin.w
 
 
-def _make_cp_scan_core(axis: str, axis_size: int):
+def _cp_scan_forward_segmented(s, v, m0, u0, w0, starts, axis, axis_size):
+    """Segmented per-shard forward (packed sequences, DESIGN.md §Packing).
+
+    Resets stay *local to each shard's fused scan* — the only cross-device
+    change is that the carry exchange runs under the segmented ⊕: a shard's
+    contribution is its ⊕-total since its last internal reset plus a
+    has-reset flag, so a document spanning a shard boundary is seeded by
+    exactly its own prefix and a boundary inside an earlier shard cuts the
+    chain.  ``starts`` holds *globally computed* start flags (shard-local
+    recomputation would flag a false boundary at every shard edge — the
+    wrapper computes them once outside the shard_map).  The incoming carry
+    folds only into shards before the first global reset; the final carry
+    is the segmented fold of all shards = the last document's state.
+    """
+    carry0 = ScanState(m=m0, u=u0, w=w0)
+    total, flag = shard_total_segmented(s, v, starts)
+    prefix, pre_flag = device_exclusive_scan_segmented(
+        total, flag, axis, axis_size)
+    seed, _ = _seg_combine(carry0, jnp.zeros_like(pre_flag), prefix, pre_flag)
+    o, _ = kops.aaren_prefix_attention(s, v, seed, segment_starts=starts)
+    # Final carry: ordered segmented fold of the gathered shard aggregates.
+    g = jax.tree.map(lambda x: jax.lax.all_gather(x, axis), (total, flag))
+    acc = ScanState(m=g[0].m[0], u=g[0].u[0], w=g[0].w[0])
+    f_acc = g[1][0]
+    for p in range(1, axis_size):
+        acc, f_acc = _seg_combine(
+            acc, f_acc, ScanState(m=g[0].m[p], u=g[0].u[p], w=g[0].w[p]),
+            g[1][p])
+    fin, _ = _seg_combine(carry0, jnp.zeros_like(f_acc), acc, f_acc)
+    return o, fin.m, fin.u, fin.w
+
+
+def _make_cp_scan_core(axis: str, axis_size: int, segmented: bool = False):
     """Build the custom-VJP per-shard op for one (axis, size) pair."""
+
+    if segmented:
+        def fwd_fn(s, v, m0, u0, w0, starts):
+            return _cp_scan_forward_segmented(s, v, m0, u0, w0, starts,
+                                              axis, axis_size)
+
+        @jax.custom_vjp
+        def core(s, v, m0, u0, w0, starts):
+            return fwd_fn(s, v, m0, u0, w0, starts)
+
+        def core_fwd(s, v, m0, u0, w0, starts):
+            return fwd_fn(s, v, m0, u0, w0, starts), (s, v, m0, u0, w0,
+                                                      starts)
+
+        def core_bwd(res, g):
+            s, v, m0, u0, w0, starts = res
+            _, vjp = jax.vjp(
+                lambda s_, v_, m_, u_, w_: fwd_fn(s_, v_, m_, u_, w_, starts),
+                s, v, m0, u0, w0)
+            return (*vjp(g),
+                    np.zeros(np.shape(starts), jax.dtypes.float0))
+
+        core.defvjp(core_fwd, core_bwd)
+        return core
 
     def fwd_fn(s, v, m0, u0, w0):
         return _cp_scan_forward(s, v, m0, u0, w0, axis, axis_size)
@@ -257,6 +384,7 @@ def cp_aaren_prefix_attention(
     v: jax.Array,
     carry: ScanState | None = None,
     *,
+    segment_ids: jax.Array | None = None,
     cp: ContextParallel | None = None,
 ):
     """Context-parallel drop-in for ``kops.aaren_prefix_attention``.
@@ -264,12 +392,18 @@ def cp_aaren_prefix_attention(
     s: (..., N) scores; v: (..., N, d) values; carry leaves m,u (...,),
     w (..., d).  Any N: an indivisible tail is padded with ⊕-identity
     leaves (contributing nothing to outputs or the final carry) and sliced
-    off.  Falls back to the single-device fused op when no session is
-    active.  Returns (o: (..., N, d), replicated global final ScanState).
+    off.  ``segment_ids`` (packed sequences; shape (..., N) or missing one
+    leading dim, broadcast over it): resets are local to each shard's scan
+    and the carry exchange runs under the segmented ⊕ — start flags are
+    computed *globally here*, before sharding, so a document spanning a
+    shard boundary is never falsely reset (DESIGN.md §Packing).  Falls
+    back to the single-device fused op when no session is active.  Returns
+    (o: (..., N, d), replicated global final ScanState).
     """
     cp = cp if cp is not None else current_cp()
     if cp is None or cp.size == 1:
-        return kops.aaren_prefix_attention(s, v, carry)
+        return kops.aaren_prefix_attention(s, v, carry,
+                                           segment_ids=segment_ids)
     n = s.shape[-1]
     batch_shape = s.shape[:-1]
     d = v.shape[-1]
@@ -277,6 +411,16 @@ def cp_aaren_prefix_attention(
         carry = make_empty_state(batch_shape, d)
     s32 = s.astype(jnp.float32)
     v32 = v.astype(jnp.float32)
+    starts = None
+    if segment_ids is not None:
+        seg = jnp.asarray(segment_ids, jnp.int32)
+        if seg.ndim == s32.ndim - 1:  # e.g. (B, N) vs (B, H, N)
+            seg = jnp.broadcast_to(seg[..., None, :], s32.shape)
+        seg = jnp.broadcast_to(seg, s32.shape)
+        # Padding (id 0) -> ⊕-identity leaves; outputs there pinned to 0
+        # after the island (the kops empty-row convention).
+        s32, v32 = mask_to_identity(s32, v32, seg != 0)
+        starts = segment_starts_from_ids(seg).astype(jnp.int32)
     # Arbitrary N: pad the sequence dim up to the seq-axis multiple with
     # ⊕-identity leaves (s = NEG_INF, v = 0) — they contribute nothing to
     # any prefix or to the global final carry — and slice the tail off
@@ -287,6 +431,8 @@ def cp_aaren_prefix_attention(
         widths[-1] = (0, n_pad - n)
         s32 = jnp.pad(s32, widths, constant_values=NEG_INF)
         v32 = jnp.pad(v32, [*widths, (0, 0)])
+        if starts is not None:
+            starts = jnp.pad(starts, widths)
     m0 = carry.m.astype(jnp.float32)
     u0 = carry.u.astype(jnp.float32)
     w0 = carry.w.astype(jnp.float32)
@@ -298,10 +444,19 @@ def cp_aaren_prefix_attention(
                 P(*lead), P(*lead), P(*lead, None))  # carry: replicated
     out_specs = (P(*lead, cp.axis, None),   # o
                  P(*lead), P(*lead), P(*lead, None))
-    fn = shard_map(_make_cp_scan_core(cp.axis, cp.size), mesh=cp.mesh,
-                   in_specs=in_specs, out_specs=out_specs, check_rep=False)
-    o, m_f, u_f, w_f = fn(s32, v32, m0, u0, w0)
-    return o[..., :n, :].astype(v.dtype), ScanState(m=m_f, u=u_f, w=w_f)
+    operands = [s32, v32, m0, u0, w0]
+    if starts is not None:
+        in_specs = in_specs + (P(*lead, cp.axis),)   # starts: sharded like s
+        operands.append(starts)
+    fn = shard_map(
+        _make_cp_scan_core(cp.axis, cp.size, segmented=starts is not None),
+        mesh=cp.mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False)
+    o, m_f, u_f, w_f = fn(*operands)
+    o = o[..., :n, :]
+    if segment_ids is not None:
+        o = jnp.where((seg != 0)[..., None], o, 0.0)
+    return o.astype(v.dtype), ScanState(m=m_f, u=u_f, w=w_f)
 
 
 # ---------------------------------------------------------------------------
@@ -316,7 +471,8 @@ def _expand_kv(x: jax.Array, n_heads: int) -> jax.Array:
     return x.reshape(b, n, n_heads, d)
 
 
-def _ring_flash_local(q, k, v, lens, axis, axis_size, causal, window, scale):
+def _ring_flash_local(q, k, v, lens, axis, axis_size, causal, window, scale,
+                      seg=None):
     """Per-shard ring flash: rotate K/V shards, fold blocks under ⊕.
 
     q: (B, Nl, H, d) local queries; k/v: (B, Nl, G, d) local keys/values;
@@ -329,12 +485,20 @@ def _ring_flash_local(q, k, v, lens, axis, axis_size, causal, window, scale):
     accumulator — the running logsumexp is ``m + log u``.  K/V rotate in
     their compact G-head layout, so the wire payload per step is O(Nl·G·d),
     and only P−1 of the P steps move data.
+
+    ``seg``: optional (B, N_global) packed-segment ids, *replicated* —
+    every rank slices its query rows' and the held shard's ids by absolute
+    position, so the same-nonzero-id rule masks by absolute segment id
+    regardless of which rank currently holds the keys (DESIGN.md §Packing).
     """
     idx = jax.lax.axis_index(axis)
     b, nl, h, d = q.shape
     q32 = q.astype(jnp.float32)
     q_pos = idx * nl + jnp.arange(nl)
     row_ok = (q_pos[None, :] < lens[:, None])[:, None, :, None]  # (B,1,nl,1)
+    if seg is not None:
+        q_seg = jax.lax.dynamic_slice_in_dim(seg, idx * nl, nl, 1)  # (B, nl)
+        row_ok = row_ok & (q_seg != 0)[:, None, :, None]
     acc = ScanState(
         m=jnp.full((b, h, nl), NEG_INF, jnp.float32),
         u=jnp.zeros((b, h, nl), jnp.float32),
@@ -355,6 +519,9 @@ def _ring_flash_local(q, k, v, lens, axis, axis_size, causal, window, scale):
             allowed = allowed & (k_pos[None, :] > q_pos[:, None] - window)
         lane_ok = (k_pos[None, :] < lens[:, None])[:, None, None, :]
         ok = allowed[None, None] & row_ok & lane_ok        # (B, 1|H, nl, nl)
+        if seg is not None:
+            k_seg = jax.lax.dynamic_slice_in_dim(seg, src * nl, nl, 1)
+            ok = ok & (q_seg[:, :, None] == k_seg[:, None, :])[:, None]
         srt = jnp.where(ok, srt, NEG_INF)
         blk_m = jnp.max(srt, axis=-1)
         e = jnp.exp(srt - blk_m[..., None])
@@ -381,6 +548,7 @@ def cp_flash_mha(
     window: int | None = None,
     scale: float | None = None,
     lengths: jax.Array | None = None,
+    segment_ids: jax.Array | None = None,
     cp: ContextParallel | None = None,
 ) -> jax.Array:
     """Context-parallel drop-in for ``kops.flash_mha`` (self-attention).
@@ -390,13 +558,18 @@ def cp_flash_mha(
     multiple and every rank masks by true length in-kernel (a zero-padded
     K/V is *not* an identity under softmax — the mask is what makes the
     padding free; DESIGN.md §Masking).  ``lengths``: optional (B,) int32
-    per-row true lengths for ragged batches; defaults to N.  Falls back to
-    the single-device flash op when no session is active.
+    per-row true lengths for ragged batches; defaults to N.
+    ``segment_ids``: optional (B, N) packed-segment ids — replicated around
+    the ring, masked by *absolute* position against each held K/V shard
+    (id 0 = padding; DESIGN.md §Packing).  Falls back to the single-device
+    flash op when no session is active.
     """
     cp = cp if cp is not None else current_cp()
     if cp is None or cp.size == 1:
         return kops.flash_mha(q, k, v, causal=causal, window=window,
-                              scale=scale, q_lens=lengths, kv_lens=lengths)
+                              scale=scale, q_lens=lengths, kv_lens=lengths,
+                              q_segment_ids=segment_ids,
+                              kv_segment_ids=segment_ids)
     b, n, _, d = q.shape
     if k.shape[1] != n:
         raise ValueError("ring flash is self-attention: Nq must equal Nk")
@@ -407,6 +580,10 @@ def cp_flash_mha(
     lens = (jnp.full((b,), n, jnp.int32) if lengths is None
             else jnp.clip(jnp.asarray(lengths, jnp.int32), 0, n))
     n_pad = _kflash.round_up(n, cp.size)
+    seg = None
+    if segment_ids is not None:
+        # Replicated (B, N_pad) ids; global padding keeps the padding id 0.
+        seg = _kflash._pad_dim(jnp.asarray(segment_ids, jnp.int32), n_pad, 1)
     if n_pad != n:
         widths = [(0, 0), (0, n_pad - n), (0, 0), (0, 0)]
         q = jnp.pad(q, widths)
@@ -417,10 +594,21 @@ def cp_flash_mha(
     spec = P(bax, cp.axis, None, None)
     axis, size, scale_f = cp.axis, cp.size, float(scale)
 
-    def local(q_, k_, v_, lens_):
-        return _ring_flash_local(q_, k_, v_, lens_, axis, size, causal,
-                                 window, scale_f)
+    if seg is None:
+        def local(q_, k_, v_, lens_):
+            return _ring_flash_local(q_, k_, v_, lens_, axis, size, causal,
+                                     window, scale_f)
 
-    fn = shard_map(local, mesh=cp.mesh, in_specs=(spec, spec, spec, P(bax)),
+        fn = shard_map(local, mesh=cp.mesh,
+                       in_specs=(spec, spec, spec, P(bax)),
+                       out_specs=spec, check_rep=False)
+        return fn(q, k, v, lens)[:, :n].astype(v.dtype)
+
+    def local_seg(q_, k_, v_, lens_, seg_):
+        return _ring_flash_local(q_, k_, v_, lens_, axis, size, causal,
+                                 window, scale_f, seg=seg_)
+
+    fn = shard_map(local_seg, mesh=cp.mesh,
+                   in_specs=(spec, spec, spec, P(bax), P(bax, None)),
                    out_specs=spec, check_rep=False)
-    return fn(q, k, v, lens)[:, :n].astype(v.dtype)
+    return fn(q, k, v, lens, seg)[:, :n].astype(v.dtype)

@@ -68,11 +68,18 @@ def _shifted(x: jax.Array, off: int, fill: float, axis: int) -> jax.Array:
     return jnp.concatenate([pad, x[tuple(keep)]], axis=axis)
 
 
-def _block_prefix_scan(m, u, w):
+def _block_prefix_scan(m, u, w, f=None):
     """Hillis–Steele scan of the paper's ⊕ over the token axis (axis 1).
 
     m, u: (br, bn); w: (br, bn, d).  Exactly Algorithm 1 of the paper with
     ``identity = (-inf, 0, 0)`` shifted in at the left edge.
+
+    ``f`` (br, bn) optionally carries segment-start flags (1.0 at the first
+    token of each packed segment): the scan then becomes the *segmented*
+    scan — a window whose resident half already contains a start drops the
+    shifted (older) half entirely, so every position accumulates only its
+    own segment's prefix (DESIGN.md §Packing).  Returns (m, u, w[, f]) with
+    ``f`` scanned by OR (1 once the window has seen any start).
     """
     bn = m.shape[1]
     off = 1
@@ -80,26 +87,40 @@ def _block_prefix_scan(m, u, w):
         m_s = _shifted(m, off, NEG_INF, 1)
         u_s = _shifted(u, off, 0.0, 1)
         w_s = _shifted(w, off, 0.0, 1)
-        m_new = jnp.maximum(m, m_s)
-        alpha = jnp.exp(m_s - m_new)  # weight of the shifted (older) half
-        beta = jnp.exp(m - m_new)     # weight of the resident half
+        if f is None:
+            m_new = jnp.maximum(m, m_s)
+            alpha = jnp.exp(m_s - m_new)  # weight of the shifted (older) half
+        else:
+            f_s = _shifted(f, off, 0.0, 1)
+            keep = f == 0.0               # no reset inside the resident half
+            m_new = jnp.where(keep, jnp.maximum(m, m_s), m)
+            alpha = jnp.where(keep, jnp.exp(m_s - m_new), 0.0)
+            f = jnp.maximum(f, f_s)
+        beta = jnp.exp(m - m_new)         # weight of the resident half
         u = u_s * alpha + u * beta
         w = w_s * alpha[..., None] + w * beta[..., None]
         m = m_new
         off *= 2
-    return m, u, w
+    if f is None:
+        return m, u, w
+    return m, u, w, f
 
 
 def _aaren_scan_kernel(
-    s_ref, v_ref, m0_ref, u0_ref, w0_ref,            # inputs
-    o_ref, mf_ref, uf_ref, wf_ref,                   # outputs
-    *rest,                                           # [mall, uall,] cm, cu, cw
-    n_blocks: int, save_residuals: bool,
+    *args,                                           # see parsing below
+    n_blocks: int, save_residuals: bool, has_segments: bool,
 ):
+    s_ref, v_ref, m0_ref, u0_ref, w0_ref = args[:5]
+    idx = 5
+    if has_segments:
+        f_ref = args[idx]
+        idx += 1
+    o_ref, mf_ref, uf_ref, wf_ref = args[idx:idx + 4]
+    idx += 4
     if save_residuals:
-        mall_ref, uall_ref, cm, cu, cw = rest
-    else:
-        cm, cu, cw = rest
+        mall_ref, uall_ref = args[idx:idx + 2]
+        idx += 2
+    cm, cu, cw = args[idx:idx + 3]
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -111,21 +132,35 @@ def _aaren_scan_kernel(
     s = s_ref[...].astype(jnp.float32)   # (br, bn)
     v = v_ref[...].astype(jnp.float32)   # (br, bn, d)
 
-    # Leaves (s_i, 1, v_i) -> all within-block prefixes via Algorithm 1.
-    m, u, w = _block_prefix_scan(s, jnp.ones_like(s), v)
-
-    # Fold in the carry state of all previous blocks (Appendix A):
-    # state_i <- carry ⊕ state_i.
     cmv = cm[...]            # (br, 1)
     cuv = cu[...]            # (br, 1)
     cwv = cw[...]            # (br, d)
-    m_tot = jnp.maximum(m, cmv)                 # (br, bn)
-    alpha = jnp.exp(cmv - m_tot)                # carry weight
+    if has_segments:
+        # Segmented scan: each position accumulates its own segment only,
+        # and the cross-block carry folds only into positions whose block
+        # prefix has not yet hit a segment start (the carry itself then
+        # advances past the boundary via the folded last column).
+        f = f_ref[...].astype(jnp.float32)
+        m, u, w, fseen = _block_prefix_scan(s, jnp.ones_like(s), v, f)
+        keep = fseen == 0.0                     # (br, bn)
+        m_tot = jnp.where(keep, jnp.maximum(m, cmv), m)
+        alpha = jnp.where(keep, jnp.exp(cmv - m_tot), 0.0)
+    else:
+        # Leaves (s_i, 1, v_i) -> all within-block prefixes via Algorithm 1,
+        # then fold in the carry state of all previous blocks (Appendix A):
+        # state_i <- carry ⊕ state_i.
+        m, u, w = _block_prefix_scan(s, jnp.ones_like(s), v)
+        m_tot = jnp.maximum(m, cmv)             # (br, bn)
+        alpha = jnp.exp(cmv - m_tot)            # carry weight
     beta = jnp.exp(m - m_tot)                   # block weight
     u_tot = cuv * alpha + u * beta
     w_tot = cwv[:, None, :] * alpha[..., None] + w * beta[..., None]
 
-    o_ref[...] = (w_tot / u_tot[..., None]).astype(o_ref.dtype)
+    # Positions with an empty state (padding inside packed rows, before any
+    # real token) have u = w = 0; the guard pins their readout to exactly 0
+    # (the empty-set convention of scan_attention.readout) instead of 0/0.
+    u_safe = jnp.where(u_tot == 0.0, 1.0, u_tot)
+    o_ref[...] = (w_tot / u_safe[..., None]).astype(o_ref.dtype)
     if save_residuals:
         mall_ref[...] = m_tot
         uall_ref[...] = u_tot
@@ -158,6 +193,7 @@ def aaren_scan(
     m0: jax.Array,
     u0: jax.Array,
     w0: jax.Array,
+    segment_starts: jax.Array | None = None,
     *,
     block_n: int = DEFAULT_BLOCK_N,
     block_r: int = DEFAULT_BLOCK_R,
@@ -167,7 +203,11 @@ def aaren_scan(
     """All-prefix Aaren attention outputs + final carry (+ bwd residuals).
 
     s: (R, N) f32 scores; v: (R, N, d); m0/u0: (R, 1); w0: (R, d) carry
-    (use ``NEG_INF``/0/0 for a fresh sequence).
+    (use ``NEG_INF``/0/0 for a fresh sequence).  ``segment_starts``:
+    optional (R, N) flags (nonzero at the first token of each packed
+    segment) — the scan then resets its carry to the ⊕ identity at every
+    flagged position, and the incoming carry only reaches positions before
+    the row's first flag (DESIGN.md §Packing).
     Returns (o: (R, N, d), m_f: (R, 1), u_f: (R, 1), w_f: (R, d)); with
     ``return_residuals`` also (m: (R, N), u: (R, N)) — the per-position
     running max / softmax denominator the analytic backward consumes.
@@ -181,6 +221,9 @@ def aaren_scan(
 
     s = s.astype(jnp.float32)
     v = v.astype(jnp.float32)
+    has_segments = segment_starts is not None
+    if has_segments:
+        segment_starts = segment_starts.astype(jnp.float32)
     if n_pad != n or r_pad != r:
         # Padded tokens are the ⊕ identity (s = -inf, v = 0): they leave the
         # carry untouched, so outputs/finals only need slicing afterwards.
@@ -190,9 +233,12 @@ def aaren_scan(
         m0 = jnp.pad(m0, ((0, dr), (0, 0)), constant_values=NEG_INF)
         u0 = jnp.pad(u0, ((0, dr), (0, 0)))
         w0 = jnp.pad(w0, ((0, dr), (0, 0)))
+        if has_segments:  # padding never starts a segment
+            segment_starts = jnp.pad(segment_starts, ((0, dr), (0, dn)))
 
     kernel = functools.partial(_aaren_scan_kernel, n_blocks=n_blocks,
-                               save_residuals=return_residuals)
+                               save_residuals=return_residuals,
+                               has_segments=has_segments)
     grid = (r_pad // br, n_blocks)
     out_specs = [
         pl.BlockSpec((br, bn, d), lambda i, j: (i, j, 0)),
@@ -215,16 +261,21 @@ def aaren_scan(
             jax.ShapeDtypeStruct((r_pad, n_pad), jnp.float32),
             jax.ShapeDtypeStruct((r_pad, n_pad), jnp.float32),
         ]
+    in_specs = [
+        pl.BlockSpec((br, bn), lambda i, j: (i, j)),
+        pl.BlockSpec((br, bn, d), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        pl.BlockSpec((br, d), lambda i, j: (i, 0)),
+    ]
+    operands = [s, v, m0, u0, w0]
+    if has_segments:
+        in_specs.append(pl.BlockSpec((br, bn), lambda i, j: (i, j)))
+        operands.append(segment_starts)
     o, m_f, u_f, w_f, *res = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((br, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((br, bn, d), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((br, d), lambda i, j: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
@@ -233,7 +284,7 @@ def aaren_scan(
             pltpu.VMEM((br, d), jnp.float32),
         ],
         interpret=interpret,
-    )(s, v, m0, u0, w0)
+    )(*operands)
     if n_pad != n or r_pad != r:
         o = o[:r, :n]
         m_f, u_f, w_f = m_f[:r], u_f[:r], w_f[:r]

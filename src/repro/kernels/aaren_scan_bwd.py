@@ -66,11 +66,18 @@ def _shifted_rev(x: jax.Array, off: int, fill: float, axis: int) -> jax.Array:
     return jnp.concatenate([x[tuple(keep)], pad], axis=axis)
 
 
-def _block_suffix_scan(n, g, b):
+def _block_suffix_scan(n, g, b, f=None):
     """Hillis–Steele *suffix* scan of ⊕ over the token axis (axis 1).
 
     n, b: (br, bn); g: (br, bn, d).  The forward's Algorithm 1 with the
     shift direction reversed: identity (-inf, 0, 0) enters at the right edge.
+
+    ``f`` (br, bn) optionally carries segment-*end* flags (1.0 at the last
+    token of each packed segment that has a successor): the suffix scan then
+    restarts at every boundary — a window whose resident half already
+    contains an end drops the shifted (later) half, the exact mirror of the
+    forward's segmented prefix scan (DESIGN.md §Packing).  Returns
+    (n, g, b[, f]).
     """
     bn = n.shape[1]
     off = 1
@@ -78,23 +85,38 @@ def _block_suffix_scan(n, g, b):
         n_s = _shifted_rev(n, off, NEG_INF, 1)
         g_s = _shifted_rev(g, off, 0.0, 1)
         b_s = _shifted_rev(b, off, 0.0, 1)
-        n_new = jnp.maximum(n, n_s)
-        alpha = jnp.exp(n_s - n_new)  # weight of the shifted (later) half
-        beta = jnp.exp(n - n_new)     # weight of the resident half
+        if f is None:
+            n_new = jnp.maximum(n, n_s)
+            alpha = jnp.exp(n_s - n_new)  # weight of the shifted (later) half
+        else:
+            f_s = _shifted_rev(f, off, 0.0, 1)
+            keep = f == 0.0               # no boundary inside resident half
+            n_new = jnp.where(keep, jnp.maximum(n, n_s), n)
+            alpha = jnp.where(keep, jnp.exp(n_s - n_new), 0.0)
+            f = jnp.maximum(f, f_s)
+        beta = jnp.exp(n - n_new)         # weight of the resident half
         g = g_s * alpha[..., None] + g * beta[..., None]
         b = b_s * alpha + b * beta
         n = n_new
         off *= 2
-    return n, g, b
+    if f is None:
+        return n, g, b
+    return n, g, b, f
 
 
 def _aaren_scan_bwd_kernel(
-    s_ref, v_ref, o_ref, m_ref, u_ref, g_ref,   # inputs (+ residuals)
-    n0_ref, g0_ref, b0_ref,                      # reverse-carry seed
-    ds_ref, dv_ref, nf_ref, gf_ref, bf_ref,      # outputs
-    cn, cg, cb,                                  # VMEM scratch carries
-    *, n_blocks: int,
+    *args,                                       # see parsing below
+    n_blocks: int, has_segments: bool,
 ):
+    s_ref, v_ref, o_ref, m_ref, u_ref, g_ref = args[:6]
+    idx = 6
+    if has_segments:
+        f_ref = args[idx]
+        idx += 1
+    n0_ref, g0_ref, b0_ref = args[idx:idx + 3]   # reverse-carry seed
+    idx += 3
+    ds_ref, dv_ref, nf_ref, gf_ref, bf_ref = args[idx:idx + 5]
+    cn, cg, cb = args[idx + 5:idx + 8]           # VMEM scratch carries
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -111,18 +133,30 @@ def _aaren_scan_bwd_kernel(
     g = g_ref[...]          # (br, bn, d)
 
     # Reverse leaves (-M_i, g_i/U_i, (g_i·o_i)/U_i) -> within-block suffixes.
-    inv_u = 1.0 / u
+    # u == 0 only at empty-state positions of packed rows (padding before
+    # any real token); their g is 0, so zeroing 1/u keeps them inert.
+    inv_u = jnp.where(u == 0.0, 0.0, 1.0 / jnp.where(u == 0.0, 1.0, u))
     ln = -m
     lg = g * inv_u[..., None]
     lb = jnp.sum(g * o, axis=-1) * inv_u
-    nw, gw, bw = _block_suffix_scan(ln, lg, lb)
 
     # Fold in the carry of all blocks to the right: state_j <- state_j ⊕ carry.
     cnv = cn[...]            # (br, 1)
     cgv = cg[...]            # (br, d)
     cbv = cb[...]            # (br, 1)
-    n_tot = jnp.maximum(nw, cnv)                # (br, bn)
-    alpha = jnp.exp(cnv - n_tot)                # carry weight
+    if has_segments:
+        # Segmented suffix scan: each position accumulates its own segment's
+        # suffix, and the right-hand carry folds only into positions whose
+        # block suffix has not yet crossed a segment end.
+        f = f_ref[...].astype(jnp.float32)
+        nw, gw, bw, fseen = _block_suffix_scan(ln, lg, lb, f)
+        keep = fseen == 0.0
+        n_tot = jnp.where(keep, jnp.maximum(nw, cnv), nw)
+        alpha = jnp.where(keep, jnp.exp(cnv - n_tot), 0.0)
+    else:
+        nw, gw, bw = _block_suffix_scan(ln, lg, lb)
+        n_tot = jnp.maximum(nw, cnv)            # (br, bn)
+        alpha = jnp.exp(cnv - n_tot)            # carry weight
     beta = jnp.exp(nw - n_tot)                  # block weight
     g_tot = cgv[:, None, :] * alpha[..., None] + gw * beta[..., None]
     b_tot = cbv * alpha + bw * beta
@@ -156,6 +190,7 @@ def aaren_scan_bwd(
     n0: jax.Array,
     g0: jax.Array,
     b0: jax.Array,
+    segment_ends: jax.Array | None = None,
     *,
     block_n: int = DEFAULT_BLOCK_N,
     block_r: int = DEFAULT_BLOCK_R,
@@ -165,9 +200,15 @@ def aaren_scan_bwd(
 
     s: (R, N); v/o/g: (R, N, d); m/u: (R, N) forward residuals;
     (n0, g0, b0): reverse-carry seed — ``(-m_f, g_{w_f}, -g_{u_f})``.
+    ``segment_ends``: optional (R, N) flags, nonzero at the last token of
+    each packed segment that has a successor segment (i.e. the forward's
+    start flags shifted left one) — the suffix accumulation then never
+    crosses a segment boundary, mirroring the forward's carry resets.
     Returns (ds: (R, N), dv: (R, N, d), n1: (R, 1), g1: (R, d), b1: (R, 1))
     where ``(n1, g1, b1)`` is the full-suffix state used for the incoming-
-    carry cotangents: ``dw0 = e^{m0+n1} g1``, ``du0 = -e^{m0+n1} b1``.
+    carry cotangents: ``dw0 = e^{m0+n1} g1``, ``du0 = -e^{m0+n1} b1``
+    (with segments it covers exactly the first segment — the only span an
+    incoming carry can reach).
     """
     r, n = s.shape
     d = v.shape[-1]
@@ -178,6 +219,9 @@ def aaren_scan_bwd(
     f32 = jnp.float32
     s, v, o, m, u, g = (x.astype(f32) for x in (s, v, o, m, u, g))
     n0, g0, b0 = (x.astype(f32) for x in (n0, g0, b0))
+    has_segments = segment_ends is not None
+    if has_segments:
+        segment_ends = segment_ends.astype(f32)
     if n_pad != n or r_pad != r:
         # Reverse-⊕ identity padding: m = -NEG_INF makes the leaf max -inf,
         # g = 0 kills the value; u = 1 avoids 0/0 in the leaf build.
@@ -191,25 +235,36 @@ def aaren_scan_bwd(
         n0 = jnp.pad(n0, ((0, dr), (0, 0)), constant_values=NEG_INF)
         g0 = jnp.pad(g0, ((0, dr), (0, 0)))
         b0 = jnp.pad(b0, ((0, dr), (0, 0)))
+        if has_segments:
+            segment_ends = jnp.pad(segment_ends, ((0, dr), (0, dn)))
 
-    kernel = functools.partial(_aaren_scan_bwd_kernel, n_blocks=n_blocks)
+    kernel = functools.partial(_aaren_scan_bwd_kernel, n_blocks=n_blocks,
+                               has_segments=has_segments)
     grid = (r_pad // br, n_blocks)
     rev = lambda i, j: (i, n_blocks - 1 - j)       # right-to-left sequence
     row = lambda i, j: (i, 0)
+    in_specs = [
+        pl.BlockSpec((br, bn), rev),
+        pl.BlockSpec((br, bn, d), lambda i, j: rev(i, j) + (0,)),
+        pl.BlockSpec((br, bn, d), lambda i, j: rev(i, j) + (0,)),
+        pl.BlockSpec((br, bn), rev),
+        pl.BlockSpec((br, bn), rev),
+        pl.BlockSpec((br, bn, d), lambda i, j: rev(i, j) + (0,)),
+    ]
+    operands = [s, v, o, m, u, g]
+    if has_segments:
+        in_specs.append(pl.BlockSpec((br, bn), rev))
+        operands.append(segment_ends)
+    in_specs += [
+        pl.BlockSpec((br, 1), row),
+        pl.BlockSpec((br, d), row),
+        pl.BlockSpec((br, 1), row),
+    ]
+    operands += [n0, g0, b0]
     ds, dv, n1, g1, b1 = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((br, bn), rev),
-            pl.BlockSpec((br, bn, d), lambda i, j: rev(i, j) + (0,)),
-            pl.BlockSpec((br, bn, d), lambda i, j: rev(i, j) + (0,)),
-            pl.BlockSpec((br, bn), rev),
-            pl.BlockSpec((br, bn), rev),
-            pl.BlockSpec((br, bn, d), lambda i, j: rev(i, j) + (0,)),
-            pl.BlockSpec((br, 1), row),
-            pl.BlockSpec((br, d), row),
-            pl.BlockSpec((br, 1), row),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((br, bn), rev),
             pl.BlockSpec((br, bn, d), lambda i, j: rev(i, j) + (0,)),
@@ -230,7 +285,7 @@ def aaren_scan_bwd(
             pltpu.VMEM((br, 1), f32),
         ],
         interpret=interpret,
-    )(s, v, o, m, u, g, n0, g0, b0)
+    )(*operands)
     if n_pad != n or r_pad != r:
         ds, dv = ds[:r, :n], dv[:r, :n]
         n1, g1, b1 = n1[:r], g1[:r], b1[:r]

@@ -125,12 +125,18 @@ def _lens_spec():
 
 
 def _block_relevant(q_start, k_start, block_q, block_k, causal, window,
-                    q_len, kv_len):
+                    q_len, kv_len, seg_q=None, seg_k=None):
     """Does any (q, k) pair in this tile survive the mask?
 
     Causal/window bounds are static per tile; the true-length bounds come
     from the per-row SMEM scalars, so irrelevant tail blocks of a short row
-    skip compute exactly like causally-masked blocks do.
+    skip compute exactly like causally-masked blocks do.  ``seg_q``/``seg_k``
+    are this tile's packed-segment id vectors ((bq,) / (bk,)): a tile whose
+    id *ranges* are disjoint cannot contain an equal pair, so cross-document
+    tiles of a packed batch skip compute too — exact when ids are monotone
+    along the row (the bin-packer emits them in order), conservative but
+    still correct otherwise.  Id 0 is padding: an all-padding tile is never
+    relevant.
     """
     relevant = jnp.logical_and(q_start < q_len, k_start < kv_len)
     if causal:
@@ -138,10 +144,18 @@ def _block_relevant(q_start, k_start, block_q, block_k, causal, window,
     if window is not None:
         relevant = jnp.logical_and(
             relevant, k_start + block_k - 1 > q_start - window)
+    if seg_q is not None:
+        q_min, q_max = jnp.min(seg_q), jnp.max(seg_q)
+        k_min, k_max = jnp.min(seg_k), jnp.max(seg_k)
+        overlap = jnp.logical_and(q_max >= k_min, k_max >= q_min)
+        nonpad = jnp.logical_and(q_max > 0, k_max > 0)
+        relevant = jnp.logical_and(relevant,
+                                   jnp.logical_and(overlap, nonpad))
     return relevant
 
 
-def _tile_mask(s_shape, q_start, k_start, causal, window, q_len, kv_len):
+def _tile_mask(s_shape, q_start, k_start, causal, window, q_len, kv_len,
+               seg_q=None, seg_k=None):
     q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s_shape, 0)
     k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s_shape, 1)
     mask = (q_pos < q_len) & (k_pos < kv_len)
@@ -149,17 +163,23 @@ def _tile_mask(s_shape, q_start, k_start, causal, window, q_len, kv_len):
         mask &= k_pos <= q_pos
     if window is not None:
         mask &= k_pos > q_pos - window
+    if seg_q is not None:
+        sq = seg_q[:, None]                       # (bq, 1)
+        mask &= (sq == seg_k[None, :]) & (sq != 0)
     return mask
 
 
 def _flash_kernel(
     q_ref, k_ref, v_ref,      # (1, 1, bq, d), (1, 1, bk, d), (1, 1, bk, d)
     qlen_ref, klen_ref,       # SMEM (1, 1) int32: this batch row's lengths
-    o_ref, lse_ref,           # (1, 1, bq, d), (1, 1, bq)
-    m_scr, l_scr, acc_scr,    # VMEM scratch: (bq, 1), (bq, 1), (bq, d)
-    *, scale: float, block_q: int, block_k: int, n_kv_blocks: int,
-    causal: bool, window: int | None,
+    *rest,                    # [segq, segk,] o, lse + VMEM scratch m, l, acc
+    scale: float, block_q: int, block_k: int, n_kv_blocks: int,
+    causal: bool, window: int | None, has_segments: bool,
 ):
+    if has_segments:
+        segq_ref, segk_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, lse_ref, m_scr, l_scr, acc_scr = rest
     jq = pl.program_id(2)
     jk = pl.program_id(3)
 
@@ -173,8 +193,10 @@ def _flash_kernel(
     k_start = jk * block_k
     q_len = qlen_ref[0, 0]
     kv_len = klen_ref[0, 0]
+    seg_q = segq_ref[0] if has_segments else None    # (bq,) int32
+    seg_k = segk_ref[0] if has_segments else None    # (bk,) int32
     relevant = _block_relevant(q_start, k_start, block_q, block_k,
-                               causal, window, q_len, kv_len)
+                               causal, window, q_len, kv_len, seg_q, seg_k)
 
     @pl.when(relevant)
     def _compute():
@@ -185,7 +207,7 @@ def _flash_kernel(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (bq, bk)
         mask = _tile_mask(s.shape, q_start, k_start, causal, window,
-                          q_len, kv_len)
+                          q_len, kv_len, seg_q, seg_k)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]                          # (bq, 1)
@@ -229,6 +251,8 @@ def flash_attention(
     scale: float | None = None,
     q_lens: jax.Array | None = None,
     kv_lens: jax.Array | None = None,
+    q_segment_ids: jax.Array | None = None,
+    kv_segment_ids: jax.Array | None = None,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
     return_residuals: bool = False,
@@ -238,14 +262,20 @@ def flash_attention(
 
     ``q_lens`` / ``kv_lens``: optional (B,) int32 true lengths per batch
     row; positions at or beyond them are masked in-kernel (queries there
-    output 0).  Any Nq/Nk launches a dense grid — the wrapper pads to the
-    block multiple and the mask keeps the padding out of the softmax.
+    output 0).  ``q_segment_ids`` / ``kv_segment_ids``: optional (B, Nq) /
+    (B, Nk) int32 packed-segment ids — score tiles where the ids differ are
+    masked to −inf, id 0 is padding (rows there output 0), and tiles whose
+    id ranges are disjoint skip compute entirely (DESIGN.md §Packing).  Any
+    Nq/Nk launches a dense grid — the wrapper pads to the block multiple
+    and the mask keeps the padding out of the softmax.
 
     Returns (B, H, Nq, d) in q.dtype; with ``return_residuals`` also the
     per-row logsumexp (B, H, Nq) f32 the backward consumes.
     """
     b, h, n_q, d = q.shape
     g, n_k = k.shape[1], k.shape[2]
+    if (q_segment_ids is None) != (kv_segment_ids is None):
+        raise ValueError("segment ids must be given for both q and kv")
     if scale is None:
         scale = 1.0 / float(np.sqrt(d))
     bq, bk = resolve_blocks(n_q, n_k, block_q, block_k)
@@ -255,28 +285,42 @@ def flash_attention(
     q = _pad_dim(q, n_qp, 2)
     k = _pad_dim(k, n_kp, 2)
     v = _pad_dim(v, n_kp, 2)
+    has_segments = q_segment_ids is not None
     n_kv_blocks = n_kp // bk
     grid = (b, h, n_qp // bq, n_kv_blocks)
     group = h // g  # queries per kv head
 
     kernel = functools.partial(
         _flash_kernel, scale=float(scale), block_q=bq, block_k=bk,
-        n_kv_blocks=n_kv_blocks, causal=causal, window=window)
+        n_kv_blocks=n_kv_blocks, causal=causal, window=window,
+        has_segments=has_segments)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
+        pl.BlockSpec(
+            (1, 1, bk, d),
+            lambda ib, ih, jq, jk: (ib, ih // group, jk, 0)),
+        pl.BlockSpec(
+            (1, 1, bk, d),
+            lambda ib, ih, jq, jk: (ib, ih // group, jk, 0)),
+        _lens_spec(),
+        _lens_spec(),
+    ]
+    operands = [q, k, v, ql, kl]
+    if has_segments:
+        # (1, block) id tiles; padded positions keep the padding id 0.
+        segq = _pad_dim(jnp.asarray(q_segment_ids, jnp.int32), n_qp, 1)
+        segk = _pad_dim(jnp.asarray(kv_segment_ids, jnp.int32), n_kp, 1)
+        in_specs += [
+            pl.BlockSpec((1, bq), lambda ib, ih, jq, jk: (ib, jq)),
+            pl.BlockSpec((1, bk), lambda ib, ih, jq, jk: (ib, jk)),
+        ]
+        operands += [segq, segk]
 
     o, lse = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
-            pl.BlockSpec(
-                (1, 1, bk, d),
-                lambda ib, ih, jq, jk: (ib, ih // group, jk, 0)),
-            pl.BlockSpec(
-                (1, 1, bk, d),
-                lambda ib, ih, jq, jk: (ib, ih // group, jk, 0)),
-            _lens_spec(),
-            _lens_spec(),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
             pl.BlockSpec((1, 1, bq), lambda ib, ih, jq, jk: (ib, ih, jq)),
@@ -291,7 +335,7 @@ def flash_attention(
             pltpu.VMEM((bq, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, ql, kl)
+    )(*operands)
     o, lse = o[:, :, :n_q], lse[:, :, :n_q]
     return (o, lse) if return_residuals else o
 
@@ -302,7 +346,7 @@ def flash_attention(
 
 
 def _recompute_p_ds(q, k, v, do, lse, delta, *, scale, q_start, k_start,
-                    causal, window, q_len, kv_len):
+                    causal, window, q_len, kv_len, seg_q=None, seg_k=None):
     """Re-materialise the probability tile and dS tile from residuals.
 
     q/do: (bq, d); k/v: (bk, d); lse/delta: (bq,).
@@ -312,7 +356,7 @@ def _recompute_p_ds(q, k, v, do, lse, delta, *, scale, q_start, k_start,
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale
     mask = _tile_mask(s.shape, q_start, k_start, causal, window,
-                      q_len, kv_len)
+                      q_len, kv_len, seg_q, seg_k)
     s = jnp.where(mask, s, NEG_INF)
     p = jnp.exp(s - lse[:, None])                    # (bq, bk)
     # Empty rows carry lse == NEG_INF, where exp(NEG_INF - NEG_INF) = 1;
@@ -329,11 +373,14 @@ def _recompute_p_ds(q, k, v, do, lse, delta, *, scale, q_start, k_start,
 def _flash_bwd_dq_kernel(
     q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
     qlen_ref, klen_ref,
-    dq_ref,
-    dq_scr,
-    *, scale: float, block_q: int, block_k: int, n_kv_blocks: int,
-    causal: bool, window: int | None,
+    *rest,                    # [segq, segk,] dq out + dq scratch
+    scale: float, block_q: int, block_k: int, n_kv_blocks: int,
+    causal: bool, window: int | None, has_segments: bool,
 ):
+    if has_segments:
+        segq_ref, segk_ref, dq_ref, dq_scr = rest
+    else:
+        dq_ref, dq_scr = rest
     jq = pl.program_id(2)
     jk = pl.program_id(3)
 
@@ -345,8 +392,10 @@ def _flash_bwd_dq_kernel(
     k_start = jk * block_k
     q_len = qlen_ref[0, 0]
     kv_len = klen_ref[0, 0]
+    seg_q = segq_ref[0] if has_segments else None
+    seg_k = segk_ref[0] if has_segments else None
     relevant = _block_relevant(q_start, k_start, block_q, block_k,
-                               causal, window, q_len, kv_len)
+                               causal, window, q_len, kv_len, seg_q, seg_k)
 
     @pl.when(relevant)
     def _compute():
@@ -355,7 +404,7 @@ def _flash_bwd_dq_kernel(
             v_ref[0, 0].astype(jnp.float32), do_ref[0, 0].astype(jnp.float32),
             lse_ref[0, 0], delta_ref[0, 0], scale=scale,
             q_start=q_start, k_start=k_start, causal=causal, window=window,
-            q_len=q_len, kv_len=kv_len)
+            q_len=q_len, kv_len=kv_len, seg_q=seg_q, seg_k=seg_k)
         dq_scr[...] += scale * jax.lax.dot_general(
             ds, k_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -368,11 +417,14 @@ def _flash_bwd_dq_kernel(
 def _flash_bwd_dkv_kernel(
     q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
     qlen_ref, klen_ref,
-    dk_ref, dv_ref,
-    dk_scr, dv_scr,
-    *, scale: float, block_q: int, block_k: int, n_q_blocks: int,
-    causal: bool, window: int | None,
+    *rest,                    # [segq, segk,] dk/dv outs + dk/dv scratch
+    scale: float, block_q: int, block_k: int, n_q_blocks: int,
+    causal: bool, window: int | None, has_segments: bool,
 ):
+    if has_segments:
+        segq_ref, segk_ref, dk_ref, dv_ref, dk_scr, dv_scr = rest
+    else:
+        dk_ref, dv_ref, dk_scr, dv_scr = rest
     jk = pl.program_id(2)
     jq = pl.program_id(3)
 
@@ -385,8 +437,10 @@ def _flash_bwd_dkv_kernel(
     k_start = jk * block_k
     q_len = qlen_ref[0, 0]
     kv_len = klen_ref[0, 0]
+    seg_q = segq_ref[0] if has_segments else None
+    seg_k = segk_ref[0] if has_segments else None
     relevant = _block_relevant(q_start, k_start, block_q, block_k,
-                               causal, window, q_len, kv_len)
+                               causal, window, q_len, kv_len, seg_q, seg_k)
 
     @pl.when(relevant)
     def _compute():
@@ -397,7 +451,7 @@ def _flash_bwd_dkv_kernel(
             v_ref[0, 0].astype(jnp.float32), do,
             lse_ref[0, 0], delta_ref[0, 0], scale=scale,
             q_start=q_start, k_start=k_start, causal=causal, window=window,
-            q_len=q_len, kv_len=kv_len)
+            q_len=q_len, kv_len=kv_len, seg_q=seg_q, seg_k=seg_k)
         dv_scr[...] += jax.lax.dot_general(
             p, do, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)      # Σ_i p_ij do_i
@@ -428,6 +482,8 @@ def flash_attention_bwd(
     scale: float | None = None,
     q_lens: jax.Array | None = None,
     kv_lens: jax.Array | None = None,
+    q_segment_ids: jax.Array | None = None,
+    kv_segment_ids: jax.Array | None = None,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False,
@@ -435,13 +491,16 @@ def flash_attention_bwd(
     """Analytic flash backward from forward residuals ``(o, lse)``.
 
     q/o/do: (B, H, Nq, d); k/v: (B, G, Nk, d); lse: (B, H, Nq) f32.
-    ``q_lens`` / ``kv_lens`` must match the forward call: the probability
-    tiles are re-materialised under the same true-length mask, so masked
-    queries get dq = 0 and masked keys get dk = dv = 0.
+    ``q_lens`` / ``kv_lens`` / segment ids must match the forward call: the
+    probability tiles are re-materialised under the same mask, so masked
+    queries get dq = 0 and masked keys get dk = dv = 0 (cross-segment pairs
+    of a packed batch contribute no cotangent at all).
     Returns (dq, dk, dv) in the corresponding input dtypes.
     """
     b, h, n_q, d = q.shape
     g, n_k = k.shape[1], k.shape[2]
+    if (q_segment_ids is None) != (kv_segment_ids is None):
+        raise ValueError("segment ids must be given for both q and kv")
     if scale is None:
         scale = 1.0 / float(np.sqrt(d))
     bq, bk = resolve_blocks(n_q, n_k, block_q, block_k)
@@ -456,12 +515,16 @@ def flash_attention_bwd(
     k = _pad_dim(k, n_kp, 2)
     v = _pad_dim(v, n_kp, 2)
     group = h // g
+    has_segments = q_segment_ids is not None
+    if has_segments:
+        segq = _pad_dim(jnp.asarray(q_segment_ids, jnp.int32), n_qp, 1)
+        segk = _pad_dim(jnp.asarray(kv_segment_ids, jnp.int32), n_kp, 1)
 
     # D_i = Σ_d do·o — one elementwise pass, shared by both kernels.
     delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
 
     common = dict(scale=float(scale), block_q=bq, block_k=bk,
-                  causal=causal, window=window)
+                  causal=causal, window=window, has_segments=has_segments)
     in_specs = [
         pl.BlockSpec((1, 1, bq, d), lambda ib, ih, jq, jk: (ib, ih, jq, 0)),
         pl.BlockSpec((1, 1, bk, d),
@@ -474,6 +537,13 @@ def flash_attention_bwd(
         _lens_spec(),
         _lens_spec(),
     ]
+    operands = [q, k, v, do, lse, delta, ql, kl]
+    if has_segments:
+        in_specs += [
+            pl.BlockSpec((1, bq), lambda ib, ih, jq, jk: (ib, jq)),
+            pl.BlockSpec((1, bk), lambda ib, ih, jq, jk: (ib, jk)),
+        ]
+        operands += [segq, segk]
 
     dq = pl.pallas_call(
         functools.partial(_flash_bwd_dq_kernel, n_kv_blocks=n_kp // bk,
@@ -485,7 +555,7 @@ def flash_attention_bwd(
         out_shape=jax.ShapeDtypeStruct((b, h, n_qp, d), q.dtype),
         scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
         interpret=interpret,
-    )(q, k, v, do, lse, delta, ql, kl)
+    )(*operands)
 
     # dk/dv accumulate over queries: Q is the minor (sequential) grid axis.
     # Accumulated per *query* head — the (b, g) output block for a KV head
@@ -503,6 +573,11 @@ def flash_attention_bwd(
         _lens_spec(),
         _lens_spec(),
     ]
+    if has_segments:
+        bwd_in_specs += [
+            pl.BlockSpec((1, bq), lambda ib, ih, jk, jq: (ib, jq)),
+            pl.BlockSpec((1, bk), lambda ib, ih, jk, jq: (ib, jk)),
+        ]
     dk_h, dv_h = pl.pallas_call(
         functools.partial(_flash_bwd_dkv_kernel, n_q_blocks=n_qp // bq,
                           **common),
@@ -521,7 +596,7 @@ def flash_attention_bwd(
             pltpu.VMEM((bk, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, do, lse, delta, ql, kl)
+    )(*operands)
 
     dq = dq[:, :, :n_q]
     dk_h, dv_h = dk_h[:, :, :n_k], dv_h[:, :, :n_k]

@@ -105,14 +105,50 @@ def aaren_scan_vjp_reference(s, v, m0, u0, w0, g_o, g_m, g_u, g_w):
     return ds, dv, dm0, du0, dw0
 
 
+def aaren_scan_segmented_reference(s, v, segment_ids):
+    """All-prefix softmax attention restarting at every segment (densely).
+
+    s: (R, N); v: (R, N, d); segment_ids: (R, N) int — id 0 is padding.
+    Position ``i`` attends ``{j <= i : seg_j == seg_i != 0}`` (its own
+    document's prefix); padding positions attend nothing and read 0.
+    Returns (o: (R, N, d), m_f: (R, 1), u_f: (R, 1), w_f: (R, d)) where the
+    finals are the state of the row's *last real segment* — the convention
+    of the segmented scan kernel (padding never resets the carry).
+    """
+    r, n = s.shape
+    s = s.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    seg = jnp.asarray(segment_ids, jnp.int32)
+    causal = jnp.tril(jnp.ones((n, n), bool))
+    same = (seg[:, :, None] == seg[:, None, :]) & (seg[:, :, None] != 0)
+    mask = causal[None] & same                            # (R, N, N)
+    s_ij = jnp.where(mask, s[:, None, :], NEG_INF)
+    m_pref = jnp.max(s_ij, axis=-1)                       # (R, N)
+    p = jnp.where(mask, jnp.exp(s_ij - m_pref[..., None]), 0.0)
+    u = jnp.sum(p, axis=-1)
+    w = jnp.einsum("rij,rjd->rid", p, v)
+    o = w / jnp.where(u == 0.0, 1.0, u)[..., None]
+    # Finals: the prefix state at the last real (nonzero-id) position.
+    last = jnp.argmax(
+        jnp.where(seg != 0, jnp.arange(n)[None, :], -1), axis=-1)  # (R,)
+    take = lambda x: jnp.take_along_axis(x, last[:, None], axis=1)
+    m_f, u_f = take(m_pref), take(u)
+    w_f = jnp.take_along_axis(w, last[:, None, None], axis=1)[:, 0]
+    return o, m_f, u_f, w_f
+
+
 def flash_reference(q, k, v, *, causal=True, window=None, scale=None,
-                    q_lens=None, kv_lens=None):
-    """Row-wise softmax attention with causal/window/true-length masks
-    (GQA-aware).
+                    q_lens=None, kv_lens=None,
+                    q_segment_ids=None, kv_segment_ids=None):
+    """Row-wise softmax attention with causal/window/true-length/segment
+    masks (GQA-aware).
 
     q: (B, H, Nq, d); k/v: (B, G, Nk, d).  ``q_lens``/``kv_lens``: optional
     (B,) int true lengths — queries at or beyond ``q_lens`` output 0, keys
-    at or beyond ``kv_lens`` are unattendable.  Returns (B, H, Nq, d).
+    at or beyond ``kv_lens`` are unattendable.  ``q_segment_ids``/
+    ``kv_segment_ids``: optional (B, Nq)/(B, Nk) packed-segment ids —
+    attention never crosses a segment and id-0 (padding) rows output 0.
+    Returns (B, H, Nq, d).
     """
     b, h, n_q, d = q.shape
     g, n_k = k.shape[1], k.shape[2]
@@ -124,7 +160,9 @@ def flash_reference(q, k, v, *, causal=True, window=None, scale=None,
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     mask = attention_mask(n_q, n_k, causal=causal, window=window,
-                          q_lens=q_lens, kv_lens=kv_lens)
+                          q_lens=q_lens, kv_lens=kv_lens,
+                          q_segment_ids=q_segment_ids,
+                          kv_segment_ids=kv_segment_ids)
     s = jnp.where(mask, s, NEG_INF)
     p = masked_softmax(s, mask)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(p.dtype))
@@ -132,7 +170,8 @@ def flash_reference(q, k, v, *, causal=True, window=None, scale=None,
 
 
 def flash_vjp_reference(q, k, v, do, *, causal=True, window=None, scale=None,
-                        q_lens=None, kv_lens=None):
+                        q_lens=None, kv_lens=None,
+                        q_segment_ids=None, kv_segment_ids=None):
     """Analytic flash-attention cotangents, densely (the textbook formulas).
 
     With ``p = softmax(mask(qk^T scale))``, ``D_i = do_i · o_i``:
@@ -156,7 +195,9 @@ def flash_vjp_reference(q, k, v, do, *, causal=True, window=None, scale=None,
     s = jnp.einsum("bhqd,bhkd->bhqk", qf, ke) * scale
     n_k = k.shape[2]
     mask = attention_mask(n_q, n_k, causal=causal, window=window,
-                          q_lens=q_lens, kv_lens=kv_lens)
+                          q_lens=q_lens, kv_lens=kv_lens,
+                          q_segment_ids=q_segment_ids,
+                          kv_segment_ids=kv_segment_ids)
     s = jnp.where(mask, s, NEG_INF)
     p = masked_softmax(s, mask)
     o = jnp.einsum("bhqk,bhkd->bhqd", p, ve)

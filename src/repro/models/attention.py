@@ -22,7 +22,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import aaren as aaren_core
 from repro.core import softmax_attention as soft
-from repro.core.rope import rope_for_positions
+from repro.core.rope import rope_for_positions, segment_positions
 from repro.core.scan_attention import NEG_INF, ScanState, mask_to_identity
 from repro.distributed import context as dctx
 from repro.kernels import ops as kops
@@ -79,36 +79,48 @@ def softmax_state_specs(cfg: ArchConfig, batch: int, cache_len: int):
 
 def softmax_sequence(p: dict, x: jax.Array, cfg: ArchConfig, *,
                      window: int | None, cache_len: int | None = None,
-                     pos_offset: int = 0, lengths: jax.Array | None = None):
+                     pos_offset: int = 0, lengths: jax.Array | None = None,
+                     segment_ids: jax.Array | None = None,
+                     positions: jax.Array | None = None):
     """Causal (optionally windowed) self-attention over a full sequence.
 
     ``lengths``: optional (B,) true lengths for ragged batches — positions
     at or beyond a row's length are masked inside the attention kernel (the
     padded tail reads 0), so ragged training/scoring never rounds batch
-    rows up.  Training/scoring only: the returned kv_cache is built from
-    the *full* fixed-shape sequence (its scalar ``index`` counts all N
-    positions), so decode handoff from a ragged prefill would attend the
-    padded keys as if real — per-row cache indices are the missing piece.
+    rows up.  With a cache the per-row lengths travel along in it
+    (``prompt_lens``/``prompt_pad``) and :func:`softmax_step` masks the
+    padded gap between a row's true prompt and the decode region — true
+    ragged prefill → decode handoff (the ROADMAP follow-up of PR 4); the
+    trailing-window ring cache (cache_len < N) still needs per-row ring
+    indices and raises.
+
+    Packed sequences (DESIGN.md §Packing): ``segment_ids`` (B, N) routes
+    through the kernel segment masks (attention never crosses a document,
+    padding id 0 reads 0) and RoPE rotates by ``positions`` (B, N) —
+    within-document positions, derived from the ids when not supplied — so
+    every packed document sees exactly its unpacked phases.  Training/
+    scoring only (a packed row has no single decode tail): the returned
+    cache is the usual fixed-shape one and is meaningless for handoff.
     Returns (y, kv_cache) — the cache holds the last ``cache_len`` positions
     (or everything if None ⇒ cache_len = N) for decode handoff.
     """
-    if lengths is not None and cache_len is not None:
-        raise NotImplementedError(
-            "ragged lengths with decode handoff needs per-row cache "
-            "indices; pass lengths only on training/scoring paths")
     b, n, _ = x.shape
     q = _proj_q(p, x)
     k, v = _proj_kv(p, x)
-    positions = jnp.arange(n) + pos_offset
-    q = rope_for_positions(q, positions[None, :], cfg.rope_theta)
-    k = rope_for_positions(k, positions[None, :], cfg.rope_theta)
+    if segment_ids is not None and positions is None:
+        positions = segment_positions(segment_ids)
+    if positions is None:
+        positions = (jnp.arange(n) + pos_offset)[None, :]
+    q = rope_for_positions(q, positions, cfg.rope_theta)
+    k = rope_for_positions(k, positions, cfg.rope_theta)
     # cp_flash_mha: ring flash attention when a context-parallel session is
     # active (the sequence dim lives on the `seq` mesh axis); otherwise the
     # usual flash_mha dispatch — Pallas flash kernel on TPU, masked softmax
     # jnp reference elsewhere (CPU smoke tests + dry-run lowering).  Either
-    # way true-length masking happens in-kernel (DESIGN.md §Masking).
+    # way true-length/segment masking happens in-kernel (DESIGN.md §Masking,
+    # §Packing).
     ctx = dctx.cp_flash_mha(q, k, v, causal=True, window=window,
-                            lengths=lengths)
+                            lengths=lengths, segment_ids=segment_ids)
     y = _proj_out(p, ctx)
 
     cl = cache_len if cache_len is not None else n
@@ -116,7 +128,16 @@ def softmax_sequence(p: dict, x: jax.Array, cfg: ArchConfig, *,
         cache = soft.init_kv_cache(b, cl, cfg.n_kv_heads, cfg.resolved_head_dim,
                                    dtype=k.dtype)
         cache = soft.update_kv_cache(cache, k, v)
+        if lengths is not None:
+            # Ragged prefill: remember each row's true prompt length and the
+            # padded prompt span so decode can mask the gap (softmax_step).
+            cache["prompt_lens"] = jnp.asarray(lengths, jnp.int32)
+            cache["prompt_pad"] = jnp.asarray(n, jnp.int32)
     else:  # keep the trailing window (ring buffer starts full)
+        if lengths is not None:
+            raise NotImplementedError(
+                "ragged lengths with a trailing-window ring cache needs "
+                "per-row ring indices; use cache_len >= N")
         cache = {
             "k": k[:, n - cl:].astype(jnp.bfloat16),
             "v": v[:, n - cl:].astype(jnp.bfloat16),
@@ -127,35 +148,61 @@ def softmax_sequence(p: dict, x: jax.Array, cfg: ArchConfig, *,
 
 def softmax_step(p: dict, x_t: jax.Array, cache: dict, cfg: ArchConfig, *,
                  window: int | None):
-    """One-token decode against the (ring) KV cache.  O(cache_len) work."""
+    """One-token decode against the (ring) KV cache.  O(cache_len) work.
+
+    A cache carrying ``prompt_lens`` came from a *ragged* right-padded
+    prefill (:func:`softmax_sequence` with ``lengths=``): row ``i``'s real
+    keys live in slots [0, prompt_lens[i]) and [prompt_pad, index); the gap
+    holds the padded prompt tail and is masked per row.  RoPE and window
+    masks then use the row's *true* absolute position ``prompt_lens[i] +
+    (index - prompt_pad)`` — right-padding keeps the valid prefix at its
+    true positions, which is what makes this exact (unlike left-padding,
+    which shifts every real token's phase).
+    """
     b = x_t.shape[0]
     max_len = cache["k"].shape[1]
     idx = cache["index"]
-    pos = idx  # absolute position of the new token
+    ragged = "prompt_lens" in cache
+    if ragged:
+        plens = cache["prompt_lens"]              # (B,) true prompt lengths
+        pp = cache["prompt_pad"]                  # padded prompt span
+        pos_row = (plens + (idx - pp))[:, None]   # (B, 1) true abs position
+    else:
+        pos_row = jnp.full((1, 1), idx)           # absolute position, shared
     q = _proj_q(p, x_t)
     k_new, v_new = _proj_kv(p, x_t)
-    q = rope_for_positions(q, jnp.full((1, 1), pos), cfg.rope_theta)
-    k_new = rope_for_positions(k_new, jnp.full((1, 1), pos), cfg.rope_theta)
+    q = rope_for_positions(q, pos_row, cfg.rope_theta)
+    k_new = rope_for_positions(k_new, pos_row, cfg.rope_theta)
 
     slot = jnp.mod(idx, max_len)
     k = jax.lax.dynamic_update_slice_in_dim(
         cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
     v = jax.lax.dynamic_update_slice_in_dim(
         cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
-    new_cache = {"k": k, "v": v, "index": idx + 1}
+    new_cache = dict(cache, k=k, v=v, index=idx + 1)
 
     # Ring-aware mask: slots written = min(idx+1, max_len); additionally for
     # sliding windows only the last `window` absolute positions are valid —
     # with capacity == window those coincide, so slot-validity suffices.
     n_written = jnp.minimum(idx + 1, max_len)
     slots = jnp.arange(max_len)
-    valid = slots < n_written
+    if ragged:
+        # (B, S): real prompt prefix ∪ decode region; the padded gap is out.
+        valid = ((slots[None, :] < plens[:, None])
+                 | ((slots[None, :] >= pp) & (slots[None, :] < n_written)))
+        k_pos = jnp.where(slots[None, :] < pp, slots[None, :],
+                          plens[:, None] + (slots[None, :] - pp))
+        if window is not None:
+            valid &= k_pos > pos_row - window
+        valid = valid[:, None, None, :]           # (B, 1, 1, S)
+    else:
+        valid = (slots < n_written)[None, None, None, :]
     kf = soft._expand_kv(k, cfg.n_heads)
     vf = soft._expand_kv(v, cfg.n_heads)
     scale = 1.0 / float(np.sqrt(cfg.resolved_head_dim))
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    kf.astype(jnp.float32)) * scale
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid, s, NEG_INF)
     pattr = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhqk,bkhd->bqhd", pattr, vf.astype(pattr.dtype))
     y = _proj_out(p, ctx.astype(x_t.dtype))
@@ -180,7 +227,8 @@ def aaren_state_specs(cfg: ArchConfig, batch: int) -> ScanState:
     return aaren_core.carry_specs(batch, cfg.n_heads, cfg.resolved_head_dim)
 
 
-def _aaren_attention_dispatch(q_heads, k, v, scale):
+def _aaren_attention_dispatch(q_heads, k, v, scale, segment_ids=None,
+                              lengths=None):
     """Scores + per-head values, then the dispatched prefix-scan attention.
 
     Pallas ``aaren_scan`` kernel on TPU; ``lax.associative_scan`` elsewhere.
@@ -188,19 +236,38 @@ def _aaren_attention_dispatch(q_heads, k, v, scale):
     over the ``seq`` mesh axis: each device scans its shard and the carries
     travel the log-step exchange (``distributed/context.py``).  Same
     semantics as :func:`aaren_core.aaren_attention_parallel` in every mode.
+
+    ``segment_ids`` (B, N): packed rows — the scan resets its carry at
+    every document start and padding (id 0) is inert (DESIGN.md §Packing).
+    ``lengths`` (B,): ragged right-padded rows — the padded tail enters as
+    ⊕-identity leaves, so the final carry is the state at each row's true
+    length (exact ragged prefill).
     """
     s = aaren_core._scores(q_heads, k, scale)  # (B, H, N) f32
     vh = aaren_core._values_per_head(v, q_heads.shape[0]).astype(jnp.float32)
-    o, final = dctx.cp_aaren_prefix_attention(s, vh)  # (B, H, N, d)
+    if lengths is not None:
+        valid = jnp.arange(s.shape[-1])[None, :] < lengths[:, None]  # (B, N)
+        s, vh = mask_to_identity(s, vh, valid[:, None, :])
+    o, final = dctx.cp_aaren_prefix_attention(
+        s, vh, segment_ids=segment_ids)  # (B, H, N, d)
     return jnp.swapaxes(o, 1, 2).astype(v.dtype), final
 
 
 def aaren_sequence(p: dict, x: jax.Array, cfg: ArchConfig,
-                   attention_fn=None):
-    """Full-sequence Aaren (parallel prefix scan).  No RoPE (DESIGN.md §4)."""
+                   attention_fn=None, *, segment_ids: jax.Array | None = None,
+                   lengths: jax.Array | None = None):
+    """Full-sequence Aaren (parallel prefix scan).  No RoPE (DESIGN.md §4).
+
+    ``segment_ids``/``lengths`` thread packed-batch resets / ragged-tail
+    masking into the scan dispatch (see :func:`_aaren_attention_dispatch`).
+    """
     w = _aaren_weights(p)
-    fn = attention_fn or _aaren_attention_dispatch
-    y, final = aaren_core.aaren_layer_parallel(w, x, attention_fn=fn)
+    if attention_fn is None:
+        def attention_fn(q_heads, k, v, scale):
+            return _aaren_attention_dispatch(
+                q_heads, k, v, scale, segment_ids=segment_ids,
+                lengths=lengths)
+    y, final = aaren_core.aaren_layer_parallel(w, x, attention_fn=attention_fn)
     return y, final
 
 

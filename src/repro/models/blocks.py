@@ -129,19 +129,29 @@ def block_state_axes(sig: Sig, cfg: ArchConfig):
 AXES_IS_LEAF = lambda x: isinstance(x, list)  # noqa: E731
 
 
-def _apply_mixer_sequence(p, h, sig, cfg, cache_len):
+def _apply_mixer_sequence(p, h, sig, cfg, cache_len, segment_ids=None,
+                          positions=None, lengths=None):
     mixer = sig[0]
     if mixer == "aaren":
-        return attn.aaren_sequence(p, h, cfg)
+        return attn.aaren_sequence(p, h, cfg, segment_ids=segment_ids,
+                                   lengths=lengths)
     if mixer == "attn":
         return attn.softmax_sequence(p, h, cfg, window=None,
-                                     cache_len=cache_len)
+                                     cache_len=cache_len,
+                                     segment_ids=segment_ids,
+                                     positions=positions, lengths=lengths)
     if mixer == "attn_local":
         return attn.softmax_sequence(p, h, cfg, window=cfg.window,
-                                     cache_len=min(cfg.window, cache_len))
-    if mixer == "rglru":
-        return rglru_mod.rglru_sequence(p, h, cfg)
-    if mixer == "ssd":
+                                     cache_len=min(cfg.window, cache_len),
+                                     segment_ids=segment_ids,
+                                     positions=positions, lengths=lengths)
+    if mixer in ("rglru", "ssd"):
+        if segment_ids is not None or lengths is not None:
+            raise ValueError(
+                f"{mixer} has no packed-segment or ragged-length support: "
+                "its recurrence has no maskable identity element")
+        if mixer == "rglru":
+            return rglru_mod.rglru_sequence(p, h, cfg)
         return ssd_mod.ssd_sequence(p, h, cfg)
     raise ValueError(mixer)
 
@@ -202,10 +212,19 @@ def _apply_mlp(p, x, sig, cfg, want_aux: bool, decode: bool = False):
 
 
 def block_sequence(p: dict, x: jax.Array, sig: Sig, cfg: ArchConfig, *,
-                   cache_len: int, collect_state: bool, want_aux: bool = True):
-    """Full-sequence block.  Returns (x, state_or_None, aux)."""
+                   cache_len: int, collect_state: bool, want_aux: bool = True,
+                   segment_ids: jax.Array | None = None,
+                   positions: jax.Array | None = None,
+                   lengths: jax.Array | None = None):
+    """Full-sequence block.  Returns (x, state_or_None, aux).
+
+    ``segment_ids``/``positions``: packed-sequence arrays (only the mixer
+    consumes them — norms and MLPs are position-wise, so documents cannot
+    leak into each other there); ``lengths``: ragged right-padded rows.
+    """
     h = apply_norm(p["norm1"], x, cfg.norm)
-    y, state = _apply_mixer_sequence(p["mixer"], h, sig, cfg, cache_len)
+    y, state = _apply_mixer_sequence(p["mixer"], h, sig, cfg, cache_len,
+                                     segment_ids, positions, lengths)
     x = constrain(x + y, RESIDUAL_AXES)
     x, aux = _apply_mlp(p, x, sig, cfg, want_aux)
     x = constrain(x, RESIDUAL_AXES)

@@ -53,11 +53,14 @@ def _lm_api(cfg: ArchConfig) -> ModelAPI:
         return logits
 
     def prefill(params, batch):
+        # "lengths": optional (B,) true prompt lengths of right-padded
+        # ragged rows — masked in-kernel, so the returned decode states are
+        # exactly each row's true-length states (serving ragged prefill).
         logits, states, _ = lm.lm_apply(
             cfg, params, batch["tokens"],
             prefix_embeds=batch.get("prefix_embeds"),
             collect_state=True, cache_len=batch.get("cache_len"),
-            want_aux=False)
+            want_aux=False, lengths=batch.get("lengths"))
         return logits, states
 
     def decode_step(params, step_batch):

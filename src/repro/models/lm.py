@@ -81,8 +81,13 @@ def _group_size(n_periods: int) -> int:
     return best
 
 
-def _period_fn(cfg, sigs, cache_len, collect_state, want_aux):
-    """One scan step: apply the whole period of blocks to x."""
+def _period_fn(cfg, sigs, cache_len, collect_state, want_aux,
+               segment_ids=None, positions=None, lengths=None):
+    """One scan step: apply the whole period of blocks to x.
+
+    The packed/ragged arrays are closed over — they become scan constants,
+    shared by every period.
+    """
 
     def fn(x, period_params):
         states, auxes = [], []
@@ -91,7 +96,8 @@ def _period_fn(cfg, sigs, cache_len, collect_state, want_aux):
             x, st, aux = blocks.block_sequence(
                 period_params[pos], x, sig, cfg,
                 cache_len=cache_len, collect_state=collect_state,
-                want_aux=want_aux)
+                want_aux=want_aux, segment_ids=segment_ids,
+                positions=positions, lengths=lengths)
             states.append(st)
             auxes.append(aux)
         aux_sum = jax.tree.map(lambda *a: sum(a), *auxes)
@@ -109,6 +115,9 @@ def lm_apply(
     collect_state: bool = False,
     cache_len: int | None = None,
     want_aux: bool = True,
+    segment_ids: jax.Array | None = None,
+    positions: jax.Array | None = None,
+    lengths: jax.Array | None = None,
 ):
     """tokens (B, N) -> logits (B, N_total, vocab) [f32].
 
@@ -116,10 +125,21 @@ def lm_apply(
     ``collect_state``; layout: {"periods": tuple-of-stacked-trees,
     "rest": tuple-of-trees}.  ``aux`` holds MoE load-balance scalars
     (averaged over layers).
+
+    Packed batches (DESIGN.md §Packing): ``segment_ids``/``positions``
+    (B, N) keep the packed documents independent in every mixer (segment
+    masks / carry resets) and restart RoPE per document.  ``lengths`` (B,)
+    instead marks ragged right-padded rows (one document each, true length
+    per row) — the serving ragged-prefill path.  Both are incompatible with
+    ``prefix_embeds`` (the prefix would shift every position).
     """
     n_periods, n_rest = cfg.layer_plan()
     sigs = _sigs(cfg)
     compute_dtype = jnp.dtype(cfg.compute_dtype)
+    if prefix_embeds is not None and (segment_ids is not None
+                                      or lengths is not None):
+        raise ValueError("prefix_embeds cannot combine with packed/ragged "
+                         "batches (positions would shift)")
 
     x = apply_embed(params["embed"], tokens, compute_dtype)
     if prefix_embeds is not None:
@@ -129,7 +149,9 @@ def lm_apply(
         cache_len = n_total
     x = constrain(x, ACT_AXES)
 
-    period = _period_fn(cfg, sigs, cache_len, collect_state, want_aux)
+    period = _period_fn(cfg, sigs, cache_len, collect_state, want_aux,
+                        segment_ids=segment_ids, positions=positions,
+                        lengths=lengths)
     use_group = cfg.remat == "group" and cfg.scan_layers and n_periods > 3
     if cfg.remat == "block" or (cfg.remat == "group" and not use_group):
         period = jax.checkpoint(period, prevent_cse=False)
@@ -185,7 +207,9 @@ def lm_apply(
             x = constrain(x, ACT_AXES)
             x, st, aux = blocks.block_sequence(
                 params["rest"][i], x, sig, cfg, cache_len=cache_len,
-                collect_state=collect_state, want_aux=want_aux)
+                collect_state=collect_state, want_aux=want_aux,
+                segment_ids=segment_ids, positions=positions,
+                lengths=lengths)
             rest_states.append(st)
             aux_acc = jax.tree.map(lambda a, b: a + b, aux_acc, aux)
         if collect_state:
@@ -394,11 +418,24 @@ def lm_state_init(cfg: ArchConfig, batch: int, cache_len: int):
 def lm_loss(cfg: ArchConfig, params: dict, batch: dict,
             *, aux_weight: float = 0.01):
     """Next-token CE loss.  batch: {"tokens": (B,N), "loss_mask": (B,N)?,
-    "prefix_embeds": (B,T,D)?}.  Returns (loss, metrics)."""
+    "prefix_embeds": (B,T,D)?, "segment_ids": (B,N)?, "positions": (B,N)?}.
+    Returns (loss, metrics).
+
+    Packed batches (``segment_ids`` present): the attention stack keeps the
+    documents independent, and the loss must too — position ``t`` only
+    scores its target ``t+1`` when both belong to the same real document
+    (``seg[t] == seg[t+1] != 0``).  Without the guard, the last token of
+    every document would be trained to predict the *next document's* first
+    token, and padding would be scored on garbage logits.  The masked mean
+    then sums exactly the per-document next-token terms an unpacked padded
+    batch would — the parity tests pin this to ≤1e-5.
+    """
     tokens = batch["tokens"]
     prefix = batch.get("prefix_embeds")
+    seg = batch.get("segment_ids")
     logits, _, aux = lm_apply(
-        cfg, params, tokens, prefix_embeds=prefix, collect_state=False)
+        cfg, params, tokens, prefix_embeds=prefix, collect_state=False,
+        segment_ids=seg, positions=batch.get("positions"))
     if prefix is not None:  # VLM: score text positions only
         logits = logits[:, prefix.shape[1]:]
     targets = tokens[:, 1:]
@@ -411,6 +448,10 @@ def lm_loss(cfg: ArchConfig, params: dict, batch: dict,
     nll = constrain(nll, ("batch", "seq"))
     mask = batch.get("loss_mask")
     mask = jnp.ones_like(nll) if mask is None else mask[:, 1:].astype(nll.dtype)
+    if seg is not None:  # cross-segment-safe: target must share the document
+        seg = jnp.asarray(seg)
+        same_doc = (seg[:, 1:] == seg[:, :-1]) & (seg[:, 1:] != 0)
+        mask = mask * same_doc.astype(nll.dtype)
     ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
     loss = ce + aux_weight * aux["load_balance_loss"]
     metrics = {"loss": loss, "ce": ce, **aux}

@@ -96,19 +96,24 @@ _GEN_FNS: "weakref.WeakKeyDictionary[ModelAPI, dict]" = (
     weakref.WeakKeyDictionary())
 
 
-def _generate_fns(api: ModelAPI, cache_len: int):
+def _generate_fns(api: ModelAPI, cache_len: int, ragged: bool = False):
     fns = _GEN_FNS.setdefault(api, {})
     # Close over the member functions, NOT over `api`: a value that captured
     # the key would pin it strongly and defeat the weak eviction.
     if "decode" not in fns:
         decode_step = api.decode_step
         fns["decode"] = jax.jit(lambda pr, sb: decode_step(pr, sb))
-    pf_key = ("prefill", cache_len)
+    pf_key = ("prefill", cache_len, ragged)
     if pf_key not in fns:
         # cache_len is a static model property — close over it, don't trace.
         prefill = api.prefill
-        fns[pf_key] = jax.jit(lambda pr, toks: prefill(
-            pr, {"tokens": toks, "cache_len": cache_len}))
+        if ragged:
+            fns[pf_key] = jax.jit(lambda pr, toks, lens: prefill(
+                pr, {"tokens": toks, "cache_len": cache_len,
+                     "lengths": lens}))
+        else:
+            fns[pf_key] = jax.jit(lambda pr, toks: prefill(
+                pr, {"tokens": toks, "cache_len": cache_len}))
     return fns[pf_key], fns["decode"]
 
 
@@ -121,17 +126,46 @@ def generate(
     sampler: Callable = greedy_sampler,
     key: jax.Array | None = None,
     cache_len: int | None = None,
+    prompt_lengths: jax.Array | None = None,
 ):
-    """Wave-based generation.  Returns (tokens (B, max_new), final states)."""
+    """Wave-based generation.  Returns (tokens (B, max_new), final states).
+
+    ``prompt_lengths``: optional (B,) true lengths of *right-padded* ragged
+    prompts.  The prefill then masks each row's padded tail in-kernel
+    (``flash_mha(q_lens=, kv_lens=)`` / the Aaren ⊕-identity mask), row
+    ``i``'s first sample reads the logits at its true last token, and
+    decode continues from exact per-row states — KV caches carry the
+    per-row prompt lengths so the padded gap is masked and RoPE/window use
+    true absolute positions (``models/attention.softmax_step``).  Generated
+    tokens therefore match running each prompt alone, unlike the legacy
+    left-padded approximation where pad tokens were attended as real
+    context (tests/test_serving.py pins this parity).
+    """
     b, p = prompts.shape
     if cache_len is None:
         cache_len = p + max_new_tokens
     key = key if key is not None else jax.random.PRNGKey(0)
-    prefill, decode = _generate_fns(api, cache_len)
+    ragged = prompt_lengths is not None
+    if ragged and cache_len < p + max_new_tokens:
+        # The ragged decode mask maps slots [0, prompt_lens) to the true
+        # prompt prefix; a wrapping ring would overwrite those slots with
+        # decode-era keys while the mask still reads them as prompt.
+        raise ValueError(
+            f"ragged prefill needs a non-wrapping cache: cache_len="
+            f"{cache_len} < padded prompt {p} + max_new {max_new_tokens}")
+    prefill, decode = _generate_fns(api, cache_len, ragged=ragged)
 
-    logits, states = prefill(params, prompts)
+    if ragged:
+        lens = jnp.asarray(prompt_lengths, jnp.int32)
+        logits, states = prefill(params, prompts, lens)
+        # Row i's prompt ends at lens[i] - 1 — gather its logits per row.
+        last = jnp.take_along_axis(
+            logits, (lens - 1)[:, None, None], axis=1)          # (B, 1, V)
+    else:
+        logits, states = prefill(params, prompts)
+        last = logits[:, -1:]
     rids = list(range(b))
-    tok = _sample_rows(sampler, logits[:, -1:], key, rids, [0] * b)
+    tok = _sample_rows(sampler, last, key, rids, [0] * b)
     out = [tok]
     for t in range(1, max_new_tokens):
         logits, states = decode(params, {"token": tok, "states": states})

@@ -46,6 +46,13 @@ class LoopConfig:
     # seq axis, sharding rules installed, and attention dispatched to the
     # cross-device prefix-scan / ring-flash paths (distributed/context.py).
     context_parallel: int = 1
+    # Sequence packing (DESIGN.md §Packing): expect packed batches — each
+    # row several documents separated by `segment_ids` (0 = padding).  The
+    # loop then validates the batch shape once and reports per-step
+    # `token_util` (real tokens / row slots) next to the loss, so the
+    # packing win the subsystem exists for is visible in the logs.  The
+    # model side needs no switch: lm_loss keys off the batch arrays.
+    pack_sequences: bool = False
 
 
 @dataclasses.dataclass
@@ -102,6 +109,15 @@ def run_train_loop(
             while int(state.step) < cfg.total_steps and not preempt["flag"]:
                 step = int(state.step)
                 batch = next(data_iter)
+                token_util = None
+                if cfg.pack_sequences:
+                    if "segment_ids" not in batch:
+                        raise ValueError(
+                            "pack_sequences=True but the batch has no "
+                            "segment_ids; use a packing iterator "
+                            "(repro.data.packing.PackedLMIterator)")
+                    seg = np.asarray(batch["segment_ids"])
+                    token_util = float((seg != 0).mean())
                 key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
                 t0 = time.perf_counter()
                 state, metrics = train_step(state, batch, key)
@@ -125,6 +141,8 @@ def run_train_loop(
                 if step % cfg.log_every == 0:
                     m = {k: float(v) for k, v in metrics.items()}
                     m["step_time_s"] = dt
+                    if token_util is not None:
+                        m["token_util"] = token_util
                     history.append((step, m))
                     if on_log:
                         on_log(step, m)

@@ -1,0 +1,462 @@
+"""Sequence-packing subsystem tests (DESIGN.md §Packing).
+
+Three layers of evidence:
+
+* **Packer** — first-fit properties, round-trip, determinism, and the
+  ``PackedLMIterator``'s per-global-row host-sharding contract;
+* **Kernel parity** — segmented Aaren scan / flash attention against dense
+  references AND against running each document unpacked (the strongest
+  oracle: no masking machinery on the reference side), forward + gradients,
+  including a document straddling a kernel block boundary;
+* **End-to-end training parity** — a packed batch of K ragged documents
+  reproduces the per-document loss and parameter gradients of exact-length
+  per-document evaluation to ≤1e-5 (f32) for both mixers, plus a
+  hypothesis sweep over ragged length sets and an 8-device
+  context-parallel twin.
+
+Runs in every kernel mode: tier-1 (jnp), the CI kernel-parity ``packed``
+matrix entry (interpret), and the 8-device job (jnp + seq mesh).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.scan_attention import (
+    NEG_INF,
+    combine_segmented,
+    segment_starts_from_ids,
+)
+from repro.data.packing import (
+    PackedLMIterator,
+    pack_documents,
+    packing_stats,
+    unpack_documents,
+)
+from repro.kernels import ops as kops
+from repro.kernels.ref import aaren_scan_segmented_reference
+from repro.models.factory import build
+
+
+def _assert_close(a, b, atol=1e-5, msg=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol,
+                               rtol=1e-5, err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Packer + iterator
+# ---------------------------------------------------------------------------
+
+
+def test_pack_documents_first_fit_layout():
+    docs = [np.arange(1, 5), np.arange(5, 10), np.arange(10, 13),
+            np.arange(13, 20)]                     # lengths 4, 5, 3, 7
+    packed = pack_documents(docs, seq_len=8)
+    # first-fit: [4, 5?no->bin1(5), 3->bin0(4+3), 7?no no->bin2]
+    assert packed["tokens"].shape == (3, 8)
+    assert packed["segment_ids"][0, :4].tolist() == [1] * 4
+    assert packed["segment_ids"][0, 4:7].tolist() == [2] * 3
+    assert packed["segment_ids"][0, 7] == 0        # padding
+    assert packed["segment_ids"][1, :5].tolist() == [1] * 5
+    assert packed["segment_ids"][2, :7].tolist() == [1] * 7
+    # positions restart at 0 at every document start
+    assert packed["positions"][0, :7].tolist() == [0, 1, 2, 3, 0, 1, 2]
+    assert packed["loss_mask"][0].tolist() == [1.0] * 7 + [0.0]
+
+
+def test_pack_documents_roundtrip_and_errors():
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, 99, size=L) for L in (3, 9, 2, 7, 5, 8)]
+    packed = pack_documents(docs, seq_len=16)
+    out = unpack_documents(packed)
+    assert len(out) == len(docs)
+    # every input document appears exactly once (order may interleave bins)
+    key = lambda d: tuple(int(x) for x in d)
+    assert sorted(map(key, out)) == sorted(map(key, docs))
+    with pytest.raises(ValueError, match="exceeds seq_len"):
+        pack_documents([np.arange(20)], seq_len=16)
+    with pytest.raises(ValueError, match="empty"):
+        pack_documents([np.arange(0)], seq_len=16)
+
+
+def test_packing_stats_accounting():
+    stats = packing_stats([512] + [96] * 12, seq_len=512, n_rows=4)
+    assert stats["real_tokens"] == 512 + 96 * 12
+    assert stats["padded_slots"] == 13 * 512
+    assert stats["padded_token_ratio"] == pytest.approx(13 * 512 / 1664)
+    assert 0 < stats["utilization"] <= 1
+
+
+def test_packed_iterator_host_sharding_union():
+    """Union of per-host slices == the single-host batch; restart-safe."""
+    kw = dict(vocab=128, seq_len=64, batch=4, seed=7)
+    single = PackedLMIterator(**kw)
+    hosts = [PackedLMIterator(**kw, host_id=h, num_hosts=2) for h in (0, 1)]
+    b0 = next(single)
+    parts = [next(h) for h in hosts]
+    for k in b0:
+        np.testing.assert_array_equal(
+            b0[k], np.concatenate([p[k] for p in parts]), err_msg=k)
+    # determinism + state round-trip
+    fresh = PackedLMIterator(**kw)
+    next(fresh)
+    state = fresh.state()
+    b1 = next(fresh)
+    resumed = PackedLMIterator(**kw)
+    resumed.restore(state)
+    b1_again = next(resumed)
+    for k in b1:
+        np.testing.assert_array_equal(b1[k], b1_again[k], err_msg=k)
+    # structure sanity: ids contiguous from 1, padding only at the tail
+    seg = b0["segment_ids"]
+    for row in seg:
+        nz = row[row != 0]
+        assert nz.size > 0 and nz.min() == 1
+        assert (np.diff(np.flatnonzero(row != 0)) == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Segmented-operator + kernel parity
+# ---------------------------------------------------------------------------
+
+
+def test_segmented_combine_associative(rng):
+    """The lifted (⊕, flag) operator is associative — the property both the
+    Hillis–Steele kernels and lax.associative_scan rely on."""
+    ks = jax.random.split(rng, 12)
+    ops = []
+    for i in range(3):
+        ops.append((
+            jax.random.normal(ks[4 * i], (5,)),
+            jax.nn.softplus(jax.random.normal(ks[4 * i + 1], (5,))),
+            jax.random.normal(ks[4 * i + 2], (5, 3)),
+            (jax.random.uniform(ks[4 * i + 3], (5,)) > 0.5).astype(
+                jnp.float32),
+        ))
+    a, b, c = ops
+    left = combine_segmented(combine_segmented(a, b), c)
+    right = combine_segmented(a, combine_segmented(b, c))
+    for x, y, name in zip(left, right, "muwf"):
+        _assert_close(x, y, msg=name)
+
+
+def _segments(r, n, spans):
+    seg = np.zeros((r, n), np.int32)
+    for sid, (a, b) in enumerate(spans, start=1):
+        seg[:, a:b] = sid
+    return jnp.asarray(seg)
+
+
+SPANS = [(0, 7), (7, 15), (15, 20)]   # ragged docs + padded tail (N=23)
+
+
+@pytest.mark.parametrize("block_n", [8, 256])
+def test_segmented_scan_matches_dense_reference(rng, block_n):
+    """Segmented Aaren scan == dense per-segment softmax, outputs + finals.
+
+    block_n=8 places document 2 across the 8- and 16-token kernel block
+    boundaries — the carry must reset mid-block and survive across blocks.
+    """
+    r, n, d = 3, 23, 5
+    s = jax.random.normal(rng, (r, n))
+    v = jax.random.normal(jax.random.fold_in(rng, 1), (r, n, d))
+    seg = _segments(r, n, SPANS)
+    o_ref, m_ref, u_ref, w_ref = aaren_scan_segmented_reference(s, v, seg)
+    o, fin = kops.aaren_prefix_attention(s, v, segment_ids=seg,
+                                         block_n=block_n)
+    _assert_close(o, o_ref, msg="outputs")
+    _assert_close(fin.m, m_ref[:, 0], msg="final m")
+    _assert_close(fin.u, u_ref[:, 0], msg="final u")
+    _assert_close(fin.w, w_ref, msg="final w")
+
+
+def test_segmented_scan_grads_match_per_doc(rng):
+    """Packed-scan cotangents == each document differentiated unpacked,
+    including the final-carry cotangents (which belong to the last doc)."""
+    r, n, d = 3, 23, 5
+    s = jax.random.normal(rng, (r, n))
+    v = jax.random.normal(jax.random.fold_in(rng, 1), (r, n, d))
+    seg = _segments(r, n, SPANS)
+
+    def packed(s_, v_):
+        o, fin = kops.aaren_prefix_attention(s_, v_, segment_ids=seg,
+                                             block_n=8)
+        return (jnp.sum(jnp.sin(o)) + 0.3 * jnp.sum(fin.w)
+                + 0.7 * jnp.sum(fin.u))
+
+    gs, gv = jax.grad(packed, argnums=(0, 1))(s, v)
+    gs_ref = np.zeros((r, n), np.float32)
+    gv_ref = np.zeros((r, n, d), np.float32)
+    last = SPANS[-1]
+    for a, b in SPANS:
+        def doc(s_, v_):
+            o, fin = kops.aaren_prefix_attention(s_, v_)
+            extra = (0.3 * jnp.sum(fin.w) + 0.7 * jnp.sum(fin.u)
+                     if (a, b) == last else 0.0)
+            return jnp.sum(jnp.sin(o)) + extra
+        g1, g2 = jax.grad(doc, argnums=(0, 1))(s[:, a:b], v[:, a:b])
+        gs_ref[:, a:b] = np.asarray(g1)
+        gv_ref[:, a:b] = np.asarray(g2)
+    _assert_close(gs, gs_ref, msg="ds")
+    _assert_close(gv, gv_ref, msg="dv")
+    # padding got no gradient
+    assert np.abs(np.asarray(gs)[:, 20:]).max() == 0.0
+
+
+def test_segmented_scan_composes_with_carry(rng):
+    """An incoming carry reaches exactly the first document (cp seeding)."""
+    r, n, d = 2, 16, 4
+    s = jax.random.normal(rng, (r, n))
+    v = jax.random.normal(jax.random.fold_in(rng, 1), (r, n, d))
+    seg = _segments(r, n, [(0, 6), (6, 16)])
+    from repro.core.scan_attention import ScanState
+    ks = jax.random.split(jax.random.fold_in(rng, 2), 3)
+    carry = ScanState(m=jax.random.normal(ks[0], (r,)) * 0.5,
+                      u=jax.nn.softplus(jax.random.normal(ks[1], (r,))),
+                      w=jax.random.normal(ks[2], (r, d)))
+    o, _ = kops.aaren_prefix_attention(s, v, carry, segment_ids=seg)
+    # doc 1 sees the carry; doc 2 must not
+    o_doc1, _ = kops.aaren_prefix_attention(s[:, :6], v[:, :6], carry)
+    o_doc2, _ = kops.aaren_prefix_attention(s[:, 6:], v[:, 6:])
+    _assert_close(o[:, :6], o_doc1, msg="first doc with carry")
+    _assert_close(o[:, 6:], o_doc2, msg="second doc isolated from carry")
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 9])
+def test_segmented_flash_matches_per_doc(rng, dtype, window):
+    """Packed flash == each document run unpacked — fwd and all cotangents.
+
+    N=23 with the default 256-token tile exercises the in-tile segment
+    mask; the straddle of kernel tiles is covered by the N=512 case in
+    test_packed_lm_parity (documents cross the 256 boundary there).
+    """
+    b, n, h, g, d = 2, 23, 4, 2, 8
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, n, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, n, g, d), dtype)
+    v = jax.random.normal(ks[2], (b, n, g, d), dtype)
+    seg = _segments(b, n, SPANS)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+
+    o = kops.flash_mha(q, k, v, causal=True, window=window,
+                       q_segment_ids=seg)
+    assert o.dtype == dtype
+    np.testing.assert_allclose(np.asarray(o[:, 20:], np.float32), 0.0,
+                               atol=tol, err_msg="padding must read 0")
+
+    def packed_loss(q_, k_, v_):
+        out = kops.flash_mha(q_, k_, v_, causal=True, window=window,
+                             q_segment_ids=seg)
+        return jnp.sum(jnp.cos(out.astype(jnp.float32)))
+
+    gq, gk, gv = jax.grad(packed_loss, argnums=(0, 1, 2))(q, k, v)
+    for a, bb in SPANS:
+        o_doc = kops.flash_mha(q[:, a:bb], k[:, a:bb], v[:, a:bb],
+                               causal=True, window=window)
+        np.testing.assert_allclose(
+            np.asarray(o[:, a:bb], np.float32),
+            np.asarray(o_doc, np.float32), atol=tol, rtol=tol,
+            err_msg=f"fwd doc [{a},{bb})")
+
+        def doc_loss(q_, k_, v_):
+            out = kops.flash_mha(q_, k_, v_, causal=True, window=window)
+            return jnp.sum(jnp.cos(out.astype(jnp.float32)))
+
+        g1, g2, g3 = jax.grad(doc_loss, argnums=(0, 1, 2))(
+            q[:, a:bb], k[:, a:bb], v[:, a:bb])
+        for got, ref, nm in ((gq[:, a:bb], g1, "dq"), (gk[:, a:bb], g2, "dk"),
+                             (gv[:, a:bb], g3, "dv")):
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32), np.asarray(ref, np.float32),
+                atol=tol, rtol=tol, err_msg=f"{nm} doc [{a},{bb})")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end packed LM training parity
+# ---------------------------------------------------------------------------
+
+
+def _lm_cfg(mode: str, dtype: str = "float32") -> ArchConfig:
+    return ArchConfig(
+        name=f"pack-{mode}-{dtype}", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=128, pattern=("attn",),
+        mlp_pattern=("swiglu",), attn_mode=mode, param_dtype="float32",
+        compute_dtype=dtype, remat="none")
+
+
+def _per_doc_reference(api, params, docs, with_grads=True):
+    """Token-weighted mean loss (+ grads) of exact-length per-document runs.
+
+    The strongest oracle: each document is its own batch-1 exact-length
+    call — no masks, no packing machinery anywhere on this side.
+    Documents with a single token have no next-token target and drop out.
+    """
+    tot_nll, tot_cnt = 0.0, 0
+    g_sum = jax.tree.map(jnp.zeros_like, params) if with_grads else None
+    for d in docs:
+        cnt = len(d) - 1
+        if cnt == 0:
+            continue
+        b1 = {"tokens": jnp.asarray(d)[None]}
+        tot_nll += float(api.loss(params, b1)[0]) * cnt
+        if with_grads:
+            g_sum = jax.tree.map(
+                lambda a, b: a + b, g_sum,
+                jax.grad(lambda p: api.loss(p, b1)[0] * cnt)(params))
+        tot_cnt += cnt
+    loss = tot_nll / tot_cnt
+    if not with_grads:
+        return loss, None
+    return loss, jax.tree.map(lambda g: g / tot_cnt, g_sum)
+
+
+def _grad_err(g_a, g_b):
+    errs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        g_a, g_b)
+    return max(jax.tree.leaves(errs))
+
+
+@pytest.mark.parametrize("mode", ["aaren", "softmax"])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_packed_lm_parity(rng, mode, dtype):
+    """Packed batch of K ragged docs == per-doc loss + grads (acceptance).
+
+    seq_len=512 with a 300-token document makes packed documents straddle
+    the flash kernel's default 256-token tile boundary.  f32 must match to
+    ≤1e-5; bf16 compute to a rounding-scaled tolerance (the reductions
+    cross tile layouts that differ between packed and unpacked shapes).
+    """
+    cfg = _lm_cfg(mode, dtype)
+    api = build(cfg)
+    params = api.init(rng)
+    rng_np = np.random.default_rng(3)
+    doc_lens = [300, 120, 87, 64, 200, 48]
+    docs = [rng_np.integers(0, cfg.vocab, size=L).astype(np.int32)
+            for L in doc_lens]
+    packed = pack_documents(docs, 512)
+    assert packed["tokens"].shape[0] < len(docs)  # actually packed
+    batch = {k: jnp.asarray(v) for k, v in packed.items()}
+
+    loss_p, metrics = api.loss(params, batch)
+    g_p = jax.grad(lambda p: api.loss(p, batch)[0])(params)
+    loss_ref, g_ref = _per_doc_reference(api, params, docs)
+
+    if dtype == "float32":
+        assert abs(float(loss_p) - loss_ref) <= 1e-5
+        assert _grad_err(g_p, g_ref) <= 1e-5
+    else:
+        assert abs(float(loss_p) - loss_ref) <= 5e-2
+        assert _grad_err(g_p, g_ref) <= 8e-2
+
+
+@pytest.mark.parametrize("mode", ["aaren", "softmax"])
+def test_packed_lm_parity_hypothesis_sweep(rng, mode):
+    """Property: ANY ragged length set packs to the per-doc loss (f32)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg = _lm_cfg(mode)
+    api = build(cfg)
+    params = api.init(rng)
+
+    @settings(max_examples=6, deadline=None)
+    @given(lens=st.lists(st.integers(min_value=2, max_value=48),
+                         min_size=1, max_size=6),
+           seed=st.integers(min_value=0, max_value=2**16))
+    def check(lens, seed):
+        rng_np = np.random.default_rng(seed)
+        docs = [rng_np.integers(0, cfg.vocab, size=L).astype(np.int32)
+                for L in lens]
+        batch = {k: jnp.asarray(v)
+                 for k, v in pack_documents(docs, 48).items()}
+        loss_p, _ = api.loss(params, batch)
+        loss_ref, _ = _per_doc_reference(api, params, docs, with_grads=False)
+        assert abs(float(loss_p) - loss_ref) <= 2e-5, (lens, seed)
+
+    check()
+
+
+def test_single_token_docs_contribute_nothing(rng):
+    """A 1-token document has no next-token target: it must not affect the
+    loss denominator (the cross-segment guard masks its boundary)."""
+    cfg = _lm_cfg("aaren")
+    api = build(cfg)
+    params = api.init(rng)
+    rng_np = np.random.default_rng(0)
+    base = [rng_np.integers(0, cfg.vocab, size=L).astype(np.int32)
+            for L in (9, 13)]
+    with_single = base + [rng_np.integers(0, cfg.vocab, size=1)
+                          .astype(np.int32)]
+    l0, _ = api.loss(params,
+                     {k: jnp.asarray(v)
+                      for k, v in pack_documents(base, 32).items()})
+    # packing the 1-token doc into the same rows must leave the loss's
+    # *reference* value (per-doc mean over 2-token-plus docs) unchanged
+    loss_ref, _ = _per_doc_reference(api, params, base, with_grads=False)
+    l1, _ = api.loss(params,
+                     {k: jnp.asarray(v)
+                      for k, v in pack_documents(with_single, 32).items()})
+    assert abs(float(l1) - loss_ref) <= 2e-5
+    assert abs(float(l0) - loss_ref) <= 2e-5
+
+
+# ---------------------------------------------------------------------------
+# 8-device context-parallel packed parity (CI multi-device job)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 (emulated) devices: "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+@pytest.mark.parametrize("mode", ["aaren", "softmax"])
+def test_packed_parity_eight_devices(rng, mode):
+    """Packed loss + grads under a seq=8 mesh == single-device packed ==
+    per-doc reference: documents straddle shard boundaries (N=64, P=8 ⇒
+    8-token shards, every doc longer than a shard)."""
+    from repro.distributed.context import context_parallel_session
+
+    cfg = _lm_cfg(mode)
+    api = build(cfg)
+    params = api.init(rng)
+    rng_np = np.random.default_rng(5)
+    docs = [rng_np.integers(0, cfg.vocab, size=L).astype(np.int32)
+            for L in (17, 30, 9, 21, 5)]
+    batch = {k: jnp.asarray(v) for k, v in pack_documents(docs, 64).items()}
+    loss_ref, g_ref = _per_doc_reference(api, params, docs)
+    with context_parallel_session(8):
+        loss_cp = jax.jit(lambda p: api.loss(p, batch)[0])(params)
+        g_cp = jax.jit(jax.grad(lambda p: api.loss(p, batch)[0]))(params)
+    assert abs(float(loss_cp) - loss_ref) <= 1e-5
+    assert _grad_err(g_cp, g_ref) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Benchmark-harness selector (ride-along satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_bench_run_only_rejects_unknown_selectors():
+    import pathlib
+    import sys
+
+    root = str(pathlib.Path(__file__).resolve().parent.parent)
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.run import MODULES, select_modules
+
+    assert select_modules(None) == MODULES
+    assert [n for n, _ in select_modules("serving")] == ["serving"]
+    assert [n for n, _ in select_modules("kernels,serving")] == [
+        "kernels", "serving"]
+    with pytest.raises(SystemExit, match="unknown module"):
+        select_modules("servnig")
+    with pytest.raises(SystemExit, match="unknown module"):
+        select_modules("serving,typo")
+    with pytest.raises(SystemExit, match="unknown module"):
+        select_modules(" , ")

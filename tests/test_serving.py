@@ -86,6 +86,48 @@ def test_engine_rejects_kv_models(rng):
         StreamingEngine(api, api.init(rng))
 
 
+@pytest.mark.parametrize("attn_mode", ["aaren", "softmax"])
+def test_generate_ragged_prefill_matches_unpadded(attn_mode):
+    """Ragged wave prefill (right-pad + true lengths) == per-prompt runs.
+
+    The legacy path left-pads prompts to one length and attends the pad
+    tokens as real context — approximate by construction.  With
+    ``prompt_lengths=`` the padding is masked in-kernel (``flash_mha``
+    q_lens/kv_lens for softmax archs, ⊕-identity leaves for Aaren), the
+    first sample reads each row's true last-token logits, and decode
+    continues from exact per-row states (KV caches mask the padded gap and
+    use true absolute positions).  Greedy tokens must match running each
+    prompt alone, exactly — for the O(1)-state arch AND the KV-cache
+    baseline (the ROADMAP PR-4 follow-up this closes).
+    """
+    cfg = smoke_config("phi3-mini-3.8b", attn_mode=attn_mode, n_layers=2,
+                       d_model=64, d_ff=128, vocab=64)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng_np = np.random.default_rng(0)
+    lens = [3, 7, 5, 1]
+    max_p = max(lens)
+    raw = [rng_np.integers(1, 64, size=L).astype(np.int32) for L in lens]
+    prompts = np.zeros((len(lens), max_p), np.int32)
+    for i, r in enumerate(raw):
+        prompts[i, :len(r)] = r
+    cache_len = max_p + 6
+    toks, _ = generate(api, params, jnp.asarray(prompts), 6,
+                       prompt_lengths=jnp.asarray(lens),
+                       cache_len=cache_len)
+    for i, r in enumerate(raw):
+        solo, _ = generate(api, params, jnp.asarray(r)[None], 6,
+                           cache_len=cache_len)
+        np.testing.assert_array_equal(
+            np.asarray(toks[i]), np.asarray(solo[0]),
+            err_msg=f"row {i} (len {lens[i]}) diverged from its solo run")
+    # A wrapping KV ring would overwrite prompt slots the ragged decode
+    # mask still reads as prompt — must be rejected, not silently wrong.
+    with pytest.raises(ValueError, match="non-wrapping"):
+        generate(api, params, jnp.asarray(prompts), 6,
+                 prompt_lengths=jnp.asarray(lens), cache_len=max_p + 3)
+
+
 def test_constant_memory_claim(aaren_model):
     """Paper Fig. 5-left: Aaren decode state does not grow with tokens;
     KV-cache state grows linearly."""
