@@ -17,11 +17,17 @@ kernels replace, plus HLO FLOP counts:
   rows record the tiles the kernel wrapper would launch — before in-kernel
   true-length masking, N = 1000 collapsed ``bq`` to 8 (125 sequential
   q-steps); now every N keeps the dense default tiles.
+* **guard overhead** (``kern_guard_*`` rows + ``BENCH_guard.json``): a full
+  guarded train step (train/guard.py — finiteness check on loss+grads,
+  lax.cond skip, LR-backoff state update) vs the identical unguarded step.
+  The guard is always-on insurance, so its cost must be noise
+  (DESIGN.md §Fault-tolerance budgets ≤ 2%; CI asserts it).
 
 Derived column: seconds per call (median of 5) at each N."""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -133,6 +139,62 @@ def run():
         emit(f"kern_flash_fwdbwd_N{n}", t * 1e6, f"{t:.5f}")
 
     _run_packed_vs_padded(key)
+    _run_guard_overhead()
+
+
+def _run_guard_overhead():
+    """Guarded vs unguarded train step on the smoke LM (BENCH_guard.json).
+
+    Medians of repeated timed runs on identical jitted functions; the delta
+    is the finiteness check + cond + GuardState update.  The JSON's
+    ``overhead_frac`` is what the CI chaos job gates at 2%.
+    """
+    from repro.configs import smoke_config
+    from repro.data.synthetic import SyntheticLMIterator
+    from repro.models.factory import build
+    from repro.train.guard import GuardConfig
+    from repro.train.optim import make_optimizer, warmup_cosine
+    from repro.train.state import init_train_state, make_train_step
+
+    cfg = smoke_config("phi3-mini-3.8b", n_layers=2, d_model=64, d_ff=128,
+                       vocab=64)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("adamw", warmup_cosine(1e-3, 10, 1000))
+    guard = GuardConfig()
+    batch = next(SyntheticLMIterator(vocab=64, seq_len=128, batch=8))
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    key = jax.random.PRNGKey(1)
+
+    def _median_step_time(step, state, reps=15):
+        state, _ = step(state, batch, key)          # compile
+        jax.block_until_ready(state.params)
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            state, _ = step(state, batch, key)
+            jax.block_until_ready(state.params)
+            times.append(time.perf_counter() - t0)
+        return sorted(times)[len(times) // 2]
+
+    plain = jax.jit(make_train_step(api.loss, opt))
+    guarded = jax.jit(make_train_step(api.loss, opt, guard=guard))
+    t_plain = _median_step_time(plain, init_train_state(params, opt))
+    t_guard = _median_step_time(
+        guarded, init_train_state(params, opt, guard=guard))
+    overhead = (t_guard - t_plain) / t_plain
+
+    emit("kern_guard_unguarded_step", t_plain * 1e6, f"{t_plain:.5f}")
+    emit("kern_guard_guarded_step", t_guard * 1e6, f"{t_guard:.5f}")
+    emit("kern_guard_overhead_frac", 0.0, f"{overhead:.4f}")
+    with open("BENCH_guard.json", "w") as f:
+        json.dump({
+            "config": {"model": cfg.name, "batch": 8, "seq_len": 128,
+                       "optimizer": "adamw"},
+            "unguarded_step_s": t_plain,
+            "guarded_step_s": t_guard,
+            "overhead_frac": overhead,
+        }, f, indent=2)
 
 
 def _run_packed_vs_padded(key):

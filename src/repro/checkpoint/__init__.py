@@ -2,7 +2,11 @@
 
 from repro.checkpoint.io import (  # noqa: F401
     Checkpointer,
+    CheckpointCorruptionError,
+    CheckpointStructureError,
+    available_steps,
     latest_step,
     restore_checkpoint,
     save_checkpoint,
+    verify_checkpoint,
 )

@@ -1,27 +1,38 @@
-"""Sharded, atomic, async checkpointing with elastic restore.
+"""Sharded, atomic, async checkpointing with elastic + resilient restore.
 
 Layout (one directory per step)::
 
     <dir>/step_000001230/
-        manifest.json            # treedef, leaf shapes/dtypes, chunking
+        manifest.json            # treedef, leaf shapes/dtypes, chunking, crcs
         leaf_00000.npz ...       # chunked leaf data
     <dir>/LATEST                 # atomic pointer file (write tmp + rename)
 
-Design points for the 1000-node posture:
+Design points for the 1000-node posture (DESIGN.md §Fault-tolerance):
 
 * **Atomicity** — a step directory is staged as ``.tmp-step_*`` and renamed
   only after every chunk + manifest is fsync'd; ``LATEST`` is updated last.
-  A crash mid-save can never corrupt the previous checkpoint.
+  A crash mid-save can never corrupt the previous checkpoint, and a save
+  that dies mid-write cleans (or strands) only its tmp directory — never a
+  ``step_*`` one.
+* **Self-validation, manifest last** — every chunk carries a crc32 and the
+  manifest (which alone makes a step directory *valid*) is written after
+  all of them; restore verifies crc, chunk presence, and row coverage.
+* **Resilient restore** — :func:`restore_checkpoint` with ``step=None``
+  walks checkpoints newest-first and falls back past any corrupt/truncated
+  step to the newest intact one (:class:`CheckpointCorruptionError` only
+  when *no* step survives).  An explicitly requested step never falls back.
 * **Elastic restore** — leaves are stored *logically unsharded* in bounded
   chunks (split along axis 0 at ``chunk_mb``); restore rebuilds full arrays
   then applies whatever sharding the (possibly different-shape) new mesh
   wants.  Checkpoints therefore survive pod-count changes (DESIGN.md §6).
-  On a real fleet each host writes only the chunks it owns; the chunk
-  index in the manifest is exactly what makes that partitioning trivial.
+* **Structure errors name paths** — a tree mismatch raises
+  :class:`CheckpointStructureError` listing the missing/extra leaf paths;
+  ``strict=False`` turns it into a partial restore (warm start: leaves
+  present in the checkpoint load, the rest keep ``tree_like``'s values).
 * **Async** — ``Checkpointer.save_async`` snapshots to host RAM
   (device_get) synchronously — the step barrier — then writes in a
-  background thread so the train loop resumes while bytes land on disk.
-* **Self-validation** — every chunk carries a crc32; restore verifies.
+  background thread; a failed write surfaces on the next ``wait()`` /
+  ``save_async()`` instead of dying silently in the thread.
 """
 
 from __future__ import annotations
@@ -36,6 +47,15 @@ from typing import Any
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptionError(IOError):
+    """A checkpoint step directory failed validation (crc, truncation,
+    missing chunk/manifest)."""
+
+
+class CheckpointStructureError(ValueError):
+    """The checkpoint's leaf set does not match the restore template."""
 
 
 def _flatten_with_paths(tree):
@@ -57,9 +77,35 @@ def save_checkpoint(directory: str, step: int, tree: Any, *,
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
+    try:
+        _write_step(tmp, step, tree, extra=extra, chunk_mb=chunk_mb)
+    except BaseException:
+        # Never leave a half-written tmp dir to be mistaken for progress;
+        # the previous step_* directories are untouched either way.
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
 
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(directory, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(ptr_tmp, os.path.join(directory, "LATEST"))
+
+    _gc_old(directory, keep)
+    return final
+
+
+def _write_step(tmp: str, step: int, tree: Any, *, extra: dict | None,
+                chunk_mb: int):
+    """Write chunks then manifest (last — it is what makes the dir valid)."""
     paths, leaves, treedef = _flatten_with_paths(tree)
     manifest: dict[str, Any] = {
+        "format": 1,
         "step": step,
         "extra": extra or {},
         "leaves": [],
@@ -95,20 +141,6 @@ def save_checkpoint(directory: str, step: int, tree: Any, *,
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
-
-    # atomic LATEST pointer
-    ptr_tmp = os.path.join(directory, ".LATEST.tmp")
-    with open(ptr_tmp, "w") as f:
-        f.write(name)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(ptr_tmp, os.path.join(directory, "LATEST"))
-
-    _gc_old(directory, keep)
-    return final
 
 
 def _gc_old(directory: str, keep: int):
@@ -117,68 +149,179 @@ def _gc_old(directory: str, keep: int):
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
+def available_steps(directory: str) -> list[int]:
+    """All step numbers with a (renamed, i.e. fully written) directory,
+    ascending.  ``.tmp-*`` staging dirs from a killed save are ignored."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and os.path.isdir(
+                os.path.join(directory, d)):
+            try:
+                out.append(int(d.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+    return sorted(out)
+
+
 def latest_step(directory: str) -> int | None:
+    """Newest step per the LATEST pointer, falling back to a directory scan
+    when the pointer is missing or dangling (e.g. killed between the step
+    rename and the pointer update)."""
     ptr = os.path.join(directory, "LATEST")
-    if not os.path.exists(ptr):
-        return None
-    with open(ptr) as f:
-        name = f.read().strip()
-    if not os.path.isdir(os.path.join(directory, name)):
-        return None
-    return int(name.split("_")[1])
+    if os.path.exists(ptr):
+        with open(ptr) as f:
+            name = f.read().strip()
+        if os.path.isdir(os.path.join(directory, name)):
+            return int(name.split("_")[1])
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
+
+
+def _read_manifest(src: str) -> dict:
+    mpath = os.path.join(src, "manifest.json")
+    if not os.path.exists(mpath):
+        raise CheckpointCorruptionError(
+            f"{src}: no manifest.json (save killed before the manifest "
+            "write — the directory is invalid)")
+    try:
+        with open(mpath) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointCorruptionError(
+            f"{src}: unreadable manifest.json ({e})") from e
+
+
+def _load_leaf(src: str, rec: dict, shard):
+    import jax.numpy as jnp
+
+    shape = tuple(rec["shape"])
+    rows = shape[0] if shape else 1
+    is_bf16 = rec["dtype"] == "bfloat16"
+    flat = None
+    covered = 0
+    for chunk in rec["chunks"]:
+        fpath = os.path.join(src, chunk["file"])
+        try:
+            piece = np.load(fpath)
+        except FileNotFoundError as e:
+            raise CheckpointCorruptionError(
+                f"{src}: missing chunk {chunk['file']} "
+                f"for leaf {rec['path']!r}") from e
+        except (ValueError, EOFError, OSError) as e:
+            raise CheckpointCorruptionError(
+                f"{src}: truncated/corrupt chunk {chunk['file']} "
+                f"for leaf {rec['path']!r} ({e})") from e
+        lo, hi = chunk["rows"]
+        if piece.ndim != 2 or piece.shape[0] != hi - lo:
+            raise CheckpointCorruptionError(
+                f"{src}: chunk {chunk['file']} has shape {piece.shape}, "
+                f"manifest says rows [{lo}, {hi})")
+        if zlib.crc32(piece.tobytes()) != chunk["crc32"]:
+            raise CheckpointCorruptionError(
+                f"{src}: crc mismatch in {chunk['file']} "
+                f"for leaf {rec['path']!r}")
+        if flat is None:
+            flat = np.empty((rows, piece.shape[1]), piece.dtype)
+        flat[lo:hi] = piece
+        covered += hi - lo
+    if flat is None or covered != rows:
+        raise CheckpointCorruptionError(
+            f"{src}: leaf {rec['path']!r} chunks cover {covered}/{rows} rows")
+    if is_bf16:
+        arr = jnp.asarray(flat).view(jnp.bfloat16).reshape(shape)
+    else:
+        arr = flat.reshape(shape) if shape else flat.reshape(())
+        arr = jnp.asarray(arr)
+    if shard is not None:
+        arr = jax.device_put(arr, shard)
+    return arr
+
+
+def verify_checkpoint(directory: str, step: int) -> dict:
+    """Validate one step end to end (manifest, chunk files, crcs).  Returns
+    the manifest; raises :class:`CheckpointCorruptionError` on any defect."""
+    src = os.path.join(directory, f"step_{step:012d}")
+    if not os.path.isdir(src):
+        raise CheckpointCorruptionError(f"{src}: no such checkpoint")
+    manifest = _read_manifest(src)
+    for rec in manifest["leaves"]:
+        _load_leaf(src, rec, None)
+    return manifest
+
+
+def _restore_step(src: str, tree_like: Any, *, shardings, strict: bool):
+    manifest = _read_manifest(src)
+    paths, like_leaves, treedef = _flatten_with_paths(tree_like)
+    by_path = {rec["path"]: rec for rec in manifest["leaves"]}
+    missing = [p for p in paths if p not in by_path]
+    extra_leaves = [p for p in by_path if p not in set(paths)]
+    if strict and (missing or extra_leaves):
+        raise CheckpointStructureError(
+            f"{src}: checkpoint tree does not match the restore template.\n"
+            f"  missing from checkpoint: {missing or '—'}\n"
+            f"  only in checkpoint:      {extra_leaves or '—'}\n"
+            "Pass strict=False for a partial (warm-start) restore.")
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(paths))
+    leaves = []
+    for path, like, shard in zip(paths, like_leaves, shard_leaves):
+        rec = by_path.get(path)
+        if rec is None:  # strict=False: keep the template's value
+            if isinstance(like, jax.ShapeDtypeStruct):
+                raise CheckpointStructureError(
+                    f"{src}: leaf {path!r} is absent from the checkpoint and "
+                    "the template holds only a ShapeDtypeStruct — partial "
+                    "restore needs a concrete value to keep")
+            leaves.append(like)
+            continue
+        leaves.append(_load_leaf(src, rec, shard))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest["step"], manifest.get("extra", {})
 
 
 def restore_checkpoint(directory: str, tree_like: Any, step: int | None = None,
-                       *, shardings: Any = None):
+                       *, shardings: Any = None, strict: bool = True):
     """Restore into the structure of ``tree_like``.
 
     ``tree_like`` may hold concrete arrays or ShapeDtypeStructs; only its
-    *structure* is used.  ``shardings`` (optional, same structure) places each
-    restored leaf — mesh-shape-agnostic because leaves are stored unsharded.
-    Returns (tree, step, extra).
+    *structure* is used (with ``strict=False`` the concrete values of leaves
+    absent from the checkpoint are kept — warm-start partial restore).
+    ``shardings`` (optional, same structure) places each restored leaf —
+    mesh-shape-agnostic because leaves are stored unsharded.
+
+    ``step=None`` restores the newest *intact* step: corrupt or truncated
+    candidates (killed mid-save, bit rot, missing chunks) are skipped
+    newest-first and reported only if nothing survives.  An explicit
+    ``step`` is restored exactly or raises.  Returns (tree, step, extra).
     """
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {directory}")
-    src = os.path.join(directory, f"step_{step:012d}")
-    with open(os.path.join(src, "manifest.json")) as f:
-        manifest = json.load(f)
+    if step is not None:
+        return _restore_step(
+            os.path.join(directory, f"step_{step:012d}"), tree_like,
+            shardings=shardings, strict=strict)
 
-    paths, _, treedef = _flatten_with_paths(tree_like)
-    by_path = {rec["path"]: rec for rec in manifest["leaves"]}
-    leaves = []
-    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
-                    else [None] * len(paths))
-    import jax.numpy as jnp
-
-    for path, shard in zip(paths, shard_leaves):
-        rec = by_path[path]
-        shape = tuple(rec["shape"])
-        rows = shape[0] if shape else 1
-        cols = int(np.prod(shape[1:])) if len(shape) > 1 else (
-            1 if shape else 1)
-        is_bf16 = rec["dtype"] == "bfloat16"
-        np_dtype = np.uint8 if is_bf16 else np.dtype(rec["dtype"])
-        flat = None
-        for chunk in rec["chunks"]:
-            piece = np.load(os.path.join(src, chunk["file"]))
-            lo, hi = chunk["rows"]
-            if flat is None:
-                flat = np.empty((rows, piece.shape[1]), piece.dtype)
-            flat[lo:hi] = piece
-            if zlib.crc32(piece.tobytes()) != chunk["crc32"]:
-                raise IOError(f"crc mismatch in {chunk['file']}")
-        if is_bf16:
-            arr = jax.numpy.asarray(flat).view(jnp.bfloat16).reshape(shape)
-        else:
-            arr = flat.reshape(shape) if shape else flat.reshape(())
-            arr = jnp.asarray(arr)
-        if shard is not None:
-            arr = jax.device_put(arr, shard)
-        leaves.append(arr)
-    tree = jax.tree_util.tree_unflatten(treedef, leaves)
-    return tree, manifest["step"], manifest.get("extra", {})
+    steps = available_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    # LATEST-pointed step first (it is the newest *committed* one), then the
+    # directory scan newest-first for the fallback walk.
+    ptr = latest_step(directory)
+    candidates = sorted(set(steps), reverse=True)
+    if ptr in candidates:
+        candidates.remove(ptr)
+        candidates.insert(0, ptr)
+    failures: list[str] = []
+    for s in candidates:
+        src = os.path.join(directory, f"step_{s:012d}")
+        try:
+            return _restore_step(src, tree_like, shardings=shardings,
+                                 strict=strict)
+        except CheckpointCorruptionError as e:
+            failures.append(str(e))
+    raise CheckpointCorruptionError(
+        "no intact checkpoint under {}; every candidate failed:\n  {}".format(
+            directory, "\n  ".join(failures)))
 
 
 class Checkpointer:
@@ -200,7 +343,7 @@ class Checkpointer:
             raise err
 
     def save_async(self, step: int, tree: Any, *, extra: dict | None = None):
-        self.wait()  # one in-flight save at a time
+        self.wait()  # one in-flight save at a time; surfaces a prior failure
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():

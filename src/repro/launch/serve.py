@@ -19,7 +19,12 @@ import jax
 
 from repro.configs import get_config, smoke_config
 from repro.models.factory import build
-from repro.serving import StreamingEngine, decode_state_bytes, generate
+from repro.serving import (
+    EngineOverloaded,
+    StreamingEngine,
+    decode_state_bytes,
+    generate,
+)
 from repro.serving.sampler import greedy_sampler, temperature_sampler
 
 
@@ -39,6 +44,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission queue bound; overflow submits are shed "
+                         "(0 = unbounded)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request wall-clock deadline; expired requests "
+                         "error out (0 = none)")
     args = ap.parse_args()
 
     cfg = (smoke_config(args.arch) if args.smoke else get_config(args.arch))
@@ -72,10 +83,15 @@ def main():
               f"{decode_state_bytes(states) / 2**20:.3f} MiB")
     else:
         eng = StreamingEngine(api, params, n_slots=args.slots,
-                              chunk=args.chunk or None, sampler=sampler)
+                              chunk=args.chunk or None, sampler=sampler,
+                              max_queue=args.max_queue or None)
         compile_s = eng.warmup()
+        deadline = args.deadline_s or None
         for i in range(args.requests):
-            eng.submit(prompts[i], args.max_new)
+            try:
+                eng.submit(prompts[i], args.max_new, deadline_s=deadline)
+            except EngineOverloaded:
+                pass   # shed at the door; counted in eng.n_shed
         t0 = time.perf_counter()
         out = eng.run()
         steady_s = time.perf_counter() - t0
@@ -86,6 +102,10 @@ def main():
               f"chunk {eng.chunk}; per-slot state "
               f"{decode_state_bytes(eng.states) / args.slots / 2**10:.1f} KiB"
               f" (constant in sequence length)")
+        if eng.n_shed or eng.errors or eng.n_quarantined:
+            print(f"[streaming] degraded: shed {eng.n_shed}, errored "
+                  f"{len(eng.errors)} (deadline/poison), quarantined "
+                  f"{eng.n_quarantined} slots")
 
 
 if __name__ == "__main__":

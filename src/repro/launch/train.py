@@ -21,6 +21,7 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.data.synthetic import SyntheticLMIterator
 from repro.models.factory import build
+from repro.train.guard import GuardConfig
 from repro.train.loop import LoopConfig, run_train_loop
 from repro.train.optim import make_optimizer, warmup_cosine
 from repro.train.state import init_train_state, make_train_step
@@ -43,6 +44,15 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--guard", action="store_true",
+                    help="guarded numerics: skip non-finite steps, back off "
+                         "LR, flag grad-norm spikes (train/guard.py)")
+    ap.add_argument("--guard-backoff", type=float, default=0.5,
+                    help="LR multiplier applied per non-finite step")
+    ap.add_argument("--guard-recover-every", type=int, default=50,
+                    help="finite steps before one backoff level is restored")
+    ap.add_argument("--guard-spike-window", type=int, default=32,
+                    help="rolling grad-norm window for spike detection")
     args = ap.parse_args()
 
     cfg = (smoke_config(args.arch) if args.smoke
@@ -56,13 +66,19 @@ def main():
     n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     print(f"params: {n/1e6:.2f}M")
 
+    guard = None
+    if args.guard:
+        guard = GuardConfig(backoff=args.guard_backoff,
+                            recover_every=args.guard_recover_every,
+                            spike_window=args.guard_spike_window)
     opt = make_optimizer(cfg.optimizer,
                          warmup_cosine(args.lr, args.steps // 10, args.steps))
-    state = init_train_state(params, opt)
+    state = init_train_state(params, opt, guard=guard)
     # donate the state: in-place param/opt updates (no double-buffering)
     step_fn = jax.jit(make_train_step(
         api.loss, opt, n_microbatches=args.microbatches,
-        grad_compression=args.grad_compression), donate_argnums=(0,))
+        grad_compression=args.grad_compression, guard=guard),
+        donate_argnums=(0,))
 
     data = SyntheticLMIterator(
         vocab=cfg.vocab, seq_len=args.seq_len, batch=args.batch,
@@ -70,15 +86,22 @@ def main():
     loop_cfg = LoopConfig(
         total_steps=args.steps, ckpt_dir=args.ckpt_dir,
         save_every=args.save_every, log_every=max(args.steps // 20, 1),
-        seed=args.seed)
+        seed=args.seed, guard=args.guard)
 
     def on_log(step, m):
+        guard_s = (f" lr_scale={m['guard_lr_scale']:.3f}"
+                   if "guard_lr_scale" in m else "")
         print(f"step {step:6d} loss={m['loss']:.4f} "
-              f"gnorm={m.get('grad_norm', 0):.3f} {m['step_time_s']*1e3:.0f}ms")
+              f"gnorm={m.get('grad_norm', 0):.3f}"
+              f"{guard_s} {m['step_time_s']*1e3:.0f}ms")
 
     result = run_train_loop(step_fn, state, data, loop_cfg, on_log=on_log)
     print(f"done at step {int(result.state.step)}; "
           f"stragglers observed: {len(result.stragglers)}")
+    if args.guard:
+        print(f"guard: skipped {result.skipped_steps} non-finite steps, "
+              f"{result.spike_steps} grad-norm spikes, final lr_scale "
+              f"{result.final_lr_scale:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,9 @@
 """Serving: constant-memory streaming engine + batched generation."""
 
 from repro.serving.engine import (  # noqa: F401
+    ERR_DEADLINE,
+    ERR_POISONED,
+    EngineOverloaded,
     StreamingEngine,
     decode_state_bytes,
     generate,

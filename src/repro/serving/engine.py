@@ -56,6 +56,15 @@ def _jit(fn):
     return jax.jit(fn)
 
 
+class EngineOverloaded(RuntimeError):
+    """Admission queue full — the request was shed, not queued."""
+
+
+#: error strings recorded in ``StreamingEngine.errors``
+ERR_DEADLINE = "deadline exceeded"
+ERR_POISONED = "non-finite logits (slot quarantined)"
+
+
 def decode_state_bytes(states: Any) -> int:
     """Total bytes of a decode-state pytree (Fig. 5-left measurement)."""
     return int(sum(
@@ -142,17 +151,52 @@ def generate(
     context (tests/test_serving.py pins this parity).
     """
     b, p = prompts.shape
+    if b == 0 or p == 0:
+        raise ValueError(f"empty prompts: shape {(b, p)} needs B >= 1 "
+                         "and P >= 1")
+    if max_new_tokens <= 0:
+        raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
     if cache_len is None:
         cache_len = p + max_new_tokens
     key = key if key is not None else jax.random.PRNGKey(0)
     ragged = prompt_lengths is not None
-    if ragged and cache_len < p + max_new_tokens:
-        # The ragged decode mask maps slots [0, prompt_lens) to the true
-        # prompt prefix; a wrapping ring would overwrite those slots with
-        # decode-era keys while the mask still reads them as prompt.
+    pattern = api.cfg.effective_pattern()
+    if "attn" in pattern and cache_len < p + max_new_tokens:
+        # Global-attention KV rings silently overwrite the earliest context
+        # once they wrap — a wrong answer, not a feature (sliding-window
+        # layers cap their own cache at `window` by design).
         raise ValueError(
-            f"ragged prefill needs a non-wrapping cache: cache_len="
-            f"{cache_len} < padded prompt {p} + max_new {max_new_tokens}")
+            f"cache_len={cache_len} < prompt {p} + max_new "
+            f"{max_new_tokens}: the global-attention ('attn') KV cache "
+            "must be non-wrapping — a wrapped ring silently drops context")
+    if ragged:
+        lens_np = np.asarray(prompt_lengths)
+        if lens_np.shape != (b,):
+            raise ValueError(f"prompt_lengths shape {lens_np.shape} != "
+                             f"({b},)")
+        if (lens_np < 1).any() or (lens_np > p).any():
+            raise ValueError(
+                f"prompt_lengths must lie in [1, {p}] (padded width); got "
+                f"{lens_np.tolist()}")
+        if cache_len < p + max_new_tokens:
+            # The ragged decode mask maps slots [0, prompt_lens) to the true
+            # prompt prefix; a wrapping ring would overwrite those slots with
+            # decode-era keys while the mask still reads them as prompt.
+            raise ValueError(
+                f"ragged prefill needs a non-wrapping cache: cache_len="
+                f"{cache_len} < padded prompt {p} + max_new "
+                f"{max_new_tokens}")
+        if "attn_local" in pattern and api.cfg.window < p:
+            # The per-layer cache is min(window, cache_len): window < P means
+            # a trailing-window ring, and ragged rows would need per-row ring
+            # indices (ROADMAP carried-over item).  Fail at the API boundary
+            # with the config named, not mid-trace inside the layer.
+            raise NotImplementedError(
+                f"ragged prefill (prompt_lengths=) is not supported for "
+                f"'attn_local' layers with window ({api.cfg.window}) < "
+                f"padded prompt length ({p}): the trailing-window ring "
+                "cache needs per-row ring indices. Use window >= padded "
+                "prompt length, or pad each prompt separately.")
     prefill, decode = _generate_fns(api, cache_len, ragged=ragged)
 
     if ragged:
@@ -189,6 +233,7 @@ class _Slot:
     remaining: int               # generated tokens still owed
     n_sampled: int = 0           # per-request step counter (key schedule)
     last_token: int = 0          # input token while decoding
+    deadline: float | None = None  # absolute perf_counter() cutoff
 
 
 class StreamingEngine:
@@ -205,12 +250,31 @@ class StreamingEngine:
     tick).  All-Aaren patterns accept any chunk (masked positions are
     ⊕-identity in the prefix scan); RG-LRU/SSD carries advance strictly
     token-by-token, so mixed patterns require ``chunk == 1``.
+
+    Degradation under faults (DESIGN.md §Fault-tolerance):
+
+    * ``max_queue`` bounds the admission queue — :meth:`submit` sheds load
+      with :class:`EngineOverloaded` instead of letting latency grow without
+      bound (``None`` = unbounded, the pre-fault-tolerance behaviour).
+    * ``submit(..., deadline_s=)`` attaches a per-request deadline; expired
+      requests error out (``self.errors``) whether still queued or mid-slot,
+      freeing capacity for live traffic.
+    * ``guard_logits`` (default on) checks each tick's last-valid logits for
+      NaN/±inf per slot.  A poisoned slot is **quarantined**: its request
+      errors, its carry is reset through the same masked-``where`` path that
+      admits new requests, and — because slots are independent batch rows —
+      its batch-mates' outputs are byte-identical to an uninjected run.
+    * :meth:`snapshot` / :meth:`restore` serialise the whole engine (device
+      carries + scheduler bookkeeping) for crash recovery; ``save`` /
+      ``load`` route them through the checkpoint layer's atomic writes.
     """
 
     def __init__(self, api: ModelAPI, params: Any, *, n_slots: int = 4,
                  chunk: int | None = None,
                  sampler: Callable = greedy_sampler,
-                 key: jax.Array | None = None):
+                 key: jax.Array | None = None,
+                 max_queue: int | None = None,
+                 guard_logits: bool = True):
         pattern = api.cfg.effective_pattern()
         if any(m in ("attn", "attn_local") for m in pattern):
             raise ValueError(
@@ -230,6 +294,8 @@ class StreamingEngine:
         self.chunk = chunk
         self.sampler = sampler
         self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.max_queue = max_queue
+        self.guard_logits = guard_logits
 
         from repro.models.lm import (
             lm_prefill_chunk,
@@ -242,6 +308,7 @@ class StreamingEngine:
         self._init_states = lm_state_init(cfg, n_slots, 1)
         self.states = self._init_states
         batch_axes = lm_state_batch_axes(cfg)
+        self._batch_axes = batch_axes
 
         def step(pr, tokens, lengths, states):
             """(S, C) tokens + per-slot valid lengths -> last-valid logits."""
@@ -275,22 +342,53 @@ class StreamingEngine:
         self._reset_fn = _jit(reset)
 
         self.active: list[_Slot | None] = [None] * n_slots
-        self.queue: list[tuple[int, np.ndarray, int]] = []
+        # queue entries: (rid, prompt, max_new, deadline | None)
+        self.queue: list[tuple[int, np.ndarray, int, float | None]] = []
         self.finished: dict[int, list[int]] = {}
+        self.errors: dict[int, str] = {}       # rid -> error string
+        self.n_shed = 0                        # submits rejected (queue full)
+        self.n_quarantined = 0                 # slots reset on poisoned logits
         self.submitted_at: dict[int, float] = {}
         self.first_token_at: dict[int, float] = {}
         self._next_id = 0
 
     # ------------------------------------------------------------------ API
-    def submit(self, prompt, max_new_tokens: int) -> int:
-        """Queue a request.  prompt: (P,) int32, P >= 1.  Returns its id."""
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
+    def submit(self, prompt, max_new_tokens: int, *,
+               deadline_s: float | None = None) -> int:
+        """Queue a request.  prompt: (P,) int32, P >= 1.  Returns its id.
+
+        ``deadline_s``: optional wall-clock budget from submission; a
+        request that hasn't *finished* within it errors out (recorded in
+        ``self.errors``, slot/queue capacity reclaimed).  Raises
+        :class:`EngineOverloaded` when the admission queue is at
+        ``max_queue`` — shed at the door, not queued into unbounded latency.
+        """
+        prompt = np.asarray(prompt)
+        if prompt.ndim > 1:
+            raise ValueError(f"prompt must be 1-D, got shape {prompt.shape}")
+        if not np.issubdtype(prompt.dtype, np.integer):
+            raise ValueError(f"prompt must hold token ids (integers), got "
+                             f"dtype {prompt.dtype}")
+        prompt = prompt.astype(np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
+        if max_new_tokens <= 0:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if deadline_s is not None and deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0, got {deadline_s}")
+        if (self.max_queue is not None
+                and len(self.queue) >= self.max_queue):
+            self.n_shed += 1
+            raise EngineOverloaded(
+                f"admission queue full ({len(self.queue)}/{self.max_queue} "
+                "queued); retry later or raise max_queue")
         rid = self._next_id
         self._next_id += 1
-        self.queue.append((rid, prompt, int(max_new_tokens)))
-        self.submitted_at[rid] = time.perf_counter()
+        now = time.perf_counter()
+        deadline = now + deadline_s if deadline_s is not None else None
+        self.queue.append((rid, prompt, int(max_new_tokens), deadline))
+        self.submitted_at[rid] = now
         return rid
 
     def warmup(self) -> float:
@@ -312,6 +410,7 @@ class StreamingEngine:
 
         Returns the number of tokens emitted this tick (0 when idle).
         """
+        self._expire_deadlines()
         self._admit()
         if not any(s is not None for s in self.active):
             return 0
@@ -331,6 +430,24 @@ class StreamingEngine:
         last, self.states = self._step_fn(
             self.params, jnp.asarray(tokens), jnp.asarray(lengths),
             self.states)
+
+        # Slot quarantine: a poisoned carry (hardware fault, numerics bug)
+        # shows up as NaN/±inf in that slot's logits.  Detect per row on the
+        # (S, 1, V) last-valid logits — already host-bound for sampling —
+        # and reset ONLY the poisoned rows.  Healthy batch-mates never see a
+        # different code path, so their outputs stay byte-identical.
+        poisoned = np.zeros((self.n_slots,), bool)
+        if self.guard_logits:
+            finite_rows = np.isfinite(
+                np.asarray(last)).reshape(self.n_slots, -1).all(axis=1)
+            for i, slot in enumerate(self.active):
+                if slot is not None and not finite_rows[i]:
+                    poisoned[i] = True
+                    self.errors[slot.request_id] = ERR_POISONED
+                    self.n_quarantined += 1
+                    self.active[i] = None
+        if poisoned.any():
+            self.states = self._reset_fn(self.states, jnp.asarray(poisoned))
 
         emitted = 0
         for i, slot in enumerate(self.active):
@@ -363,16 +480,152 @@ class StreamingEngine:
             self.step()
         return self.finished
 
+    # -------------------------------------------------- snapshot / restore
+    def snapshot(self) -> dict:
+        """Serialise the whole engine: device carries + scheduler bookkeeping.
+
+        Returns ``{"tree": <pytree of host arrays>, "meta": <JSON-able>}``.
+        Deadlines are stored as *remaining* seconds (wall-clock budgets
+        survive a restart; absolute ``perf_counter`` values do not).
+        """
+        now = time.perf_counter()
+
+        def _remaining(deadline):
+            return None if deadline is None else deadline - now
+
+        def _slot_meta(slot: _Slot | None):
+            if slot is None:
+                return None
+            return {
+                "request_id": slot.request_id,
+                "pending": (None if slot.pending is None
+                            else slot.pending.tolist()),
+                "tokens": list(slot.tokens),
+                "remaining": slot.remaining,
+                "n_sampled": slot.n_sampled,
+                "last_token": slot.last_token,
+                "deadline_remaining_s": _remaining(slot.deadline),
+            }
+
+        tree = {
+            "states": jax.tree.map(np.asarray, self.states),
+            "key": np.asarray(self.key),
+        }
+        meta = {
+            "active": [_slot_meta(s) for s in self.active],
+            "queue": [
+                {"request_id": rid, "prompt": prompt.tolist(),
+                 "max_new": max_new,
+                 "deadline_remaining_s": _remaining(deadline)}
+                for rid, prompt, max_new, deadline in self.queue
+            ],
+            "finished": {str(k): v for k, v in self.finished.items()},
+            "errors": {str(k): v for k, v in self.errors.items()},
+            "n_shed": self.n_shed,
+            "n_quarantined": self.n_quarantined,
+            "next_id": self._next_id,
+            "n_slots": self.n_slots,
+            "chunk": self.chunk,
+        }
+        return {"tree": tree, "meta": meta}
+
+    def restore(self, snap: dict) -> None:
+        """Restore engine state from a :meth:`snapshot` dict.
+
+        The engine must be constructed with the same model config and
+        ``n_slots``/``chunk`` as the snapshotting engine.
+        """
+        meta = snap["meta"]
+        if meta["n_slots"] != self.n_slots or meta["chunk"] != self.chunk:
+            raise ValueError(
+                f"snapshot taken with n_slots={meta['n_slots']}, "
+                f"chunk={meta['chunk']}; this engine has "
+                f"n_slots={self.n_slots}, chunk={self.chunk}")
+        now = time.perf_counter()
+
+        def _absolute(remaining):
+            return None if remaining is None else now + remaining
+
+        def _slot(m):
+            if m is None:
+                return None
+            return _Slot(
+                request_id=m["request_id"],
+                pending=(None if m["pending"] is None
+                         else np.asarray(m["pending"], np.int32)),
+                tokens=list(m["tokens"]),
+                remaining=m["remaining"],
+                n_sampled=m["n_sampled"],
+                last_token=m["last_token"],
+                deadline=_absolute(m["deadline_remaining_s"]),
+            )
+
+        self.states = jax.tree.map(jnp.asarray, snap["tree"]["states"])
+        self.key = jnp.asarray(snap["tree"]["key"])
+        self.active = [_slot(m) for m in meta["active"]]
+        self.queue = [
+            (q["request_id"], np.asarray(q["prompt"], np.int32),
+             int(q["max_new"]), _absolute(q["deadline_remaining_s"]))
+            for q in meta["queue"]
+        ]
+        self.finished = {int(k): list(v) for k, v in meta["finished"].items()}
+        self.errors = {int(k): v for k, v in meta["errors"].items()}
+        self.n_shed = int(meta["n_shed"])
+        self.n_quarantined = int(meta["n_quarantined"])
+        self._next_id = int(meta["next_id"])
+        # Wall-clock latency bookkeeping does not survive a restart.
+        self.submitted_at = {}
+        self.first_token_at = {}
+
+    def save(self, directory: str, step: int) -> str:
+        """Atomic crash-safe engine checkpoint (checkpoint/io.py layer)."""
+        from repro.checkpoint import save_checkpoint
+        snap = self.snapshot()
+        return save_checkpoint(directory, step, snap["tree"],
+                               extra={"engine": snap["meta"]})
+
+    def load(self, directory: str, step: int | None = None) -> int:
+        """Restore from :meth:`save`; falls back past corrupt steps.
+
+        Returns the step the engine was restored from.
+        """
+        from repro.checkpoint import restore_checkpoint
+        template = {
+            "states": jax.tree.map(np.asarray, self._init_states),
+            "key": np.asarray(self.key),
+        }
+        tree, step_restored, extra = restore_checkpoint(
+            directory, template, step)
+        self.restore({"tree": tree, "meta": extra["engine"]})
+        return step_restored
+
     # ------------------------------------------------------------ internals
+    def _expire_deadlines(self):
+        """Error out queued + active requests whose deadline has passed."""
+        now = time.perf_counter()
+        kept = []
+        for rid, prompt, max_new, deadline in self.queue:
+            if deadline is not None and now > deadline:
+                self.errors[rid] = ERR_DEADLINE
+            else:
+                kept.append((rid, prompt, max_new, deadline))
+        self.queue = kept
+        for i, slot in enumerate(self.active):
+            if (slot is not None and slot.deadline is not None
+                    and now > slot.deadline):
+                self.errors[slot.request_id] = ERR_DEADLINE
+                self.active[i] = None   # carry reset on next admit
+
     def _admit(self):
         """Move queued requests into free slots; reset their carries once."""
         freed = np.zeros((self.n_slots,), bool)
         for i in range(self.n_slots):
             if self.active[i] is not None or not self.queue:
                 continue
-            rid, prompt, max_new = self.queue.pop(0)
+            rid, prompt, max_new, deadline = self.queue.pop(0)
             self.active[i] = _Slot(request_id=rid, pending=prompt,
-                                   tokens=[], remaining=max_new)
+                                   tokens=[], remaining=max_new,
+                                   deadline=deadline)
             freed[i] = True
         if freed.any():
             self.states = self._reset_fn(self.states, jnp.asarray(freed))

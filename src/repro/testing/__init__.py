@@ -1,0 +1,12 @@
+"""Test-support utilities: seeded fault injection (testing/faults.py)."""
+
+from repro.testing.faults import (  # noqa: F401
+    FAULT_KINDS,
+    FaultyLMIterator,
+    PreemptingIterator,
+    checkpoint_crc_ok,
+    corrupt_checkpoint,
+    faulty_loss,
+    poison_engine_slot,
+    send_preemption,
+)

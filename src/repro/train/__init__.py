@@ -7,4 +7,9 @@ from repro.train.optim import (  # noqa: F401
     make_optimizer,
     warmup_cosine,
 )
-from repro.train.state import TrainState, make_train_step  # noqa: F401
+from repro.train.guard import GuardConfig, GuardState, init_guard_state  # noqa: F401
+from repro.train.state import (  # noqa: F401
+    TrainState,
+    init_train_state,
+    make_train_step,
+)

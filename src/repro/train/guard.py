@@ -1,0 +1,153 @@
+"""Guarded numerics for the train step (DESIGN.md §Fault-tolerance).
+
+A single NaN loss — one bad batch, one overflowed bf16 reduction, one
+poisoned all-reduce — must not kill a multi-day run or, worse, silently
+write NaN into the params and every checkpoint after.  The guard runs
+*inside* the jitted train step, so the policy is part of the compiled
+program, not a host-side babysitter:
+
+* **Fused all-finite check** — loss + every gradient leaf is reduced to one
+  scalar predicate (``sum(0 * x)`` is NaN iff ``x`` holds any ±inf/NaN, so
+  each leaf costs one multiply-reduce that XLA fuses into the gradient
+  epilogue).
+* **Skip-and-backoff** — a non-finite step applies *no* update (params and
+  optimizer state ride through a ``lax.cond`` untouched; the step counter
+  still advances so the data stream and LR schedule stay aligned with an
+  uninterrupted run) and halves the LR scale, down to
+  ``min_lr_scale``.  After ``recover_every`` consecutive finite steps one
+  halving is undone — transient spikes cost a brief LR dip, a genuinely
+  unstable phase keeps the LR floor until it passes.
+* **Grad-norm spike window** — a rolling window of the last ``spike_window``
+  finite grad norms; a step whose norm exceeds ``spike_factor ×`` the
+  window mean is flagged (counter + metric), and optionally skipped
+  (``skip_on_spike``) without touching the LR scale.
+
+The guard state is a small pytree of scalars that lives inside
+:class:`repro.train.state.TrainState` — it checkpoints, restores, and
+crash-resumes with the params (a resumed run continues the backoff
+schedule, not a fresh one).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Policy knobs for the guarded train step.
+
+    ``backoff``/``recover_every``/``min_lr_scale`` define the skip-and-halve
+    LR schedule; the ``spike_*`` fields the anomaly window.  All are trace
+    constants — changing them retraces the step.
+    """
+
+    backoff: float = 0.5          # LR-scale multiplier per non-finite step
+    recover_every: int = 50       # consecutive finite steps to undo one level
+    min_lr_scale: float = 1.0 / 64.0
+    spike_window: int = 32        # rolling grad-norm window length
+    spike_factor: float = 10.0    # flag gnorm > factor * window mean
+    spike_min_history: int = 8    # window entries required before flagging
+    skip_on_spike: bool = False   # also skip flagged steps (no LR backoff)
+
+
+class GuardState(NamedTuple):
+    """Per-run guard carry (checkpointed inside TrainState)."""
+
+    lr_scale: jax.Array      # () f32 current LR multiplier (≤ 1)
+    skipped: jax.Array       # () i32 non-finite steps skipped so far
+    spikes: jax.Array        # () i32 grad-norm spikes flagged so far
+    good_streak: jax.Array   # () i32 finite steps since last skip/recovery
+    gnorm_window: jax.Array  # (W,) f32 ring of recent finite grad norms
+    window_ptr: jax.Array    # () i32 next ring slot
+    window_count: jax.Array  # () i32 valid entries (saturates at W)
+
+
+def init_guard_state(cfg: GuardConfig) -> GuardState:
+    return GuardState(
+        lr_scale=jnp.ones((), jnp.float32),
+        skipped=jnp.zeros((), jnp.int32),
+        spikes=jnp.zeros((), jnp.int32),
+        good_streak=jnp.zeros((), jnp.int32),
+        gnorm_window=jnp.zeros((cfg.spike_window,), jnp.float32),
+        window_ptr=jnp.zeros((), jnp.int32),
+        window_count=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_guard_state(cfg: GuardConfig) -> GuardState:
+    """ShapeDtypeStruct twin (dry-run / restore templates)."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        init_guard_state(cfg))
+
+
+def all_finite(*trees: Any) -> jax.Array:
+    """One boolean: every leaf of every tree is free of NaN/±inf.
+
+    ``0 * x`` maps NaN and ±inf to NaN and everything else to 0, so
+    ``isfinite(sum(0 * x))`` is a single multiply-reduce per leaf — the
+    cheapest full-coverage check XLA can fuse into the producing op.
+    """
+    leaves = [l for t in trees for l in jax.tree.leaves(t)]
+    if not leaves:
+        return jnp.asarray(True)
+    checks = [
+        jnp.isfinite(jnp.sum(0.0 * x.astype(jnp.float32)))
+        if jnp.issubdtype(x.dtype, jnp.floating) else jnp.asarray(True)
+        for x in leaves
+    ]
+    return jnp.all(jnp.stack(checks))
+
+
+def guard_update(cfg: GuardConfig, g: GuardState, finite: jax.Array,
+                 gnorm: jax.Array) -> tuple[GuardState, jax.Array, jax.Array]:
+    """Advance the guard carry for one step.
+
+    Returns ``(new_state, apply, spike)``: ``apply`` is True iff the
+    optimizer update should be applied this step; ``spike`` is the anomaly
+    flag.  The LR scale consumed by *this* step is ``g.lr_scale`` (backoff
+    takes effect from the next step on).
+    """
+    gnorm = gnorm.astype(jnp.float32)
+
+    # -- spike window (finite norms only; a NaN norm must not poison it) ----
+    mean = g.gnorm_window.sum() / jnp.maximum(g.window_count, 1)
+    spike = (finite
+             & (g.window_count >= cfg.spike_min_history)
+             & (gnorm > cfg.spike_factor * mean))
+    w = len(g.gnorm_window)
+    new_window = jnp.where(
+        finite,
+        jax.lax.dynamic_update_index_in_dim(
+            g.gnorm_window, gnorm, g.window_ptr % w, axis=0),
+        g.gnorm_window)
+    new_ptr = jnp.where(finite, (g.window_ptr + 1) % w, g.window_ptr)
+    new_count = jnp.where(
+        finite, jnp.minimum(g.window_count + 1, w), g.window_count)
+
+    # -- skip / LR backoff --------------------------------------------------
+    apply = finite & ~(spike if cfg.skip_on_spike else jnp.asarray(False))
+    backed_off = jnp.maximum(g.lr_scale * cfg.backoff, cfg.min_lr_scale)
+    streak = jnp.where(finite, g.good_streak + 1, 0)
+    recover = finite & (streak >= cfg.recover_every) & (g.lr_scale < 1.0)
+    recovered = jnp.minimum(g.lr_scale / cfg.backoff, 1.0)
+    new_scale = jnp.where(finite,
+                          jnp.where(recover, recovered, g.lr_scale),
+                          backed_off)
+    streak = jnp.where(recover, 0, streak)
+
+    new_g = GuardState(
+        lr_scale=new_scale,
+        skipped=g.skipped + jnp.where(finite, 0, 1).astype(jnp.int32),
+        spikes=g.spikes + spike.astype(jnp.int32),
+        good_streak=streak.astype(jnp.int32),
+        gnorm_window=new_window,
+        window_ptr=new_ptr.astype(jnp.int32),
+        window_count=new_count.astype(jnp.int32),
+    )
+    return new_g, apply, spike

@@ -15,6 +15,10 @@ Production posture (DESIGN.md §6):
   loop's own bookkeeping and is unit-tested with an injected slow step.
 * **Crash-equivalence** — the loop is a pure function of (checkpoint state,
   data stream); tests kill it mid-run and verify bit-identical continuation.
+* **Guarded numerics** — with a guarded train step (train/guard.py) the loop
+  accumulates skipped-step / spike counters and the final LR-backoff scale
+  into :class:`LoopResult`; ``LoopConfig.guard=True`` additionally asserts
+  the step really is guarded (fail fast, not silently unprotected).
 """
 
 from __future__ import annotations
@@ -53,6 +57,13 @@ class LoopConfig:
     # packing win the subsystem exists for is visible in the logs.  The
     # model side needs no switch: lm_loss keys off the batch arrays.
     pack_sequences: bool = False
+    # Guarded numerics (DESIGN.md §Fault-tolerance): expect a *guarded*
+    # train step (make_train_step(guard=GuardConfig())).  The loop then
+    # verifies the guard metrics are actually present (a silently unguarded
+    # step is the failure mode this knob exists to catch) and accumulates
+    # skip/spike counters into LoopResult.  Guard counters are collected
+    # regardless whenever the metrics carry them.
+    guard: bool = False
 
 
 @dataclasses.dataclass
@@ -62,6 +73,11 @@ class LoopResult:
     stragglers: list     # (step, seconds, threshold) tuples
     preempted: bool = False
     resumed_from: int | None = None
+    # guarded-numerics counters (0 / None when the step is unguarded)
+    skipped_steps: int = 0       # non-finite steps whose update was skipped
+    spike_steps: int = 0         # grad-norm spike anomalies flagged
+    final_lr_scale: float = 1.0  # backoff LR multiplier at exit
+    preempt_signal: int | None = None  # signal that triggered preemption
 
 
 def run_train_loop(
@@ -84,10 +100,19 @@ def run_train_loop(
         resumed_from = step_at_save
 
     # ---- preemption flag --------------------------------------------------
-    preempt = {"flag": False}
+    # First SIGTERM/SIGINT: finish the current step, write a synchronous
+    # final checkpoint, exit cleanly (the k8s/TPU grace-period pattern).
+    # A second signal means the grace period is being cut short — stop
+    # immediately (the finally block still flushes the async writer; the
+    # previous checkpoint stays intact by save atomicity).
+    preempt: dict = {"flag": False, "signum": None}
 
     def _handler(signum, frame):
+        if preempt["flag"]:
+            raise KeyboardInterrupt(f"second signal {signum} during "
+                                    "preemption drain")
         preempt["flag"] = True
+        preempt["signum"] = signum
 
     prev_handlers = {}
     if cfg.install_signal_handlers:
@@ -101,6 +126,7 @@ def run_train_loop(
     stragglers: list = []
     ewma_t, ewma_var = None, 0.0
     hooks = _test_hooks or {}
+    skipped_steps, spike_steps, lr_scale = 0, 0, 1.0
 
     try:
         # Context-parallel session (no-op scope when context_parallel <= 1):
@@ -125,6 +151,20 @@ def run_train_loop(
                 dt = time.perf_counter() - t0
                 if "sleep" in hooks and step in hooks["sleep"]:
                     dt += hooks["sleep"][step]  # injected straggler (tests)
+                if "preempt_at" in hooks and step >= hooks["preempt_at"]:
+                    preempt["flag"] = True      # injected preemption (tests)
+
+                # guarded-numerics counters (train/guard.py metrics)
+                if "guard_skipped" in metrics:
+                    skipped_steps += int(float(metrics["guard_skipped"]))
+                    spike_steps += int(float(metrics["guard_spike"]))
+                    lr_scale = float(metrics["guard_lr_scale"])
+                elif cfg.guard:
+                    raise ValueError(
+                        "LoopConfig.guard=True but the train step emits no "
+                        "guard metrics — build it with "
+                        "make_train_step(..., guard=GuardConfig()) and "
+                        "init_train_state(..., guard=cfg)")
 
                 # straggler EWMA (skip the compile step)
                 if step > 0:
@@ -167,4 +207,7 @@ def run_train_loop(
             signal.signal(sig, h)
 
     return LoopResult(state=state, history=history, stragglers=stragglers,
-                      preempted=preempt["flag"], resumed_from=resumed_from)
+                      preempted=preempt["flag"], resumed_from=resumed_from,
+                      skipped_steps=skipped_steps, spike_steps=spike_steps,
+                      final_lr_scale=lr_scale,
+                      preempt_signal=preempt["signum"])

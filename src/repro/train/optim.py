@@ -19,7 +19,10 @@ import numpy as np
 
 class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
-    update: Callable[..., tuple]  # (grads, state, params, step) -> (new_params, new_state)
+    # (grads, state, params, step, *, lr_scale=1.0) -> (new_params, new_state)
+    # lr_scale is the guarded-numerics backoff hook (train/guard.py): a
+    # multiplier on the scheduled LR, 1.0 in normal operation.
+    update: Callable[..., tuple]
 
 
 def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
@@ -51,8 +54,8 @@ def adamw(schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
         return {"m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params)}
 
-    def update(grads, state, params, step):
-        lr = schedule(step)
+    def update(grads, state, params, step, *, lr_scale=1.0):
+        lr = schedule(step) * lr_scale
         t = jnp.asarray(step + 1, jnp.float32)
         bc1 = 1.0 - b1 ** t
         bc2 = 1.0 - b2 ** t
@@ -101,8 +104,8 @@ def adafactor(schedule, decay=0.8, eps=1e-30, clip_threshold=1.0,
 
         return {"v": jax.tree.map(per_param, params)}
 
-    def update(grads, state, params, step):
-        lr = schedule(step)
+    def update(grads, state, params, step, *, lr_scale=1.0):
+        lr = schedule(step) * lr_scale
         t = jnp.asarray(step + 1, jnp.float32)
         beta = 1.0 - t ** (-decay)  # increasing-decay schedule
 

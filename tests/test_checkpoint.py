@@ -1,4 +1,5 @@
-"""Checkpoint tests: round-trip, atomicity, crc validation, bf16, async."""
+"""Checkpoint tests: round-trip, atomicity, crc validation, bf16, async,
+adversity (killed saves, corrupt steps, structure mismatches)."""
 
 import json
 import os
@@ -9,11 +10,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.checkpoint.io as ckpt_io
 from repro.checkpoint import (
     Checkpointer,
+    CheckpointCorruptionError,
+    CheckpointStructureError,
+    available_steps,
     latest_step,
     restore_checkpoint,
     save_checkpoint,
+    verify_checkpoint,
 )
 
 
@@ -93,3 +99,166 @@ def test_elastic_restore_applies_new_sharding(rng):
         out, _, _ = restore_checkpoint(d, tree,
                                        shardings={"w": sharding})
         assert out["w"].sharding == sharding
+
+
+# ---------------------------------------------------------------------------
+# Adversity: killed saves, corrupt steps, structure mismatches
+# ---------------------------------------------------------------------------
+
+
+def test_save_killed_before_manifest_leaves_no_valid_step(rng, monkeypatch):
+    """Die after the chunks but before the manifest: the staging dir is
+    cleaned, no step_* dir appears, and the previous step restores."""
+    tree = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+
+        def boom(*a, **k):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(ckpt_io.json, "dump", boom)
+        with pytest.raises(OSError, match="disk full"):
+            save_checkpoint(d, 2, tree)
+        monkeypatch.undo()
+        assert available_steps(d) == [1]
+        assert not [x for x in os.listdir(d) if x.startswith(".tmp")]
+        _, step, _ = restore_checkpoint(d, tree)
+        assert step == 1
+
+
+def test_save_killed_mid_chunk_keeps_older_steps(rng, monkeypatch):
+    """Die mid-chunk-write: same guarantees, via the chunk path."""
+    tree = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        real_save = ckpt_io.np.save
+        calls = {"n": 0}
+
+        def flaky(f, arr, **k):
+            calls["n"] += 1
+            if calls["n"] == 2:
+                raise OSError("torn write")
+            return real_save(f, arr, **k)
+
+        monkeypatch.setattr(ckpt_io.np, "save", flaky)
+        with pytest.raises(OSError, match="torn write"):
+            save_checkpoint(d, 2, tree)
+        monkeypatch.undo()
+        assert available_steps(d) == [1]
+        verify_checkpoint(d, 1)   # older step untouched and intact
+
+
+def test_checkpointer_write_failure_surfaces_on_wait(rng, monkeypatch):
+    """An async save that dies in the background thread must raise on the
+    next wait() — not vanish — and must not GC or damage older steps."""
+    tree = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        ck.save_async(1, tree)
+        ck.wait()
+
+        def boom(*a, **k):
+            raise OSError("backend gone")
+
+        monkeypatch.setattr(ckpt_io.np, "save", boom)
+        ck.save_async(2, tree)
+        with pytest.raises(OSError, match="backend gone"):
+            ck.wait()
+        monkeypatch.undo()
+        assert available_steps(d) == [1]
+        assert latest_step(d) == 1
+        verify_checkpoint(d, 1)
+        # the checkpointer recovers: the next save works
+        ck.save_async(3, tree)
+        ck.wait()
+        assert latest_step(d) == 3
+
+
+def test_restore_falls_back_to_older_intact_step(rng):
+    tree = _tree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        path2 = save_checkpoint(d, 2, tree)
+        os.remove(os.path.join(path2, "manifest.json"))
+        out, step, _ = restore_checkpoint(d, tree)
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                      np.asarray(out["w"]))
+
+
+def test_latest_pointer_dangling_falls_back_to_scan(rng):
+    """Killed between the step rename and the pointer write: LATEST points
+    at a directory that never appeared; the scan finds the real newest."""
+    tree = {"x": jnp.zeros(3)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 4, tree)
+        with open(os.path.join(d, "LATEST"), "w") as f:
+            f.write("step_000000000009")
+        assert latest_step(d) == 4
+        _, step, _ = restore_checkpoint(d, tree)
+        assert step == 4
+
+
+def test_structure_mismatch_names_offending_paths(rng):
+    tree = {"w": jax.random.normal(rng, (4, 4)),
+            "old_head": jnp.zeros((3,))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        template = {"w": jnp.zeros((4, 4)), "new_head": jnp.ones((5,))}
+        with pytest.raises(CheckpointStructureError) as ei:
+            restore_checkpoint(d, template)
+        msg = str(ei.value)
+        assert "new_head" in msg and "old_head" in msg
+        assert "strict=False" in msg
+
+
+def test_partial_restore_warm_start(rng):
+    """strict=False: leaves in the checkpoint load, the rest keep the
+    template's values — the fine-tune-new-head warm start."""
+    tree = {"w": jax.random.normal(rng, (4, 4)),
+            "old_head": jnp.zeros((3,))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        template = {"w": jnp.zeros((4, 4)),
+                    "new_head": jnp.full((5,), 7.0)}
+        out, step, _ = restore_checkpoint(d, template, strict=False)
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+        np.testing.assert_array_equal(np.asarray(out["new_head"]),
+                                      np.full((5,), 7.0, np.float32))
+
+
+def test_partial_restore_needs_concrete_template_values(rng):
+    tree = {"w": jax.random.normal(rng, (4, 4))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        template = {"w": jnp.zeros((4, 4)),
+                    "new": jax.ShapeDtypeStruct((2,), jnp.float32)}
+        with pytest.raises(CheckpointStructureError, match="concrete"):
+            restore_checkpoint(d, template, strict=False)
+
+
+def test_verify_checkpoint_detects_truncation(rng):
+    tree = {"x": jax.random.normal(rng, (64, 4))}
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 1, tree)
+        verify_checkpoint(d, 1)
+        chunk = next(f for f in os.listdir(path) if f.startswith("leaf_"))
+        fp = os.path.join(path, chunk)
+        with open(fp, "r+b") as f:
+            f.truncate(os.path.getsize(fp) // 2)
+        with pytest.raises(CheckpointCorruptionError):
+            verify_checkpoint(d, 1)
+
+
+def test_manifest_extra_roundtrips_json_types(rng):
+    """extra= must survive the JSON manifest: the engine snapshot and the
+    data-iterator state both ride in it."""
+    tree = {"x": jnp.zeros(2)}
+    extra = {"engine": {"queue": [[1, [3, 4], 2, None]],
+                        "errors": {"7": "deadline exceeded"}}}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree, extra=extra)
+        _, _, got = restore_checkpoint(d, tree)
+        assert got == extra

@@ -1,0 +1,523 @@
+"""Chaos suite: every fault the tolerance layer claims to survive, injected.
+
+Guard (train/guard.py): NaN loss at step k → the step is skipped, LR backs
+off, training continues to convergence without a restart.  Checkpoints
+(checkpoint/io.py): bit flips, truncation, killed-mid-save artifacts → the
+restore falls back to the newest intact step.  Preemption: a *real* SIGTERM
+drains the in-flight step, sync-checkpoints, and resumes bit-identically.
+Serving (serving/engine.py): a poisoned slot is quarantined while its
+batch-mates' outputs stay byte-identical; deadlines and load shedding
+degrade gracefully.  All injections come from repro.testing.faults —
+deterministic, replayable.
+"""
+
+import signal
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointCorruptionError,
+    available_steps,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.configs import smoke_config
+from repro.data.synthetic import CopyTaskIterator
+from repro.models.factory import build
+from repro.serving import (
+    ERR_DEADLINE,
+    ERR_POISONED,
+    EngineOverloaded,
+    StreamingEngine,
+    generate,
+)
+from repro.testing import (
+    FaultyLMIterator,
+    PreemptingIterator,
+    checkpoint_crc_ok,
+    corrupt_checkpoint,
+    faulty_loss,
+    poison_engine_slot,
+    send_preemption,
+)
+from repro.train.guard import GuardConfig, GuardState, init_guard_state
+from repro.train.loop import LoopConfig, run_train_loop
+from repro.train.optim import make_optimizer, warmup_cosine
+from repro.train.state import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config("phi3-mini-3.8b", n_layers=2, d_model=64, d_ff=128,
+                       vocab=64)
+    api = build(cfg)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+def _data():
+    return CopyTaskIterator(vocab=64, seq_len=17, batch=8)
+
+
+def _guarded(api, guard=None, **step_kw):
+    guard = guard or GuardConfig()
+    opt = make_optimizer("adamw", warmup_cosine(2e-3, 5, 60))
+    state = init_train_state(api.init(jax.random.PRNGKey(0)), opt,
+                             guard=guard)
+    step = jax.jit(make_train_step(faulty_loss(api.loss), opt, guard=guard,
+                                   **step_kw))
+    return state, step
+
+
+# ---------------------------------------------------------------------------
+# Guarded numerics
+# ---------------------------------------------------------------------------
+
+
+def test_guard_skips_nan_and_converges(model):
+    """NaN loss at steps 5 and 6: both skipped, LR halves twice, params stay
+    finite, and the loss keeps dropping — no restart needed."""
+    api, _ = model
+    state, step = _guarded(api)
+    it = FaultyLMIterator(_data(), nan_at={5, 6})
+    res = run_train_loop(step, state, it,
+                         LoopConfig(total_steps=40, guard=True,
+                                    install_signal_handlers=False))
+    assert res.skipped_steps == 2
+    assert int(res.state.step) == 40          # skipped steps still advance
+    np.testing.assert_allclose(res.final_lr_scale, 0.25)
+    for p in jax.tree.leaves(res.state.params):
+        assert np.isfinite(np.asarray(p)).all()
+    first, last = res.history[0][1]["loss"], res.history[-1][1]["loss"]
+    assert np.isfinite(last) and last < first
+
+
+def test_guard_faultfree_params_bit_identical(model, rng):
+    """With no faults, the guarded step's parameter trajectory must be
+    byte-identical to the unguarded one (the cond's apply branch is the
+    plain update; x * lr_scale=1.0 is exact)."""
+    api, params = model
+    opt = make_optimizer("adamw", warmup_cosine(2e-3, 5, 60))
+    plain = jax.jit(make_train_step(api.loss, opt))
+    guard = GuardConfig()
+    guarded = jax.jit(make_train_step(api.loss, opt, guard=guard))
+    s1 = init_train_state(params, opt)
+    s2 = init_train_state(params, opt, guard=guard)
+    it1, it2 = _data(), _data()
+    for i in range(10):
+        k = jax.random.fold_in(rng, i)
+        s1, _ = plain(s1, next(it1), k)
+        s2, m2 = guarded(s2, next(it2), k)
+        assert float(m2["guard_skipped"]) == 0.0
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_guard_lr_backoff_recovers(model):
+    """After recover_every consecutive finite steps the backoff unwinds one
+    level at a time, back to 1.0 — the guard is not a permanent LR cut."""
+    api, _ = model
+    cfg = GuardConfig(recover_every=5)
+    state, step = _guarded(api, guard=cfg)
+    it = FaultyLMIterator(_data(), nan_at={3})
+    res = run_train_loop(step, state, it,
+                         LoopConfig(total_steps=20, guard=True,
+                                    install_signal_handlers=False))
+    assert res.skipped_steps == 1
+    np.testing.assert_allclose(res.final_lr_scale, 1.0)
+
+
+def test_guard_flags_grad_norm_spike(model):
+    """A finite 1e4× loss blow-up at step 12 is flagged as a spike (rolling
+    window anomaly) but — with skip_on_spike=False — still applied."""
+    api, _ = model
+    state, step = _guarded(api, guard=GuardConfig(spike_min_history=8))
+    it = FaultyLMIterator(_data(), scale_at={12: 1e4})
+    res = run_train_loop(step, state, it,
+                         LoopConfig(total_steps=20, guard=True,
+                                    install_signal_handlers=False))
+    assert res.spike_steps >= 1
+    assert res.skipped_steps == 0
+
+
+def test_guard_skip_on_spike(model):
+    """With skip_on_spike=True the spike step's update is also skipped."""
+    api, _ = model
+    state, step = _guarded(
+        api, guard=GuardConfig(spike_min_history=8, skip_on_spike=True))
+    it = FaultyLMIterator(_data(), scale_at={12: 1e4})
+    res = run_train_loop(step, state, it,
+                         LoopConfig(total_steps=20, guard=True,
+                                    install_signal_handlers=False))
+    assert res.spike_steps >= 1
+    assert res.skipped_steps >= 1
+
+
+def test_guard_survives_microbatching(model):
+    """The _fault_scale scalar must ride through the microbatch split (0-d
+    leaves broadcast across microbatches) and still poison the whole step."""
+    api, _ = model
+    state, step = _guarded(api, n_microbatches=2)
+    it = FaultyLMIterator(_data(), nan_at={4})
+    res = run_train_loop(step, state, it,
+                         LoopConfig(total_steps=10, guard=True,
+                                    install_signal_handlers=False))
+    assert res.skipped_steps == 1
+    for p in jax.tree.leaves(res.state.params):
+        assert np.isfinite(np.asarray(p)).all()
+
+
+def test_loop_guard_flag_requires_guarded_step(model, rng):
+    """LoopConfig.guard=True with an unguarded step must fail fast — a
+    silently unprotected run is the failure mode the flag exists to catch."""
+    api, params = model
+    opt = make_optimizer("adamw", warmup_cosine(1e-3, 5, 20))
+    step = jax.jit(make_train_step(api.loss, opt))
+    with pytest.raises(ValueError, match="guard"):
+        run_train_loop(step, init_train_state(params, opt), _data(),
+                       LoopConfig(total_steps=3, guard=True,
+                                  install_signal_handlers=False))
+
+
+def test_guard_requires_guarded_state(model):
+    """make_train_step(guard=...) on a guard-less TrainState errors with the
+    fix named, instead of silently training unguarded."""
+    api, params = model
+    opt = make_optimizer("adamw", warmup_cosine(1e-3, 5, 20))
+    step = make_train_step(api.loss, opt, guard=GuardConfig())
+    state = init_train_state(params, opt)   # no guard=
+    with pytest.raises(ValueError, match="init_train_state"):
+        step(state, next(_data()), jax.random.PRNGKey(0))
+
+
+def test_guard_state_checkpoints_and_resumes(model):
+    """Crash after a backoff: the resumed run must carry the reduced
+    lr_scale (GuardState lives inside TrainState) and land on exactly the
+    same params as an uninterrupted faulty run."""
+    api, _ = model
+
+    def faulty_iter():
+        return FaultyLMIterator(_data(), nan_at={6, 14})
+
+    state, step = _guarded(api)
+    ref = run_train_loop(step, state, faulty_iter(),
+                         LoopConfig(total_steps=20, guard=True,
+                                    install_signal_handlers=False))
+    assert ref.skipped_steps == 2
+
+    with tempfile.TemporaryDirectory() as d:
+        lc = LoopConfig(total_steps=20, ckpt_dir=d, save_every=5, guard=True,
+                        install_signal_handlers=False)
+        state, step = _guarded(api)
+        with pytest.raises(KeyboardInterrupt):
+            run_train_loop(step, state, faulty_iter(), lc,
+                           _test_hooks={"crash_at": 10})
+        state, step = _guarded(api)
+        res = run_train_loop(step, state, faulty_iter(), lc)
+        assert res.resumed_from == 10
+        # lr_scale halved at step 6 was restored from the checkpoint: the
+        # step-14 fault halves it again
+        np.testing.assert_allclose(res.final_lr_scale, 0.25)
+        for a, b in zip(jax.tree.leaves(res.state.params),
+                        jax.tree.leaves(ref.state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_guard_state_pytree_roundtrip():
+    g = init_guard_state(GuardConfig())
+    leaves, treedef = jax.tree_util.tree_flatten(g)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, GuardState)
+    np.testing.assert_allclose(float(back.lr_scale), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint adversity
+# ---------------------------------------------------------------------------
+
+
+def _ckpt_tree(offset=0.0):
+    return {"w": np.arange(100, dtype=np.float32).reshape(10, 10) + offset,
+            "b": np.ones((7,), np.float32) * (1 + offset)}
+
+
+@pytest.mark.parametrize(
+    "kind", ["flip_byte", "truncate_chunk", "delete_chunk",
+             "delete_manifest"])
+def test_restore_falls_back_past_corrupt_newest(kind):
+    """Whatever breaks the newest step — bit rot, torn write, missing file,
+    killed before the manifest — restore lands on the newest intact step."""
+    with tempfile.TemporaryDirectory() as d:
+        for s in (10, 20, 30):
+            save_checkpoint(d, s, _ckpt_tree(s))
+        corrupt_checkpoint(d, 30, kind)
+        got, step, _ = restore_checkpoint(d, _ckpt_tree())
+        assert step == 20
+        np.testing.assert_array_equal(got["w"], _ckpt_tree(20)["w"])
+
+
+def test_flip_byte_caught_by_crc():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _ckpt_tree())
+        assert checkpoint_crc_ok(d, 1)
+        corrupt_checkpoint(d, 1, "flip_byte")
+        assert not checkpoint_crc_ok(d, 1)
+        with pytest.raises(CheckpointCorruptionError, match="crc"):
+            restore_checkpoint(d, _ckpt_tree(), step=1)
+
+
+def test_explicit_step_never_falls_back():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2):
+            save_checkpoint(d, s, _ckpt_tree(s))
+        corrupt_checkpoint(d, 2, "truncate_chunk")
+        with pytest.raises(CheckpointCorruptionError):
+            restore_checkpoint(d, _ckpt_tree(), step=2)
+
+
+def test_stale_tmp_from_killed_save_is_invisible():
+    """A save killed mid-write strands .tmp-step_*; it must never be listed,
+    restored, or mistaken for the newest step."""
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 5, _ckpt_tree(5))
+        corrupt_checkpoint(d, 5, "stale_tmp")
+        assert available_steps(d) == [5]
+        _, step, _ = restore_checkpoint(d, _ckpt_tree())
+        assert step == 5
+
+
+def test_every_candidate_corrupt_reports_all_failures():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2):
+            save_checkpoint(d, s, _ckpt_tree(s))
+        corrupt_checkpoint(d, 1, "delete_manifest")
+        corrupt_checkpoint(d, 2, "truncate_chunk")
+        with pytest.raises(CheckpointCorruptionError,
+                           match="every candidate failed"):
+            restore_checkpoint(d, _ckpt_tree())
+
+
+def test_loop_resumes_past_corrupt_checkpoint(model):
+    """End to end: crash, corrupt the newest checkpoint, restart — the loop
+    auto-resumes from the older intact step and still finishes."""
+    api, _ = model
+    state, step = _guarded(api)
+    with tempfile.TemporaryDirectory() as d:
+        lc = LoopConfig(total_steps=20, ckpt_dir=d, save_every=5, guard=True,
+                        install_signal_handlers=False)
+        with pytest.raises(KeyboardInterrupt):
+            run_train_loop(step, state, FaultyLMIterator(_data()), lc,
+                           _test_hooks={"crash_at": 15})
+        corrupt_checkpoint(d, 15, "flip_byte")
+        state, step = _guarded(api)
+        res = run_train_loop(step, state, FaultyLMIterator(_data()), lc)
+        assert res.resumed_from == 10
+        assert int(res.state.step) == 20
+
+
+# ---------------------------------------------------------------------------
+# Preemption (real signals)
+# ---------------------------------------------------------------------------
+
+
+def test_sigterm_drains_and_resumes_bit_identical(model):
+    """A real SIGTERM mid-run: finish the in-flight step, sync-checkpoint,
+    exit; the restart continues to the same final params as an
+    uninterrupted run (step counter, data stream, and params all aligned)."""
+    api, params = model
+    opt = make_optimizer("adamw", warmup_cosine(1e-3, 5, 20))
+    step = jax.jit(make_train_step(api.loss, opt))
+    ref = run_train_loop(step, init_train_state(params, opt), _data(),
+                         LoopConfig(total_steps=20,
+                                    install_signal_handlers=False))
+    with tempfile.TemporaryDirectory() as d:
+        lc = LoopConfig(total_steps=20, ckpt_dir=d, save_every=100)
+        it = PreemptingIterator(_data(), preempt_after=8)
+        res1 = run_train_loop(step, init_train_state(params, opt), it, lc)
+        assert res1.preempted
+        assert res1.preempt_signal == signal.SIGTERM
+        assert int(res1.state.step) == 8
+        it2 = PreemptingIterator(_data(), preempt_after=10 ** 9)
+        res2 = run_train_loop(step, init_train_state(params, opt), it2, lc)
+        assert res2.resumed_from == 8
+        assert int(res2.state.step) == 20
+        for a, b in zip(jax.tree.leaves(res2.state.params),
+                        jax.tree.leaves(ref.state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_second_signal_cuts_the_drain_short(model):
+    """Grace period revoked: a second signal during the drain raises
+    immediately instead of finishing the run."""
+    api, params = model
+    opt = make_optimizer("adamw", warmup_cosine(1e-3, 5, 20))
+    step = jax.jit(make_train_step(api.loss, opt))
+
+    def on_log(s, m):
+        if s == 4:
+            send_preemption()
+            send_preemption()   # second delivery raises in the handler
+
+    with pytest.raises(KeyboardInterrupt, match="second signal"):
+        run_train_loop(step, init_train_state(params, opt), _data(),
+                       LoopConfig(total_steps=20, log_every=1),
+                       on_log=on_log)
+
+
+# ---------------------------------------------------------------------------
+# Serving degradation
+# ---------------------------------------------------------------------------
+
+
+def test_poisoned_slot_quarantined_batchmates_byte_identical(model, rng):
+    """NaN-carry slot 1 errors out and is reset; slots 0 and 2 must produce
+    exactly the tokens of an uninjected run."""
+    api, params = model
+    prompts = jax.random.randint(rng, (3, 5), 0, 64)
+
+    clean = StreamingEngine(api, params, n_slots=3)
+    rc = [clean.submit(prompts[i], 6) for i in range(3)]
+    out_clean = clean.run()
+
+    eng = StreamingEngine(api, params, n_slots=3)
+    rids = [eng.submit(prompts[i], 6) for i in range(3)]
+    eng.step(), eng.step()
+    poison_engine_slot(eng, 1)
+    out = eng.run()
+    assert eng.errors[rids[1]] == ERR_POISONED
+    assert eng.n_quarantined == 1
+    assert rids[1] not in out
+    assert out[rids[0]] == out_clean[rc[0]]
+    assert out[rids[2]] == out_clean[rc[2]]
+
+
+def test_quarantined_slot_serves_next_request_correctly(model, rng):
+    """After a quarantine the freed slot's carry is reset on readmission:
+    the next request through it matches a dedicated run."""
+    api, params = model
+    prompts = jax.random.randint(rng, (2, 5), 0, 64)
+    eng = StreamingEngine(api, params, n_slots=1)
+    r0 = eng.submit(prompts[0], 6)
+    eng.step(), eng.step()
+    poison_engine_slot(eng, 0)
+    eng.run()
+    assert eng.errors[r0] == ERR_POISONED
+    r1 = eng.submit(prompts[1], 6)
+    out = eng.run()
+    solo, _ = generate(api, params, prompts[1][None], 6)
+    assert out[r1] == [int(x) for x in solo[0]]
+
+
+def test_deadline_expires_queued_and_active(model, rng):
+    api, params = model
+    prompts = jax.random.randint(rng, (2, 4), 0, 64)
+    eng = StreamingEngine(api, params, n_slots=1)
+    # active: admitted, then the clock runs out mid-decode
+    r_active = eng.submit(prompts[0], 1000, deadline_s=0.05)
+    eng.step()
+    # queued: never admitted before expiry (slot busy)
+    r_queued = eng.submit(prompts[1], 4, deadline_s=0.01)
+    time.sleep(0.08)
+    out = eng.run()
+    assert eng.errors[r_active] == ERR_DEADLINE
+    assert eng.errors[r_queued] == ERR_DEADLINE
+    assert r_active not in out and r_queued not in out
+
+
+def test_load_shedding_bounded_queue(model, rng):
+    api, params = model
+    prompts = jax.random.randint(rng, (4, 4), 0, 64)
+    eng = StreamingEngine(api, params, n_slots=1, max_queue=2)
+    eng.submit(prompts[0], 2)
+    eng.submit(prompts[1], 2)
+    with pytest.raises(EngineOverloaded, match="queue full"):
+        eng.submit(prompts[2], 2)
+    assert eng.n_shed == 1
+    out = eng.run()                 # queued work still completes
+    assert len(out) == 2
+    eng.submit(prompts[3], 2)       # capacity freed after the drain
+    assert len(eng.run()) == 3
+
+
+def test_engine_snapshot_restore_midflight(model, rng):
+    """Snapshot mid-flight (one slot decoding, one mid-prefill, one queued),
+    restore into a fresh engine: the completed outputs match an
+    uninterrupted run exactly."""
+    api, params = model
+    prompts = jax.random.randint(rng, (3, 9), 0, 64)
+    ref = StreamingEngine(api, params, n_slots=2, chunk=4)
+    rr = [ref.submit(prompts[i], 6) for i in range(3)]
+    out_ref = ref.run()
+
+    a = StreamingEngine(api, params, n_slots=2, chunk=4)
+    ra = [a.submit(prompts[i], 6) for i in range(3)]
+    a.step(), a.step()
+    snap = a.snapshot()
+    b = StreamingEngine(api, params, n_slots=2, chunk=4)
+    b.restore(snap)
+    out = b.run()
+    for i in range(3):
+        assert out[ra[i]] == out_ref[rr[i]], f"request {i} diverged"
+
+
+def test_engine_save_load_via_checkpoint_layer(model, rng):
+    """Engine crash recovery composes with checkpoint fault tolerance: the
+    newest engine checkpoint is corrupt, load falls back to the older one
+    and finishes the requests correctly from the earlier point."""
+    api, params = model
+    prompts = jax.random.randint(rng, (2, 5), 0, 64)
+    ref = StreamingEngine(api, params, n_slots=2)
+    rr = [ref.submit(prompts[i], 6) for i in range(2)]
+    out_ref = ref.run()
+
+    a = StreamingEngine(api, params, n_slots=2)
+    ra = [a.submit(prompts[i], 6) for i in range(2)]
+    with tempfile.TemporaryDirectory() as d:
+        a.step()
+        a.save(d, 1)
+        a.step()
+        a.save(d, 2)
+        corrupt_checkpoint(d, 2, "truncate_chunk")
+        b = StreamingEngine(api, params, n_slots=2)
+        assert b.load(d) == 1
+        out = b.run()
+    for i in range(2):
+        assert out[ra[i]] == out_ref[rr[i]]
+
+
+def test_engine_snapshot_shape_mismatch_rejected(model):
+    api, params = model
+    a = StreamingEngine(api, params, n_slots=2)
+    b = StreamingEngine(api, params, n_slots=3)
+    with pytest.raises(ValueError, match="n_slots"):
+        b.restore(a.snapshot())
+
+
+# ---------------------------------------------------------------------------
+# 8-device context-parallel chaos (CI multi-device job)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 (emulated) devices: "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+def test_guarded_training_under_context_parallel_mesh(model):
+    """Guard semantics are mesh-invariant: a NaN step under a seq=8 mesh is
+    skipped with the same counters, params stay finite, loss keeps falling."""
+    api, _ = model
+    state, step = _guarded(api)
+    it = FaultyLMIterator(
+        CopyTaskIterator(vocab=64, seq_len=33, batch=8), nan_at={4})
+    res = run_train_loop(
+        step, state, it,
+        LoopConfig(total_steps=12, guard=True, context_parallel=8,
+                   install_signal_handlers=False))
+    assert res.skipped_steps == 1
+    np.testing.assert_allclose(res.final_lr_scale, 0.5)
+    for p in jax.tree.leaves(res.state.params):
+        assert np.isfinite(np.asarray(p)).all()

@@ -343,3 +343,78 @@ def test_temperature_sampler_topk(rng):
     for i in range(20):
         tok = s(logits, jax.random.fold_in(rng, i))
         assert int(tok[0, 0]) in (2, 3)  # only top-2 survive
+
+
+# ---------------------------------------------------------------------------
+# Input validation at the API boundary (DESIGN.md §Fault-tolerance)
+# ---------------------------------------------------------------------------
+
+
+def test_generate_rejects_bad_inputs(aaren_model, rng):
+    api, params = aaren_model
+    good = jax.random.randint(rng, (2, 5), 0, 64)
+    with pytest.raises(ValueError, match="empty"):
+        generate(api, params, jnp.zeros((0, 5), jnp.int32), 4)
+    with pytest.raises(ValueError, match="empty"):
+        generate(api, params, jnp.zeros((2, 0), jnp.int32), 4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        generate(api, params, good, 0)
+    with pytest.raises(ValueError, match="prompt_lengths"):
+        generate(api, params, good, 4, prompt_lengths=jnp.asarray([3]),
+                 cache_len=32)
+    with pytest.raises(ValueError, match=r"\[1, 5\]"):
+        generate(api, params, good, 4, prompt_lengths=jnp.asarray([0, 9]),
+                 cache_len=32)
+
+
+def test_generate_rejects_wrapping_kv_cache():
+    """A global-attention KV ring that wraps silently drops the earliest
+    context — must be a loud error, not a quietly wrong answer."""
+    cfg = smoke_config("phi3-mini-3.8b", attn_mode="softmax", n_layers=2,
+                      d_model=64, d_ff=128, vocab=64)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    prompts = jnp.ones((1, 8), jnp.int32)
+    with pytest.raises(ValueError, match="wrap"):
+        generate(api, params, prompts, 8, cache_len=10)
+    toks, _ = generate(api, params, prompts, 8, cache_len=16)
+    assert toks.shape == (1, 8)
+
+
+def test_generate_ragged_attn_local_window_raises_at_entry():
+    """Ragged prefill with an attn_local window shorter than the padded
+    prompt needs per-row ring indices (unimplemented): the error must name
+    the config at the generate() boundary, not surface mid-trace."""
+    cfg = smoke_config("phi3-mini-3.8b", attn_mode="softmax", n_layers=2,
+                      d_model=64, d_ff=128, vocab=64, window=4,
+                      pattern=("attn_local",))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    prompts = jnp.ones((2, 8), jnp.int32)
+    with pytest.raises(NotImplementedError, match="window"):
+        generate(api, params, prompts, 4,
+                 prompt_lengths=jnp.asarray([3, 8]), cache_len=32)
+    # window >= padded prompt length stays supported
+    cfg2 = smoke_config("phi3-mini-3.8b", attn_mode="softmax", n_layers=2,
+                       d_model=64, d_ff=128, vocab=64, window=8,
+                       pattern=("attn_local",))
+    api2 = build(cfg2)
+    toks, _ = generate(api2, api2.init(jax.random.PRNGKey(0)), prompts, 4,
+                       prompt_lengths=jnp.asarray([3, 8]), cache_len=32)
+    assert toks.shape == (2, 4)
+
+
+def test_submit_rejects_bad_inputs(aaren_model):
+    api, params = aaren_model
+    eng = StreamingEngine(api, params, n_slots=2)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(np.asarray([], np.int32), 4)
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(np.zeros((2, 3), np.int32), 4)
+    with pytest.raises(ValueError, match="integer"):
+        eng.submit(np.asarray([1.5, 2.5]), 4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(np.asarray([1, 2], np.int32), 0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        eng.submit(np.asarray([1, 2], np.int32), 4, deadline_s=-1.0)
+    assert eng.queue == [] and eng._next_id == 0   # nothing half-admitted
