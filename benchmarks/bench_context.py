@@ -14,6 +14,13 @@ reported for completeness but is not a hardware claim — 8 fake devices share
 one physical CPU, so tokens/s stays roughly flat while the per-device bytes
 drop.
 
+The ``composed`` row exercises the full 2x2x2 (data x seq x model)
+``MeshPlan`` (DESIGN.md §Parallelism): loss parity against the seq-only
+rows plus the per-axis wire accounting — the roofline's analytic
+``predict_axis_exchange`` next to ``collective_bytes_by_axis`` counted from
+the compiled HLO, one entry per mesh axis, so a collective landing on the
+wrong axis (or an "other" partition) shows up as a ratio drifting from 1.
+
 This module keeps its import side-effect free: the 8-device XLA flag must be
 set before jax initialises, so ``run()`` (the ``benchmarks/run.py`` harness
 hook) re-executes this file as a subprocess with the flag in the
@@ -54,6 +61,12 @@ def run():
              f"{point['tokens_per_s']:.0f}")
         emit(f"context_seq{point['seq_axis']}_act_bytes_per_device", 0.0,
              str(point["peak_activation_bytes_per_device"]))
+    comp = data.get("composed")
+    if comp:
+        emit("context_composed_loss_drift", 0.0,
+             f"{comp['loss_drift_vs_seq_axis_1']:.2e}")
+        for ax, b in sorted(comp["measured_axis_bytes"].items()):
+            emit(f"context_composed_{ax}_bytes", 0.0, str(int(b)))
 
 
 def main():
@@ -114,12 +127,55 @@ def main():
               f"{temp/1e6:.2f} MB/device temp, loss {float(loss):.4f}",
               flush=True)
 
+    # Composed 2x2x2 plan: loss parity + per-axis predicted vs measured
+    # wire bytes (DESIGN.md §Parallelism).
+    from repro.distributed.context import mesh_plan_session
+    from repro.roofline.analysis import (
+        collective_bytes_by_axis, predict_axis_exchange)
+    from repro.sharding import MeshPlan
+
+    plan = MeshPlan(data=2, seq=2, model=2)
+    with mesh_plan_session(plan):
+        step = jax.jit(jax.value_and_grad(lambda p, b: api.loss(p, b)[0]))
+        compiled = step.lower(params, batch).compile()
+        measured = collective_bytes_by_axis(
+            compiled.as_text(), {"data": 2, "seq": 2, "model": 2})
+        loss_c, g = compiled(params, batch)
+        jax.block_until_ready(g)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            loss_c, g = compiled(params, batch)
+        jax.block_until_ready(g)
+        dt_c = (time.perf_counter() - t0) / 3
+    param_bytes = 4 * sum(int(x.size) for x in jax.tree.leaves(params))
+    predicted = predict_axis_exchange(
+        plan, batch=batch_size, seq_len=seq_len, n_heads=cfg.n_heads,
+        head_dim=cfg.d_model // cfg.n_heads, d_model=cfg.d_model,
+        n_layers=cfg.n_layers, param_bytes=param_bytes, attn_mode="aaren")
+    composed = {
+        "plan": plan.describe(),
+        "loss": float(loss_c),
+        "loss_drift_vs_seq_axis_1": abs(float(loss_c) - points[0]["loss"]),
+        "tokens_per_s": batch_size * seq_len / dt_c,
+        "predicted_axis_bytes": {k: float(v) for k, v in predicted.items()},
+        "measured_axis_bytes": {k: float(v["total"])
+                                for k, v in measured.items()},
+    }
+    print(f"composed {plan.describe()}: loss {float(loss_c):.4f} "
+          f"(drift {composed['loss_drift_vs_seq_axis_1']:.2e})", flush=True)
+    for ax in sorted(set(predicted) | set(composed["measured_axis_bytes"])):
+        p_b = predicted.get(ax, 0.0)
+        m_b = composed["measured_axis_bytes"].get(ax, 0.0)
+        print(f"  axis {ax:>8}: predicted {p_b/1e3:.1f} KB, "
+              f"measured {m_b/1e3:.1f} KB", flush=True)
+
     report = {
         "config": {"model": cfg.name, "batch": batch_size,
                    "seq_len": seq_len, "devices": n_dev,
                    "kernel_mode": os.environ.get("REPRO_KERNEL_MODE",
                                                  "auto")},
         "points": points,
+        "composed": composed,
     }
     with open(OUT, "w") as f:
         json.dump(report, f, indent=2)
@@ -128,6 +184,9 @@ def main():
     losses = [p["loss"] for p in points]
     spread = max(losses) - min(losses)
     assert spread < 1e-4, f"loss drifts across seq sizes: {losses}"
+    assert composed["loss_drift_vs_seq_axis_1"] < 1e-4, composed
+    assert composed["measured_axis_bytes"].get("other", 0.0) == 0.0, \
+        f"collective off every plan axis: {composed['measured_axis_bytes']}"
 
 
 if __name__ == "__main__":

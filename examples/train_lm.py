@@ -80,6 +80,7 @@ def train_one(attn_mode: str, args) -> list:
                        log_every=max(args.steps // 10, 1),
                        install_signal_handlers=False,
                        context_parallel=args.context_parallel,
+                       model_parallel=args.model_parallel, fsdp=args.fsdp,
                        pack_sequences=args.pack),
             on_log=log)
     return res.history
@@ -97,6 +98,10 @@ def main():
     ap.add_argument("--skip-baseline", action="store_true")
     ap.add_argument("--context-parallel", type=int, default=1,
                     help="size of the seq mesh axis (1 = off)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="size of the model mesh axis (tensor parallelism)")
+    ap.add_argument("--fsdp", type=int, default=0,
+                    help="size of the data mesh axis (0 = auto, 1 = off)")
     ap.add_argument("--pack", action="store_true",
                     help="train on bin-packed ragged documents "
                          "(segment-aware attention, DESIGN.md §Packing)")

@@ -92,9 +92,11 @@ def segment_starts_from_ids(segment_ids: jax.Array) -> jax.Array:
     carry, but the carry is what a scan is continued *with* — identity for
     a fresh packed row (folding it is a no-op), a real state when a
     sequence-sharded or chunked caller seeds the row's first document with
-    its already-scanned prefix.  Computed *before* any sequence sharding:
-    a shard-local recomputation would see a false boundary at shard edges
-    (DESIGN.md §Packing).
+    its already-scanned prefix.  Single-device / per-shard use only: a
+    shard-local recomputation would see a false boundary at shard edges,
+    and the shifted compare must not span a sharded length dim — the cp
+    island uses ``distributed.context.segment_starts_sharded`` (a ppermute
+    halo) instead (DESIGN.md §Packing, §Parallelism).
     """
     prev = jnp.concatenate(
         [segment_ids[..., :1], segment_ids[..., :-1]], axis=-1)

@@ -17,10 +17,16 @@ independent with three per-position arrays (DESIGN.md §Packing):
   at every document start (RoPE rotates by these, so a packed document sees
   exactly the phases its unpacked twin would).
 
-``pack_documents`` is the offline greedy **first-fit** packer: each document
-goes into the first bin with room, opening a new bin when none fits.
-First-fit is within 1.7× of optimal bin count for any input and is
-deterministic in document order.  ``PackedLMIterator`` is the streaming twin
+``pack_documents`` is the offline packer with two strategies.  The default
+greedy **first-fit** puts each document in the first bin with room, opening
+a new bin when none fits — within 1.7× of optimal bin count for any input
+and deterministic in document order.  **best-fit-decreasing** sorts by
+descending length and places each document into the *fullest* bin that
+still fits (11/9·OPT + 6/9 guarantee); on the ~4:1 skewed mix the streaming
+pipeline draws, first-fit leaves ~19% tail padding that BFD reclaims by
+slotting the short tail documents into the gaps the long ones leave
+(regression-tested in ``tests/test_packing.py``).  ``PackedLMIterator`` is
+the streaming twin
 of ``SyntheticLMIterator`` — same per-global-row determinism contract (row
 ``r`` of batch ``i`` is a pure function of ``(seed, i, r)``, so any host
 partitioning reproduces the identical token stream) — drawing a ragged
@@ -34,16 +40,25 @@ import dataclasses
 import numpy as np
 
 
-def pack_documents(docs: list, seq_len: int) -> dict:
-    """Greedy first-fit pack of ragged token documents into (B, N) rows.
+def pack_documents(docs: list, seq_len: int,
+                   strategy: str = "first_fit") -> dict:
+    """Bin-pack ragged token documents into (B, N) rows.
 
     docs: list of 1-D int token arrays, each of length 1..seq_len (longer
     documents are the caller's problem — split or reject; silently
     truncating would corrupt the next-token targets).  Returns the batch
     dict {"tokens", "segment_ids", "positions", "loss_mask"} with B = the
-    number of bins first-fit opened.  ``loss_mask`` is 1.0 at real tokens
-    (the CE loss additionally drops cross-document boundary targets, see
-    ``models/lm.lm_loss``).
+    number of bins the strategy opened.  ``loss_mask`` is 1.0 at real
+    tokens (the CE loss additionally drops cross-document boundary targets,
+    see ``models/lm.lm_loss``).
+
+    strategy:
+      * ``"first_fit"`` (default) — placement in document order, first bin
+        with room.  Order-preserving and streaming-friendly.
+      * ``"best_fit_decreasing"`` — sort by descending length, place each
+        document into the fullest bin that still fits.  Tighter tails on
+        skewed length mixes (the 4:1 mix's ~19% first-fit tail padding
+        mostly disappears) at the cost of reordering documents across rows.
     """
     docs = [np.asarray(d).reshape(-1) for d in docs]
     for d in docs:
@@ -52,9 +67,28 @@ def pack_documents(docs: list, seq_len: int) -> dict:
         if d.size > seq_len:
             raise ValueError(
                 f"document of {d.size} tokens exceeds seq_len={seq_len}")
+    if strategy not in ("first_fit", "best_fit_decreasing"):
+        raise ValueError(f"unknown packing strategy {strategy!r}")
+    if strategy == "best_fit_decreasing":
+        # stable sort: equal-length documents keep their relative order,
+        # so the packing stays deterministic in document order.
+        docs = sorted(docs, key=lambda d: -d.size)
     bins: list[list[np.ndarray]] = []
     used: list[int] = []
     for d in docs:
+        if strategy == "best_fit_decreasing":
+            # fullest bin that still fits (max used => min leftover)
+            best, best_used = -1, -1
+            for i, u in enumerate(used):
+                if u + d.size <= seq_len and u > best_used:
+                    best, best_used = i, u
+            if best >= 0:
+                bins[best].append(d)
+                used[best] += d.size
+                continue
+            bins.append([d])
+            used.append(d.size)
+            continue
         for i, u in enumerate(used):
             if u + d.size <= seq_len:
                 bins[i].append(d)

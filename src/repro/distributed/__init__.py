@@ -7,6 +7,7 @@ from repro.distributed.context import (  # noqa: F401
     cp_aaren_prefix_attention,
     cp_flash_mha,
     current_cp,
+    mesh_plan_session,
     use_context_parallel,
 )
 from repro.distributed.grad import (  # noqa: F401

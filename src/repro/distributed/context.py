@@ -55,7 +55,6 @@ from repro.core.scan_attention import (
     make_empty_state,
     mask_to_identity,
     readout,
-    segment_starts_from_ids,
 )
 from repro.kernels import flash_attention as _kflash
 from repro.kernels import ops as kops
@@ -74,18 +73,32 @@ class ContextParallel:
     def size(self) -> int:
         return int(self.mesh.shape[self.axis])
 
-    def batch_axis(self, dim: int) -> str | None:
-        """Mesh axis for the leading batch dim inside the shard_map island.
+    def batch_axis(self, dim: int):
+        """Mesh axes for the leading batch dim inside the shard_map island.
 
-        Keeping the batch sharded over ``data`` (when present and divisible)
-        avoids an all-gather at the island boundary on combined data+context
-        parallel meshes; otherwise the batch dim rides along replicated.
+        Resolved through the sharding rules' ``"batch"`` entry — the same
+        priority/divisibility/joint-entry logic every other batch spec uses
+        — instead of a hard-coded ``"data"`` lookup, so batch sharding over
+        joint ``("pod", "data")`` meshes survives into the island and the
+        island boundary needs no all-gather on composed meshes.  The
+        ``seq`` axis itself is never eligible (it carries the length dim).
+        Returns a mesh-axis name, a tuple of names (joint entry), or None
+        (replicated).
         """
-        if "data" in self.mesh.axis_names:
-            dp = int(self.mesh.shape["data"])
-            if dp > 1 and dim % dp == 0:
-                return "data"
-        return None
+        from repro.sharding import (
+            ShardingRules, current_rules, spec_for_axes)
+
+        sr = current_rules()
+        if sr is None or sr.mesh is not self.mesh:
+            sr = ShardingRules(self.mesh)
+        spec = spec_for_axes(("batch",), (dim,), sr)
+        part = spec[0] if len(spec) else None
+        if part is None:
+            return None
+        names = (part,) if isinstance(part, str) else tuple(part)
+        if self.axis in names:
+            return None
+        return names[0] if len(names) == 1 else names
 
 
 _CTX = threading.local()
@@ -115,23 +128,48 @@ def use_context_parallel(cp: ContextParallel):
 
 
 @contextlib.contextmanager
-def context_parallel_session(seq: int):
-    """Build a host mesh with a ``seq`` axis and activate rules + dispatch.
+def mesh_plan_session(plan):
+    """Activate one composed mesh (rules + attention dispatch) from a plan.
 
-    The one-stop entry point for the training stack: constructs the mesh
-    (``launch.mesh.make_host_mesh``), installs the logical-axis sharding
-    rules (so ``constrain`` shards activation length dims over ``seq``) and
-    the context-parallel attention dispatch.  ``seq <= 1`` is a no-op scope.
+    The one-stop entry point for the training stack: builds the
+    ``pod × data × seq × model`` mesh from a :class:`repro.sharding.MeshPlan`,
+    installs the logical-axis sharding rules on it (so ``constrain`` shards
+    batch dims over ``data``/``pod``, length dims over ``seq``, and TP dims
+    over ``model``) and — when the plan carries a non-trivial ``seq`` axis —
+    the context-parallel attention dispatch *on that same ambient mesh*:
+    the shard_map islands' carry ppermutes ride ``seq`` while GSPMD keeps
+    the gradient psum on ``data``/``pod`` and the TP collectives on
+    ``model`` around them.  ``plan=None`` or an all-ones plan is a no-op
+    scope (no mesh, no dispatch).
+    """
+    if plan is None or plan.is_trivial:
+        yield None
+        return
+    from repro.sharding import ShardingRules, use_rules
+
+    mesh = plan.build_mesh()
+    sr = ShardingRules(mesh)
+    cp = ContextParallel(mesh)
+    with use_rules(sr), use_context_parallel(cp):
+        # cp.size == 1 keeps every cp_* entry point on its single-device
+        # fallback; installing the handle anyway keeps the session uniform.
+        yield cp
+
+
+@contextlib.contextmanager
+def context_parallel_session(seq: int):
+    """Back-compat wrapper: a plan whose only non-trivial axis is ``seq``.
+
+    Builds ``MeshPlan.host(seq=seq)`` (remaining devices soak into
+    ``data``) and delegates to :func:`mesh_plan_session`.  ``seq <= 1`` is
+    a no-op scope.
     """
     if seq <= 1:
         yield None
         return
-    from repro.launch.mesh import make_host_mesh
-    from repro.sharding import ShardingRules, use_rules
+    from repro.sharding import MeshPlan
 
-    mesh = make_host_mesh(context_parallel=seq)
-    cp = ContextParallel(mesh)
-    with use_rules(ShardingRules(mesh)), use_context_parallel(cp):
+    with mesh_plan_session(MeshPlan.host(seq=seq)) as cp:
         yield cp
 
 
@@ -248,6 +286,31 @@ def shard_total_segmented(s, v, starts):
     return shard_total(s_m, v_m), flag
 
 
+def segment_starts_sharded(seg, axis: str, axis_size: int):
+    """Per-shard segment-start flags with a 1-step ppermute halo.
+
+    The flags must reflect *global* neighbours — a shard-local shifted
+    compare would flag a false boundary wherever a document spans a shard
+    edge.  But computing them globally *outside* the island and letting
+    GSPMD partition the shifted compare is not safe either: on composed
+    (seq x model) meshes XLA's SPMD partitioner miscompiles the halo
+    exchange for a concatenate-shift feeding a shard_map, yielding garbage
+    flags (spurious starts at arbitrary positions).  So the shift is done
+    here, inside the island, with an explicit collective we own: each rank
+    fetches the left neighbour's last id via ppermute and compares against
+    that; rank 0 compares position 0 against itself (position 0 is never a
+    start — the incoming carry seeds it, see
+    ``segment_starts_from_ids``).
+    """
+    last = seg[..., -1:]
+    perm = [(i, i + 1) for i in range(axis_size - 1)]
+    recv = jax.lax.ppermute(last, axis, perm)
+    idx = jax.lax.axis_index(axis)
+    left = jnp.where(idx == 0, seg[..., :1], recv)
+    prev = jnp.concatenate([left, seg[..., :-1]], axis=-1)
+    return ((seg != prev) & (seg != 0)).astype(jnp.int32)
+
+
 def device_exclusive_scan_segmented(total: ScanState, flag, axis: str,
                                     axis_size: int):
     """Exclusive cross-device prefix scan under the *segmented* ⊕.
@@ -297,7 +360,7 @@ def _cp_scan_forward(s, v, m0, u0, w0, axis, axis_size):
     return o, fin.m, fin.u, fin.w
 
 
-def _cp_scan_forward_segmented(s, v, m0, u0, w0, starts, axis, axis_size):
+def _cp_scan_forward_segmented(s, v, m0, u0, w0, seg, axis, axis_size):
     """Segmented per-shard forward (packed sequences, DESIGN.md §Packing).
 
     Resets stay *local to each shard's fused scan* — the only cross-device
@@ -305,13 +368,14 @@ def _cp_scan_forward_segmented(s, v, m0, u0, w0, starts, axis, axis_size):
     contribution is its ⊕-total since its last internal reset plus a
     has-reset flag, so a document spanning a shard boundary is seeded by
     exactly its own prefix and a boundary inside an earlier shard cuts the
-    chain.  ``starts`` holds *globally computed* start flags (shard-local
-    recomputation would flag a false boundary at every shard edge — the
-    wrapper computes them once outside the shard_map).  The incoming carry
-    folds only into shards before the first global reset; the final carry
-    is the segmented fold of all shards = the last document's state.
+    chain.  ``seg`` holds the (sharded) segment ids; the start flags are
+    derived in-island by :func:`segment_starts_sharded`, whose ppermute
+    halo gives each shard its true global left neighbour.  The incoming
+    carry folds only into shards before the first global reset; the final
+    carry is the segmented fold of all shards = the last document's state.
     """
     carry0 = ScanState(m=m0, u=u0, w=w0)
+    starts = segment_starts_sharded(seg, axis, axis_size)
     total, flag = shard_total_segmented(s, v, starts)
     prefix, pre_flag = device_exclusive_scan_segmented(
         total, flag, axis, axis_size)
@@ -333,25 +397,24 @@ def _make_cp_scan_core(axis: str, axis_size: int, segmented: bool = False):
     """Build the custom-VJP per-shard op for one (axis, size) pair."""
 
     if segmented:
-        def fwd_fn(s, v, m0, u0, w0, starts):
-            return _cp_scan_forward_segmented(s, v, m0, u0, w0, starts,
+        def fwd_fn(s, v, m0, u0, w0, seg):
+            return _cp_scan_forward_segmented(s, v, m0, u0, w0, seg,
                                               axis, axis_size)
 
         @jax.custom_vjp
-        def core(s, v, m0, u0, w0, starts):
-            return fwd_fn(s, v, m0, u0, w0, starts)
+        def core(s, v, m0, u0, w0, seg):
+            return fwd_fn(s, v, m0, u0, w0, seg)
 
-        def core_fwd(s, v, m0, u0, w0, starts):
-            return fwd_fn(s, v, m0, u0, w0, starts), (s, v, m0, u0, w0,
-                                                      starts)
+        def core_fwd(s, v, m0, u0, w0, seg):
+            return fwd_fn(s, v, m0, u0, w0, seg), (s, v, m0, u0, w0, seg)
 
         def core_bwd(res, g):
-            s, v, m0, u0, w0, starts = res
+            s, v, m0, u0, w0, seg = res
             _, vjp = jax.vjp(
-                lambda s_, v_, m_, u_, w_: fwd_fn(s_, v_, m_, u_, w_, starts),
+                lambda s_, v_, m_, u_, w_: fwd_fn(s_, v_, m_, u_, w_, seg),
                 s, v, m0, u0, w0)
             return (*vjp(g),
-                    np.zeros(np.shape(starts), jax.dtypes.float0))
+                    np.zeros(np.shape(seg), jax.dtypes.float0))
 
         core.defvjp(core_fwd, core_bwd)
         return core
@@ -394,9 +457,11 @@ def cp_aaren_prefix_attention(
     leaves (contributing nothing to outputs or the final carry) and sliced
     off.  ``segment_ids`` (packed sequences; shape (..., N) or missing one
     leading dim, broadcast over it): resets are local to each shard's scan
-    and the carry exchange runs under the segmented ⊕ — start flags are
-    computed *globally here*, before sharding, so a document spanning a
-    shard boundary is never falsely reset (DESIGN.md §Packing).  Falls
+    and the carry exchange runs under the segmented ⊕ — the ids ship into
+    the island sharded and start flags are derived there with a ppermute
+    halo (:func:`segment_starts_sharded`), so a document spanning a shard
+    boundary is never falsely reset and the shifted compare never crosses
+    the SPMD partitioner (DESIGN.md §Packing).  Falls
     back to the single-device fused op when no session is active.  Returns
     (o: (..., N, d), replicated global final ScanState).
     """
@@ -411,7 +476,7 @@ def cp_aaren_prefix_attention(
         carry = make_empty_state(batch_shape, d)
     s32 = s.astype(jnp.float32)
     v32 = v.astype(jnp.float32)
-    starts = None
+    seg = None
     if segment_ids is not None:
         seg = jnp.asarray(segment_ids, jnp.int32)
         if seg.ndim == s32.ndim - 1:  # e.g. (B, N) vs (B, H, N)
@@ -420,7 +485,6 @@ def cp_aaren_prefix_attention(
         # Padding (id 0) -> ⊕-identity leaves; outputs there pinned to 0
         # after the island (the kops empty-row convention).
         s32, v32 = mask_to_identity(s32, v32, seg != 0)
-        starts = segment_starts_from_ids(seg).astype(jnp.int32)
     # Arbitrary N: pad the sequence dim up to the seq-axis multiple with
     # ⊕-identity leaves (s = NEG_INF, v = 0) — they contribute nothing to
     # any prefix or to the global final carry — and slice the tail off
@@ -431,8 +495,8 @@ def cp_aaren_prefix_attention(
         widths[-1] = (0, n_pad - n)
         s32 = jnp.pad(s32, widths, constant_values=NEG_INF)
         v32 = jnp.pad(v32, [*widths, (0, 0)])
-        if starts is not None:
-            starts = jnp.pad(starts, widths)
+        if seg is not None:
+            seg = jnp.pad(seg, widths)  # pad id 0: never a start
     m0 = carry.m.astype(jnp.float32)
     u0 = carry.u.astype(jnp.float32)
     w0 = carry.w.astype(jnp.float32)
@@ -445,17 +509,17 @@ def cp_aaren_prefix_attention(
     out_specs = (P(*lead, cp.axis, None),   # o
                  P(*lead), P(*lead), P(*lead, None))
     operands = [s32, v32, m0, u0, w0]
-    if starts is not None:
-        in_specs = in_specs + (P(*lead, cp.axis),)   # starts: sharded like s
-        operands.append(starts)
+    if seg is not None:
+        in_specs = in_specs + (P(*lead, cp.axis),)   # seg ids: sharded like s
+        operands.append(seg)
     fn = shard_map(
-        _make_cp_scan_core(cp.axis, cp.size, segmented=starts is not None),
+        _make_cp_scan_core(cp.axis, cp.size, segmented=seg is not None),
         mesh=cp.mesh, in_specs=in_specs, out_specs=out_specs,
         check_rep=False)
     o, m_f, u_f, w_f = fn(*operands)
     o = o[..., :n, :]
-    if segment_ids is not None:
-        o = jnp.where((seg != 0)[..., None], o, 0.0)
+    if seg is not None:
+        o = jnp.where((seg[..., :n] != 0)[..., None], o, 0.0)
     return o.astype(v.dtype), ScanState(m=m_f, u=u_f, w=w_f)
 
 

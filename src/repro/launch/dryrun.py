@@ -48,9 +48,11 @@ from repro.models import blocks
 from repro.models.factory import build, input_axes, input_specs
 from repro.models.param import count_params
 from repro.roofline.analysis import (
-    collective_bytes, model_flops, roofline_report)
+    collective_bytes, collective_bytes_by_axis, model_flops,
+    predict_axis_exchange, roofline_report)
 from repro.sharding import (
-    ShardingRules, param_shardings, spec_for_axes, use_rules)
+    MeshPlan, ShardingRules, param_shardings, plan_from_mesh, spec_for_axes,
+    use_rules)
 from repro.train.optim import make_optimizer, opt_param_specs, warmup_cosine
 from repro.train.state import abstract_train_state, make_train_step
 
@@ -194,16 +196,23 @@ def _probe_cfg(cfg, n_layers: int):
     return cfg.replace(**kw)
 
 
-def _analyze(compiled):
+def _analyze(compiled, mesh_shape=None):
     cost = compiled.cost_analysis() or {}
-    coll = collective_bytes(compiled.as_text())
+    text = compiled.as_text()
+    coll = collective_bytes(text)
     wire = sum(v for k, v in coll.items() if k != "n_ops")
-    return {
+    out = {
         "flops": float(cost.get("flops", 0.0)),
         "bytes": float(cost.get("bytes accessed", 0.0)),
         "wire": wire,
         "coll": coll,
     }
+    if mesh_shape is not None:
+        out["by_axis"] = {
+            label: d["total"]
+            for label, d in collective_bytes_by_axis(text, mesh_shape).items()
+        }
+    return out
 
 
 def _opt_cost(cfg, params_bytes_pc: int, opt_bytes_pc: int,
@@ -227,10 +236,16 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              attn_mode: str = "aaren", verbose: bool = True,
              probes: bool = True, cfg_overrides: dict | None = None,
              rules_override: dict | None = None,
-             grad_compression: str = "none") -> dict:
+             grad_compression: str = "none",
+             context_parallel: int = 1, model_parallel: int = 16,
+             data_plane: int = 16, plan: MeshPlan | None = None) -> dict:
     cfg = get_config(arch, attn_mode=attn_mode, **(cfg_overrides or {}))
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if plan is None:
+        plan = MeshPlan.production(
+            multi_pod=multi_pod, context_parallel=context_parallel,
+            data_plane=data_plane, model=model_parallel)
+    mesh = make_production_mesh(plan=plan)
     if rules_override:
         from repro.sharding.rules import DEFAULT_RULES
 
@@ -239,8 +254,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         sr = ShardingRules(mesh, rules)
     else:
         sr = ShardingRules(mesh)
-    mesh_name = "2x16x16" if multi_pod else "16x16"
-    n_chips = int(np.prod(list(mesh.shape.values())))
+    mesh_name = plan.describe()
+    mesh_shape = dict(mesh.shape)
+    n_chips = plan.total
     period = len(cfg.pattern)
 
     # ---- 1. full lowering: compile + memory proof -------------------------
@@ -274,11 +290,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         c1 = _analyze(_lower(_probe_cfg(cfg, period), shape, sr,
                              batch=probe_batch, n_microbatches=1,
                              with_optimizer=False,
-                             grad_compression=grad_compression)[0].compile())
+                             grad_compression=grad_compression)[0].compile(),
+                      mesh_shape)
         c2 = _analyze(_lower(_probe_cfg(cfg, 2 * period), shape, sr,
                              batch=probe_batch, n_microbatches=1,
                              with_optimizer=False,
-                             grad_compression=grad_compression)[0].compile())
+                             grad_compression=grad_compression)[0].compile(),
+                      mesh_shape)
         scale = {}
         for k in ("flops", "bytes", "wire"):
             per_layer = max(c2[k] - c1[k], 0.0) / period
@@ -292,6 +310,14 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             per_layer = max(c2["coll"][k] - c1["coll"][k], 0.0) / period
             coll_scaled[k] = (c1["coll"][k]
                               + per_layer * (n_layers - period)) * mb
+        # per-mesh-axis wire bytes, probe-scaled the same way (composed-mesh
+        # accounting: which axis carries the traffic, DESIGN.md §Parallelism)
+        wire_by_axis = {}
+        for label in set(c1["by_axis"]) | set(c2["by_axis"]):
+            a1 = c1["by_axis"].get(label, 0.0)
+            a2 = c2["by_axis"].get(label, 0.0)
+            per_layer = max(a2 - a1, 0.0) / period
+            wire_by_axis[label] = (a1 + per_layer * (n_layers - period)) * mb
         if shape.kind == "train":
             params_bytes_pc = _sharded_bytes(ex["api"].abstract(),
                                              ex["pshard"])
@@ -302,8 +328,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             for k in ("flops", "bytes", "wire"):
                 scale[k] += oc[k]
     else:
-        scale = _analyze(compiled)
+        scale = _analyze(compiled, mesh_shape)
         coll_scaled = scale.pop("coll")
+        wire_by_axis = scale.pop("by_axis")
 
     # ---- 3. roofline -------------------------------------------------------
     n_tokens = shape.global_batch * (
@@ -326,6 +353,16 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         floor = params_pc + (state_bytes - params_pc) * 2
     rep.memory_floor_s = floor / 819e9
 
+    # predicted per-axis exchange volume for the composed plan (the roofline
+    # side of the measured wire_by_axis attribution)
+    predicted_exchange = predict_axis_exchange(
+        plan, batch=shape.global_batch, seq_len=shape.seq_len,
+        n_heads=cfg.n_heads, head_dim=cfg.resolved_head_dim,
+        d_model=cfg.d_model, n_layers=cfg.n_layers,
+        param_bytes=4 * sum(int(np.prod(s.shape))
+                            for s in jax.tree.leaves(ex["api"].abstract())),
+        attn_mode=attn_mode, train=shape.kind == "train")
+
     result = rep.row()
     result.update(
         attn_mode=attn_mode, compile_s=round(compile_s, 1),
@@ -334,6 +371,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         n_microbatches=mb,
         memory_analysis=str(mem) if mem is not None else None,
         collectives=coll_scaled,
+        wire_bytes_by_axis=wire_by_axis,
+        predicted_exchange_bytes=predicted_exchange,
     )
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} x {mesh_name} "
@@ -350,6 +389,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
               f"collective={rep.collective_s*1e3:.2f}ms "
               f"-> {rep.dominant}-bound; useful-flops "
               f"{rep.useful_flops_frac:.2f}; mfu-bound {rep.mfu:.3f}")
+        if wire_by_axis:
+            axes_s = " ".join(f"{k}={v:.3e}" for k, v in
+                              sorted(wire_by_axis.items()))
+            pred_s = " ".join(f"{k}={v:.3e}" for k, v in
+                              sorted(predicted_exchange.items()))
+            print(f"  wire by axis: {axes_s}")
+            print(f"  predicted exchange: {pred_s or '(trivial plan)'}")
     return result
 
 
@@ -361,6 +407,14 @@ def main():
                     choices=["single", "multi", "both"])
     ap.add_argument("--attn-mode", default="aaren",
                     choices=["aaren", "softmax"])
+    ap.add_argument("--context-parallel", type=int, default=1,
+                    help="seq-axis width, carved out of the data plane "
+                         "(must divide --data-plane)")
+    ap.add_argument("--model-parallel", type=int, default=16,
+                    help="model-axis width (tensor/expert parallelism)")
+    ap.add_argument("--data-plane", type=int, default=16,
+                    help="width of the data-parallel plane the seq axis is "
+                         "carved from")
     ap.add_argument("--no-probes", action="store_true",
                     help="skip the unrolled cost probes (compile check only)")
     ap.add_argument("--out", default=None, help="JSON output path")
@@ -386,7 +440,10 @@ def main():
                 try:
                     res = run_cell(
                         arch, shape, multi_pod=mp, attn_mode=args.attn_mode,
-                        probes=not args.no_probes)
+                        probes=not args.no_probes,
+                        context_parallel=args.context_parallel,
+                        model_parallel=args.model_parallel,
+                        data_plane=args.data_plane)
                     results.append(res)
                     if jsonl:
                         jsonl.write(json.dumps(res) + "\n")

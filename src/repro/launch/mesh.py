@@ -1,10 +1,16 @@
-"""Production mesh construction.
+"""Mesh construction from a MeshPlan.
 
-A *function*, not a module-level constant, so importing this module never
+Functions, not module-level constants, so importing this module never
 touches jax device state (device count is locked at first jax init; the
 dry-run sets XLA_FLAGS before any import).
 
-Axes are logical roles (DESIGN.md §6):
+All shapes derive from :class:`repro.sharding.MeshPlan` — the one
+description of the ``pod × data × seq × model`` layout that
+``distributed/context.py``, ``train/loop.py`` and ``launch/dryrun.py``
+consume (DESIGN.md §Parallelism).  The old hard-coded 16-wide planes are
+now just the production plan's defaults.
+
+Axes are logical roles:
 
 * ``pod``   — data parallelism across pods over DCN (slowest links);
 * ``data``  — intra-pod FSDP: batch sharding + ZeRO-style weight sharding;
@@ -14,40 +20,40 @@ Axes are logical roles (DESIGN.md §6):
   latency-sensitive, so they ride the same ICI links as FSDP traffic;
 * ``model`` — tensor/expert parallelism on the fastest ICI links.
 
-``context_parallel=1`` keeps a size-1 ``seq`` axis in the mesh: the sharding
-rules then resolve ``seq``-named dims to a no-op sharding and every
-downstream spec stays mesh-shape independent.
+Size-1 axes stay in the mesh (``pod`` excepted): the sharding rules then
+resolve their logical names to a no-op sharding and every downstream spec
+stays mesh-shape independent.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.sharding.plan import MeshPlan
 
 
-def make_production_mesh(*, multi_pod: bool = False, context_parallel: int = 1):
-    cp = context_parallel
-    if 16 % cp:
-        raise ValueError(f"context_parallel={cp} must divide the 16-wide "
-                         "data plane")
-    if multi_pod:
-        shape = (2, 16 // cp, cp, 16)
-        axes = ("pod", "data", "seq", "model")
-    else:
-        shape = (16 // cp, cp, 16)
-        axes = ("data", "seq", "model")
-    import numpy as np
+def make_production_mesh(*, multi_pod: bool = False, context_parallel: int = 1,
+                         model_parallel: int = 16, data_plane: int = 16,
+                         plan: MeshPlan | None = None):
+    """The dry-run cells' mesh, derived from a production plan.
 
-    n = int(np.prod(shape))
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+    Defaults reproduce the historical shapes exactly — ``16 × 16``
+    (data × model, with a size-1 ``seq``) and ``2 × 16 × 16`` multi-pod —
+    but every width is now a knob, and an explicit ``plan`` overrides them
+    all.
+    """
+    if plan is None:
+        plan = MeshPlan.production(
+            multi_pod=multi_pod, context_parallel=context_parallel,
+            data_plane=data_plane, model=model_parallel)
+    return plan.build_mesh()
 
 
-def make_host_mesh(model_parallel: int = 1, context_parallel: int = 1):
-    """Mesh over whatever devices exist (tests / single-host examples)."""
-    n = len(jax.devices())
-    denom = model_parallel * context_parallel
-    if n % denom:
-        raise ValueError(
-            f"{n} devices not divisible by model_parallel={model_parallel} "
-            f"x context_parallel={context_parallel}")
-    return jax.make_mesh((n // denom, context_parallel, model_parallel),
-                         ("data", "seq", "model"))
+def make_host_mesh(model_parallel: int = 1, context_parallel: int = 1,
+                   data_parallel: int | None = None):
+    """Mesh over whatever devices exist (tests / single-host examples).
+
+    ``data_parallel=None`` soaks up the remaining devices:
+    ``data = n // (model_parallel · context_parallel)`` (must divide).
+    """
+    plan = MeshPlan.host(data=data_parallel, seq=context_parallel,
+                         model=model_parallel)
+    return plan.build_mesh()

@@ -41,6 +41,15 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "bf16", "int8"])
+    ap.add_argument("--context-parallel", type=int, default=1,
+                    help="size of the seq mesh axis (sequence sharding; "
+                         "1 = off)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="size of the model mesh axis (tensor parallelism; "
+                         "1 = off)")
+    ap.add_argument("--fsdp", type=int, default=0,
+                    help="size of the data mesh axis (batch + ZeRO weight "
+                         "sharding); 0 = auto (remaining devices), 1 = off")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
@@ -86,7 +95,9 @@ def main():
     loop_cfg = LoopConfig(
         total_steps=args.steps, ckpt_dir=args.ckpt_dir,
         save_every=args.save_every, log_every=max(args.steps // 20, 1),
-        seed=args.seed, guard=args.guard)
+        seed=args.seed, guard=args.guard,
+        context_parallel=args.context_parallel,
+        model_parallel=args.model_parallel, fsdp=args.fsdp)
 
     def on_log(step, m):
         guard_s = (f" lr_scale={m['guard_lr_scale']:.3f}"

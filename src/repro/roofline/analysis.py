@@ -50,6 +50,12 @@ _COLLECTIVE_RE = re.compile(
     r"(?:-start)?\(")
 _GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# full-group parsers (per-axis attribution): explicit list and iota forms
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[0-9,{} ]+\})\}")
+_GROUPS_IOTA_FULL_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+# collective-permute source-target pairs: {{0,1},{1,2},...}
+_ST_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
@@ -62,12 +68,22 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES[dtype]
 
 
-def collective_bytes(hlo_text: str) -> dict[str, float]:
-    """Wire bytes per collective family from (partitioned) HLO text."""
-    out: dict[str, float] = {
-        "all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
-        "all-to-all": 0.0, "collective-permute": 0.0, "n_ops": 0,
-    }
+def _wire_cost(kind: str, nbytes: int, k: int) -> float:
+    """Ring-algorithm wire bytes for one collective (per chip)."""
+    frac = (k - 1) / k if k > 1 else 0.0
+    if kind == "all-reduce":
+        return 2.0 * frac * nbytes
+    if kind == "all-gather":
+        return frac * nbytes                  # result is the gathered tensor
+    if kind == "reduce-scatter":
+        return frac * nbytes * k              # operand = k × result
+    if kind == "all-to-all":
+        return frac * nbytes
+    return float(nbytes)                      # collective-permute
+
+
+def _iter_collectives(hlo_text: str):
+    """Yield (kind, result_bytes, line) for every collective in the HLO."""
     for line in hlo_text.splitlines():
         m = _COLLECTIVE_RE.search(line)
         if not m:
@@ -76,19 +92,17 @@ def collective_bytes(hlo_text: str) -> dict[str, float]:
         nbytes = _shape_bytes(dtype, dims)
         if nbytes == 0:
             continue
-        k = _group_size(line)
-        frac = (k - 1) / k if k > 1 else 0.0
-        if kind == "all-reduce":
-            wire = 2.0 * frac * nbytes
-        elif kind == "all-gather":
-            wire = frac * nbytes              # result is the gathered tensor
-        elif kind == "reduce-scatter":
-            wire = frac * nbytes * k          # operand = k × result
-        elif kind == "all-to-all":
-            wire = frac * nbytes
-        else:  # collective-permute
-            wire = float(nbytes)
-        out[kind] += wire
+        yield kind, nbytes, line
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Wire bytes per collective family from (partitioned) HLO text."""
+    out: dict[str, float] = {
+        "all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+        "all-to-all": 0.0, "collective-permute": 0.0, "n_ops": 0,
+    }
+    for kind, nbytes, line in _iter_collectives(hlo_text):
+        out[kind] += _wire_cost(kind, nbytes, _group_size(line))
         out["n_ops"] += 1
     return out
 
@@ -101,6 +115,186 @@ def _group_size(line: str) -> int:
     if m:
         return len(m.group(1).split(","))
     return 2
+
+
+# ---------------------------------------------------------------------------
+# Per-mesh-axis attribution (composed meshes, DESIGN.md §Parallelism)
+# ---------------------------------------------------------------------------
+
+
+def _parse_replica_groups(line: str):
+    """All replica groups on a line as id tuples; None if unparseable.
+
+    Handles both HLO forms: the iota ``[n,k]<=[dims]T(perm)`` encoding
+    (reshape-transpose-reshape of ``iota(prod dims)``) and the explicit
+    ``{{0,1},{2,3}}`` list.
+    """
+    m = _GROUPS_IOTA_FULL_RE.search(line)
+    if m:
+        n, k = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+        return [tuple(int(x) for x in g) for g in ids.reshape(n, k)]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        groups = []
+        for part in m.group(1).split("},"):
+            nums = [int(x) for x in part.strip("{} ").split(",")
+                    if x.strip()]
+            if nums:
+                groups.append(tuple(nums))
+        return groups or None
+    return None
+
+
+def mesh_axis_partitions(mesh_shape: dict) -> dict[str, frozenset]:
+    """Device-id partition induced by every mesh-axis combination.
+
+    ``mesh_shape``: ordered ``{axis: size}`` (``dict(mesh.shape)`` keeps jax's
+    axis order; flat device id = row-major index, matching GSPMD's default
+    device assignment).  Returns ``{label: partition}`` where a partition is
+    a frozenset of frozenset groups — devices varying over the combo's axes
+    with every other coordinate fixed.  Labels are ``"seq"``,
+    ``"pod+data"``, …; combos whose joint size is 1 are skipped (their
+    singleton partition carries no traffic and would alias every size-1
+    label).  When several combos induce the same partition (size-1 axes in
+    the combo), the fewest-axis label wins.
+    """
+    from itertools import combinations
+
+    names = list(mesh_shape)
+    dims = [int(mesh_shape[n]) for n in names]
+    ids = np.arange(int(np.prod(dims))).reshape(dims)
+    out: dict[str, frozenset] = {}
+    seen: dict[frozenset, str] = {}
+    for r in range(1, len(names) + 1):
+        for combo in combinations(range(len(names)), r):
+            size = int(np.prod([dims[i] for i in combo]))
+            if size == 1:
+                continue
+            rest = [i for i in range(len(names)) if i not in combo]
+            mat = ids.transpose(rest + list(combo)).reshape(-1, size)
+            part = frozenset(frozenset(int(x) for x in g) for g in mat)
+            if part not in seen:
+                label = "+".join(names[i] for i in combo)
+                seen[part] = label
+                out[label] = part
+    return out
+
+
+def _permute_axes(line: str, mesh_shape: dict) -> str | None:
+    """Mesh axes a collective-permute's source→target pairs move along."""
+    m = _ST_PAIRS_RE.search(line)
+    if not m:
+        return None
+    pairs = [tuple(int(x) for x in p.split(","))
+             for p in m.group(1).strip("{}").split("},{")]
+    names = list(mesh_shape)
+    dims = [int(mesh_shape[n]) for n in names]
+    changed: set[str] = set()
+    for s, t in pairs:
+        cs = np.unravel_index(s, dims)
+        ct = np.unravel_index(t, dims)
+        changed.update(names[i] for i in range(len(dims))
+                       if cs[i] != ct[i])
+    return "+".join(n for n in names if n in changed) or None
+
+
+def collective_bytes_by_axis(hlo_text: str, mesh_shape: dict) -> dict:
+    """Wire bytes per chip, attributed to the mesh axis each collective
+    rides (composed-mesh accounting, DESIGN.md §Parallelism).
+
+    Returns ``{label: {family: bytes, "total": bytes}}`` with labels from
+    :func:`mesh_axis_partitions` (``"seq"``, ``"data"``, ``"pod+data"``, …)
+    plus ``"other"`` for groups matching no axis combination (e.g. a
+    collective over a proper subset of an axis — none are emitted by the
+    current lowering, so nonzero ``"other"`` is a red flag worth chasing).
+    """
+    part_to_label = {p: lab
+                     for lab, p in mesh_axis_partitions(mesh_shape).items()}
+    out: dict[str, dict[str, float]] = {}
+
+    def add(label: str, kind: str, wire: float):
+        d = out.setdefault(label, {"total": 0.0})
+        d[kind] = d.get(kind, 0.0) + wire
+        d["total"] += wire
+
+    for kind, nbytes, line in _iter_collectives(hlo_text):
+        if kind == "collective-permute":
+            label = _permute_axes(line, mesh_shape) or "other"
+            add(label, kind, _wire_cost(kind, nbytes, 2))
+            continue
+        groups = _parse_replica_groups(line)
+        if groups is None:
+            add("other", kind, _wire_cost(kind, nbytes, _group_size(line)))
+            continue
+        k = max(len(g) for g in groups)
+        if k <= 1:
+            continue                       # trivial groups: no wire traffic
+        part = frozenset(frozenset(g) for g in groups)
+        add(part_to_label.get(part, "other"), kind,
+            _wire_cost(kind, nbytes, k))
+    return out
+
+
+def predict_axis_exchange(plan, *, batch: int, seq_len: int, n_heads: int,
+                          head_dim: int, d_model: int, n_layers: int,
+                          param_bytes: int, attn_mode: str = "aaren",
+                          dtype_bytes: int = 4, train: bool = True) -> dict:
+    """Analytic per-axis wire bytes per chip per step for a composed plan.
+
+    The static collective-count model (DESIGN.md §Parallelism):
+
+    * ``seq`` — scan mode: per layer, ``R = 1 + ⌈log₂P⌉`` ppermute rounds of
+      one ``(m, u, w)`` carry (``rows·(head_dim+2)`` f32 with ``rows`` the
+      *local* B·H) + the final-carry all_gather (``(P−1)·rows·(head_dim+2)``).
+      Softmax mode: ``P−1`` ring steps each moving the local K/V shard.
+      Training triples the forward count: the custom-VJP backward re-runs
+      the forward (linearisation) and then transposes it (mirrored
+      exchange).
+    * ``model`` — 2 residual-block psums per layer (attn out-proj + FFN
+      down-proj partial sums), doubled for the backward.
+    * grad sync — one 2·(k−1)/k all-reduce of the f32 gradients over the
+      full data-parallel plane (``data`` or joint ``pod+data``), plus ~2
+      parameter all-gathers (fwd+bwd) when FSDP shards the weights.
+
+    Predictions are collective-count × payload, not a simulation: XLA may
+    fuse, reorder, or CSE exchanges, so treat ratios vs
+    :func:`collective_bytes_by_axis` as calibration, not ground truth.
+    Returns ``{label: bytes}`` for the plan's non-trivial axes.
+    """
+    out: dict[str, float] = {}
+    dp = plan.pod * plan.data
+    b_local = max(batch // max(dp, 1), 1)
+    bwd = 3.0 if train else 1.0            # fwd + re-linearise + transpose
+
+    p = plan.seq
+    if p > 1:
+        n_local = seq_len // p
+        if attn_mode == "aaren":
+            rows = b_local * n_heads
+            carry = rows * (head_dim + 2) * dtype_bytes
+            per_layer = (plan.exchange_rounds() + (p - 1)) * carry
+        else:                              # ring flash: K/V rotate
+            kv = 2 * b_local * n_local * n_heads * head_dim * dtype_bytes
+            per_layer = (p - 1) * kv
+        out["seq"] = bwd * n_layers * per_layer
+
+    k = plan.model
+    if k > 1:
+        act = b_local * (seq_len // max(p, 1)) * d_model * dtype_bytes
+        psums = 2 * n_layers * (2 if train else 1)
+        out["model"] = psums * _wire_cost("all-reduce", act, k)
+
+    if dp > 1:
+        label = "pod+data" if plan.pod > 1 else "data"
+        grad = _wire_cost("all-reduce", param_bytes, dp)
+        gathers = (2.0 * _wire_cost("all-gather", param_bytes, dp)
+                   if train else 0.0)
+        out[label] = grad + gathers
+    return out
 
 
 def model_flops(n_params: int, n_tokens: int, kind: str,

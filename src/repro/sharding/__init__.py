@@ -1,7 +1,14 @@
-"""Logical-axis sharding: one rule table drives params + activations."""
+"""Logical-axis sharding: one rule table drives params + activations,
+one MeshPlan drives every mesh (launch, distributed, train)."""
 
+from repro.sharding.plan import (  # noqa: F401
+    MeshPlan,
+    plan_from_mesh,
+)
 from repro.sharding.rules import (  # noqa: F401
+    CANONICAL_TENSORS,
     DEFAULT_RULES,
+    KNOWN_MESH_AXES,
     MULTIPOD_RULES,
     ShardingRules,
     constrain,
@@ -9,5 +16,6 @@ from repro.sharding.rules import (  # noqa: F401
     param_shardings,
     spec_for_axes,
     use_rules,
+    validate_composition,
     validate_rules,
 )

@@ -70,6 +70,30 @@ DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
 MULTIPOD_RULES = DEFAULT_RULES
 
 
+# The four logical mesh-axis roles a plan can carry (sharding/plan.py);
+# rule entries naming anything else are typos, caught at validation time.
+KNOWN_MESH_AXES = ("pod", "data", "seq", "model")
+
+# Canonical per-tensor logical-axis tuples used by the composed-case
+# validator: representative parameter and activation layouts actually
+# constrained/declared by the model stack.  ``validate_composition``
+# simulates first-fit rule resolution over each (with perfectly divisible
+# dims) and reports dims that end up replicated only because an earlier dim
+# of the same tensor consumed every candidate axis — e.g. ``heads`` taking
+# ``model`` so a same-tensor ``act_heads`` silently replicates.
+CANONICAL_TENSORS: tuple[tuple, ...] = (
+    ("embed", "mlp"),                      # FFN weight: FSDP x TP
+    ("embed", "heads", "head_dim"),        # q projection
+    ("embed", "kv_heads", "head_dim"),     # k/v projection (GQA fallback)
+    ("heads", "head_dim", "embed"),        # out projection
+    ("vocab", "embed"),                    # embed/unembed
+    ("experts", "embed", "moe_mlp"),       # per-expert FFN
+    ("batch", "seq", "act_embed"),         # residual stream
+    ("batch", "seq", "act_heads", "head_dim"),   # per-head activations
+    ("batch", "seq", "act_vocab"),         # logits
+)
+
+
 def validate_rules(rules: dict) -> None:
     """Structural sanity check: every rule is a tuple of tuples of names.
 
@@ -93,6 +117,69 @@ def validate_rules(rules: dict) -> None:
 
 
 validate_rules(DEFAULT_RULES)
+
+
+def validate_composition(rules: dict, mesh_axes,
+                         tensors: tuple = CANONICAL_TENSORS) -> list:
+    """Composed-mesh sanity check: typos raise, consumption conflicts report.
+
+    ``mesh_axes``: the axis names of the mesh the table will run against
+    (e.g. ``("data", "seq", "model")`` or a :class:`MeshPlan`'s
+    ``axis_names``).  Two classes of findings:
+
+    * **hard errors** (raise ``ValueError``): a rule entry naming a mesh
+      axis outside :data:`KNOWN_MESH_AXES` — on a composed mesh that entry
+      can never match and the dim silently replicates forever;
+    * **conflicts** (returned): for each canonical tensor, a dim whose
+      every candidate entry is either absent from this mesh or already
+      consumed by an earlier dim of the same tensor.  These are the
+      composed cases the single-axis meshes never exercised — ``heads``
+      landing on ``model`` starves a same-tensor ``act_heads``; a joint
+      ``("pod", "data")`` batch consumes ``data`` ahead of an ``act_data``
+      dim.  Divisibility is assumed perfect (every dim divisible by every
+      axis), so a reported conflict is structural, not shape-dependent.
+
+    Returns a list of ``{"tensor", "dim", "starved_by"}`` findings (empty =
+    clean).  Callers decide whether a conflict is fatal; the shipped table
+    has exactly one *documented* conflict on model-carrying meshes — the
+    per-expert FFN's ``moe_mlp`` starved by ``experts`` (expert parallelism
+    wins the ``model`` axis; the hidden dim rides replicated) — pinned by
+    tests/test_sharding.py so any new conflict fails loudly.
+    """
+    validate_rules(rules)
+    mesh_axes = tuple(mesh_axes)
+    for name, entries in rules.items():
+        for e in entries:
+            for a in _normalize(e):
+                if a not in KNOWN_MESH_AXES:
+                    raise ValueError(
+                        f"rule {name!r}: entry {e!r} names unknown mesh "
+                        f"axis {a!r} (known: {KNOWN_MESH_AXES})")
+    findings = []
+    for axes in tensors:
+        used: dict[str, str] = {}          # mesh axis -> logical dim holding it
+        for name in axes:
+            if name is None:
+                continue
+            entries = rules.get(name, ())
+            chosen = None
+            starved_by: set[str] = set()
+            for e in entries:
+                ea = _normalize(e)
+                if not all(a in mesh_axes for a in ea):
+                    continue               # absent on this mesh: designed skip
+                holders = {used[a] for a in ea if a in used}
+                if holders:
+                    starved_by |= holders
+                    continue
+                chosen = ea
+                for a in ea:
+                    used[a] = name
+                break
+            if chosen is None and starved_by:
+                findings.append({"tensor": axes, "dim": name,
+                                 "starved_by": sorted(starved_by)})
+    return findings
 
 
 def _normalize(entry):

@@ -32,7 +32,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import Checkpointer, latest_step, restore_checkpoint
-from repro.distributed.context import context_parallel_session
+from repro.distributed.context import mesh_plan_session
 from repro.train.state import TrainState
 
 
@@ -45,11 +45,23 @@ class LoopConfig:
     straggler_k: float = 3.0
     seed: int = 0
     install_signal_handlers: bool = True
-    # Sequence (context) parallelism: size of the `seq` mesh axis.  > 1 runs
-    # every train_step inside a context-parallel session — host mesh with a
-    # seq axis, sharding rules installed, and attention dispatched to the
-    # cross-device prefix-scan / ring-flash paths (distributed/context.py).
+    # Composed parallelism (DESIGN.md §Parallelism): the three knobs below
+    # are the per-axis sizes of one MeshPlan (data x seq x model).  Any of
+    # them > 1 runs every train_step inside a mesh_plan_session — composed
+    # mesh built, sharding rules installed, attention dispatched to the
+    # cross-device prefix-scan / ring-flash paths when seq > 1
+    # (distributed/context.py).
+    #
+    # context_parallel: size of the `seq` mesh axis (sequence sharding).
     context_parallel: int = 1
+    # model_parallel: size of the `model` mesh axis (tensor/expert
+    # parallelism: heads/mlp/vocab dims shard here via the rule table).
+    model_parallel: int = 1
+    # fsdp: size of the `data` mesh axis (batch sharding + ZeRO-style
+    # weight sharding and the gradient psum plane).  0 = auto: soak up
+    # whatever devices context_parallel x model_parallel leave over (the
+    # pre-plan behaviour); 1 = explicitly off.
+    fsdp: int = 0
     # Sequence packing (DESIGN.md §Packing): expect packed batches — each
     # row several documents separated by `segment_ids` (0 = padding).  The
     # loop then validates the batch shape once and reports per-step
@@ -128,10 +140,21 @@ def run_train_loop(
     hooks = _test_hooks or {}
     skipped_steps, spike_steps, lr_scale = 0, 0, 1.0
 
+    # One MeshPlan from the three LoopConfig knobs.  None (the common
+    # single-device config: cp = mp = 1, fsdp auto) skips the session
+    # entirely — no mesh is built, matching the old no-op scope.
+    plan = None
+    if cfg.context_parallel > 1 or cfg.model_parallel > 1 or cfg.fsdp > 1:
+        from repro.sharding import MeshPlan
+
+        plan = MeshPlan.host(
+            data=cfg.fsdp if cfg.fsdp > 0 else None,
+            seq=cfg.context_parallel, model=cfg.model_parallel)
+
     try:
-        # Context-parallel session (no-op scope when context_parallel <= 1):
+        # Composed-mesh session (no-op scope when the plan is trivial):
         # train_step traces inside it, so the mixers see the ambient mesh.
-        with context_parallel_session(cfg.context_parallel):
+        with mesh_plan_session(plan):
             while int(state.step) < cfg.total_steps and not preempt["flag"]:
                 step = int(state.step)
                 batch = next(data_iter)

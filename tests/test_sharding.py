@@ -8,10 +8,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.param import ParamSpec
 from repro.sharding import (
+    CANONICAL_TENSORS,
     DEFAULT_RULES,
     ShardingRules,
     param_shardings,
     spec_for_axes,
+    validate_composition,
     validate_rules,
 )
 
@@ -120,6 +122,84 @@ def test_experts_to_model():
     # dbrx 16 experts also divide 16
     assert _spec(("experts", "embed", "moe_mlp"), (16, 6144, 10752),
                  data=16, model=16) == P("model", "data", None)
+
+
+# ---------------------------------------------------------------------------
+# Composed-mesh cases (data x seq x model live simultaneously)
+# ---------------------------------------------------------------------------
+
+
+def test_gqa_fallback_under_live_model_axis():
+    """kv_heads divisibility fallback must hold on the composed 2x2x2 mesh:
+    kv=2 divides model=2 -> sharded; kv=3 doesn't -> replicated, while the
+    sibling dims keep their data/seq placements either way."""
+    assert _spec(("embed", "kv_heads", "head_dim"), (64, 2, 16),
+                 data=2, seq=2, model=2) == P("data", "model", None)
+    assert _spec(("embed", "kv_heads", "head_dim"), (64, 3, 16),
+                 data=2, seq=2, model=2) == P("data", None, None)
+    # activations on the same mesh: every plan axis consumed at once
+    assert _spec(("batch", "seq", "act_heads", "head_dim"), (4, 64, 4, 16),
+                 data=2, seq=2, model=2) == P("data", "seq", "model", None)
+
+
+def test_batch_joint_entry_on_composed_mesh():
+    """The joint ("pod","data") batch entry must win on a 4-axis composed
+    mesh (all of seq/model live), and each fallback stage still works."""
+    assert _spec(("batch", "seq", "act_embed"), (8, 64, 32),
+                 pod=2, data=2, seq=2, model=2) == P(("pod", "data"), "seq",
+                                                     None)
+    # batch=2 divides data (=2) but not pod*data (=4) -> joint entry skipped
+    assert _spec(("batch", "seq", "act_embed"), (2, 64, 32),
+                 pod=2, data=2, seq=2, model=2) == P("data", "seq", None)
+    # odd batch: neither entry divides -> replicated
+    assert _spec(("batch", "seq", "act_embed"), (3, 64, 32),
+                 pod=2, data=2, seq=2, model=2) == P(None, "seq", None)
+
+
+def test_validate_composition_known_conflict_only():
+    """The shipped table on composed meshes has exactly one structural
+    consumption conflict: the per-expert FFN's moe_mlp starved by experts
+    (expert parallelism wins `model`).  Anything new must fail here."""
+    for axes in (("data", "seq", "model"), ("pod", "data", "seq", "model")):
+        findings = validate_composition(DEFAULT_RULES, axes)
+        assert [(f["dim"], f["starved_by"]) for f in findings] \
+            == [("moe_mlp", ["experts"])], (axes, findings)
+    # seq-less mesh (pre-plan tooling): same single conflict
+    assert len(validate_composition(DEFAULT_RULES, ("data", "model"))) == 1
+
+
+def test_validate_composition_reports_starvation():
+    """A tensor carrying both `heads` and `act_heads` (both want `model`)
+    is the canonical consumption conflict the validator exists to catch."""
+    findings = validate_composition(
+        DEFAULT_RULES, ("data", "seq", "model"),
+        tensors=(("heads", "act_heads"),))
+    assert findings == [{"tensor": ("heads", "act_heads"),
+                         "dim": "act_heads", "starved_by": ["heads"]}]
+    # absent-axis skip is NOT starvation: on a model-less mesh neither dim
+    # has a live candidate, so there is nothing to report
+    assert validate_composition(
+        DEFAULT_RULES, ("data", "seq"),
+        tensors=(("heads", "act_heads"),)) == []
+
+
+def test_validate_composition_rejects_unknown_axes():
+    bad = dict(DEFAULT_RULES)
+    bad["mlp"] = (("modle",),)             # typo'd mesh axis
+    with pytest.raises(ValueError, match="unknown mesh axis 'modle'"):
+        validate_composition(bad, ("data", "seq", "model"))
+    # and the structural check still runs first
+    with pytest.raises(TypeError):
+        validate_composition({"seq": ("data",)}, ("data", "seq", "model"))
+
+
+def test_canonical_tensors_cover_rule_table():
+    """Every activation rule that can shard should appear in at least one
+    canonical tensor — otherwise the composed validator is blind to it."""
+    covered = {n for t in CANONICAL_TENSORS for n in t}
+    for name in ("embed", "heads", "kv_heads", "vocab", "experts",
+                 "batch", "seq", "act_embed", "act_heads", "act_vocab"):
+        assert name in covered, name
 
 
 def test_param_shardings_tree(sr):
