@@ -30,7 +30,7 @@ Usage::
 
     python benchmarks/run.py --only context         # harness (subprocess)
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        PYTHONPATH=src python benchmarks/bench_context.py   # direct
+        PYTHONPATH=src:. python benchmarks/bench_context.py   # direct
 """
 
 from __future__ import annotations
@@ -131,7 +131,7 @@ def main():
     # wire bytes (DESIGN.md §Parallelism).
     from repro.distributed.context import mesh_plan_session
     from repro.roofline.analysis import (
-        collective_bytes_by_axis, predict_axis_exchange)
+        axis_seconds, collective_bytes_by_axis, predict_axis_exchange)
     from repro.sharding import MeshPlan
 
     plan = MeshPlan(data=2, seq=2, model=2)
@@ -157,7 +157,12 @@ def main():
         "loss": float(loss_c),
         "loss_drift_vs_seq_axis_1": abs(float(loss_c) - points[0]["loss"]),
         "tokens_per_s": batch_size * seq_len / dt_c,
+        "measured_step_s": dt_c,
         "predicted_axis_bytes": {k: float(v) for k, v in predicted.items()},
+        # predicted wire seconds per axis (V5E link bw) next to the measured
+        # wall step — the roofline's time-domain counterpart
+        # (roofline.analysis.axis_seconds / RooflineReport.measured_step_s).
+        "predicted_axis_seconds": axis_seconds(predicted),
         "measured_axis_bytes": {k: float(v["total"])
                                 for k, v in measured.items()},
     }
@@ -177,9 +182,8 @@ def main():
         "points": points,
         "composed": composed,
     }
-    with open(OUT, "w") as f:
-        json.dump(report, f, indent=2)
-    print(f"wrote {OUT}")
+    from benchmarks.common import write_bench
+    write_bench("context", report)
 
     losses = [p["loss"] for p in points]
     spread = max(losses) - min(losses)

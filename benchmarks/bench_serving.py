@@ -15,16 +15,16 @@ the usual CSV rows.
 
 from __future__ import annotations
 
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 from repro.configs import smoke_config
 from repro.models.factory import build
+from repro.obs.events import EventLog, use_events
 from repro.serving import StreamingEngine, generate
 
 PROMPT_LENS = (8, 32, 128, 16, 512, 64, 8, 256)   # mixed 8–512 (issue spec)
@@ -74,12 +74,19 @@ def _prompt_waste(reqs) -> dict:
 def _bench_streaming(api, params, reqs, waste):
     eng = StreamingEngine(api, params, n_slots=N_SLOTS, chunk=CHUNK)
     compile_s = eng.warmup()
-    t0 = time.perf_counter()
-    rids = [eng.submit(p, n) for p, n in reqs]
-    out = eng.run()
-    wall = time.perf_counter() - t0
+    # Exact per-request TTFTs come from the engine's first_token events (an
+    # in-memory sink) — the engine evicts its latency maps when a request
+    # completes, so reading eng.first_token_at after run() is not an API.
+    log = EventLog(path=None)
+    with use_events(log):
+        t0 = time.perf_counter()
+        for p, n in reqs:
+            eng.submit(p, n)
+        out = eng.run()
+        wall = time.perf_counter() - t0
     tokens = sum(len(v) for v in out.values())
-    ttft = [eng.first_token_at[r] - eng.submitted_at[r] for r in rids]
+    ttft = [r["data"]["ttft_s"] for r in log.records
+            if r["kind"] == "first_token"]
     return {
         "tokens": tokens,
         "wall_s": wall,
@@ -152,7 +159,7 @@ def _bench_wave(api, params, reqs, waste, ragged: bool):
     }
 
 
-def run(out_path: str = "BENCH_serving.json") -> dict:
+def run() -> dict:
     cfg = smoke_config("phi3-mini-3.8b", n_layers=2, d_model=64, d_ff=128,
                        vocab=256)
     api = build(cfg)
@@ -176,8 +183,7 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
         "speedup_streaming_over_wave": (
             streaming["tokens_per_s"] / wave["tokens_per_s"]),
     }
-    with open(out_path, "w") as f:
-        json.dump(results, f, indent=2)
+    write_bench("serving", results)
 
     emit("serving_streaming_tok_s", streaming["wall_s"] * 1e6,
          f"{streaming['tokens_per_s']:.1f}")
@@ -192,7 +198,6 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
     emit("serving_padding_waste", 0.0,
          f"wave{waste['wave_padding_waste_ratio']:.2f}"
          f"_stream{waste['streaming_padding_waste_ratio']:.2f}")
-    print(f"# wrote {out_path}", flush=True)
     return results
 
 

@@ -15,6 +15,7 @@ memory, linear vs quadratic cumulative time, and the parameter-count delta.
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -25,6 +26,7 @@ from repro.configs.base import ArchConfig
 from repro.models import blocks
 from repro.models.layers import apply_norm, norm_specs
 from repro.models.param import ParamSpec, count_params, init_params
+from repro.obs.events import run_metadata
 from repro.train.optim import adamw, clip_by_global_norm, warmup_cosine
 
 ROWS: list[tuple] = []
@@ -35,6 +37,25 @@ def emit(name: str, us_per_call: float, derived):
     row = (name, f"{us_per_call:.1f}", str(derived))
     ROWS.append(row)
     print(",".join(row), flush=True)
+
+
+def write_bench(name: str, payload: dict) -> str:
+    """Write ``BENCH_<name>.json`` stamped with run provenance.
+
+    Every benchmark artifact goes through here so each one carries the same
+    ``meta`` block (:func:`repro.obs.events.run_metadata` — git sha,
+    jax/device info, mesh shape, kernel mode, UTC timestamp) and a
+    ``schema_version``.  Payload keys stay at the TOP level, so CI readers
+    that index ``d["streaming"]`` / ``d["points"]`` keep working unchanged.
+    Returns the path written.
+    """
+    path = f"BENCH_{name}.json"
+    doc = {**payload, "schema_version": 1, "meta": run_metadata()}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}", flush=True)
+    return path
 
 
 def bench_cfg(attn_mode: str, *, d_model=64, n_layers=2, n_heads=4,

@@ -58,6 +58,7 @@ from repro.core.scan_attention import (
 )
 from repro.kernels import flash_attention as _kflash
 from repro.kernels import ops as kops
+from repro.obs.trace import span as _span
 
 SEQ_AXIS = "seq"
 
@@ -221,13 +222,15 @@ def device_exclusive_scan(total: ScanState, axis: str,
     Payload per round is one carry state per row — O(rows·(d+2)) floats,
     independent of the shard length.
     """
-    idx = jax.lax.axis_index(axis)
-    acc = _shift_states(total, 1, axis, axis_size, idx)
-    shift = 1
-    while shift < axis_size:
-        acc = combine(_shift_states(acc, shift, axis, axis_size, idx), acc)
-        shift *= 2
-    return acc
+    with _span("cp.carry_exchange"):
+        idx = jax.lax.axis_index(axis)
+        acc = _shift_states(total, 1, axis, axis_size, idx)
+        shift = 1
+        while shift < axis_size:
+            acc = combine(
+                _shift_states(acc, shift, axis, axis_size, idx), acc)
+            shift *= 2
+        return acc
 
 
 def device_allreduce_state(total: ScanState, axis: str,
@@ -330,13 +333,14 @@ def device_exclusive_scan_segmented(total: ScanState, flag, axis: str,
         f_recv = jax.lax.ppermute(f, axis, perm)
         return recv, jnp.where(idx >= k, f_recv, 0.0)
 
-    acc, f_acc = shift(total, flag, 1)
-    k = 1
-    while k < axis_size:
-        older, f_old = shift(acc, f_acc, k)
-        acc, f_acc = _seg_combine(older, f_old, acc, f_acc)
-        k *= 2
-    return acc, f_acc
+    with _span("cp.carry_exchange_segmented"):
+        acc, f_acc = shift(total, flag, 1)
+        k = 1
+        while k < axis_size:
+            older, f_old = shift(acc, f_acc, k)
+            acc, f_acc = _seg_combine(older, f_old, acc, f_acc)
+            k *= 2
+        return acc, f_acc
 
 
 # ---------------------------------------------------------------------------
@@ -355,7 +359,8 @@ def _cp_scan_forward(s, v, m0, u0, w0, axis, axis_size):
     total = shard_total(s, v)
     prefix = device_exclusive_scan(total, axis, axis_size)
     seed = combine(carry0, prefix)
-    o, _ = kops.aaren_prefix_attention(s, v, seed)
+    with _span("cp.local_scan"):
+        o, _ = kops.aaren_prefix_attention(s, v, seed)
     fin = combine(carry0, device_allreduce_state(total, axis, axis_size))
     return o, fin.m, fin.u, fin.w
 
@@ -380,7 +385,9 @@ def _cp_scan_forward_segmented(s, v, m0, u0, w0, seg, axis, axis_size):
     prefix, pre_flag = device_exclusive_scan_segmented(
         total, flag, axis, axis_size)
     seed, _ = _seg_combine(carry0, jnp.zeros_like(pre_flag), prefix, pre_flag)
-    o, _ = kops.aaren_prefix_attention(s, v, seed, segment_starts=starts)
+    with _span("cp.local_scan"):
+        o, _ = kops.aaren_prefix_attention(s, v, seed,
+                                           segment_starts=starts)
     # Final carry: ordered segmented fold of the gathered shard aggregates.
     g = jax.tree.map(lambda x: jax.lax.all_gather(x, axis), (total, flag))
     acc = ScanState(m=g[0].m[0], u=g[0].u[0], w=g[0].w[0])
@@ -570,6 +577,19 @@ def _ring_flash_local(q, k, v, lens, axis, axis_size, causal, window, scale,
     )
     ring = [(i, (i + 1) % axis_size) for i in range(axis_size)]
     k_cur, v_cur = k, v
+    with _span("cp.ring_flash"):
+        acc = _ring_flash_steps(q32, k_cur, v_cur, acc, idx, axis, axis_size,
+                                ring, nl, h, q_pos, row_ok, lens, seg,
+                                q_seg if seg is not None else None,
+                                causal, window, scale)
+    o = readout(acc)  # (B, H, Nl, d); empty rows (fully masked) read 0
+    return jnp.swapaxes(o, 1, 2)
+
+
+def _ring_flash_steps(q32, k_cur, v_cur, acc, idx, axis, axis_size, ring,
+                      nl, h, q_pos, row_ok, lens, seg, q_seg,
+                      causal, window, scale):
+    """The P-step rotate-and-fold loop of :func:`_ring_flash_local`."""
     for step in range(axis_size):
         src = jnp.mod(idx - step, axis_size)  # shard id currently held
         k_pos = src * nl + jnp.arange(nl)
@@ -597,10 +617,11 @@ def _ring_flash_local(q, k, v, lens, axis, axis_size, causal, window, scale,
         )
         acc = combine(acc, blk)
         if step != axis_size - 1:
-            k_cur, v_cur = jax.tree.map(
-                lambda x: jax.lax.ppermute(x, axis, ring), (k_cur, v_cur))
-    o = readout(acc)  # (B, H, Nl, d); empty rows (fully masked) read 0
-    return jnp.swapaxes(o, 1, 2)
+            with _span("cp.ring_rotate"):
+                k_cur, v_cur = jax.tree.map(
+                    lambda x: jax.lax.ppermute(x, axis, ring),
+                    (k_cur, v_cur))
+    return acc
 
 
 def cp_flash_mha(

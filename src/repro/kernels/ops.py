@@ -45,6 +45,7 @@ from repro.core.scan_attention import (
 from repro.kernels import aaren_scan as _aaren_kernel
 from repro.kernels import aaren_scan_bwd as _aaren_bwd_kernel
 from repro.kernels import flash_attention as _flash_kernel
+from repro.obs.trace import span as _span
 
 
 def kernel_mode() -> str:
@@ -116,12 +117,13 @@ def _in_last_segment(starts):
 
 def _aaren_dispatch(s, v, m0, u0, w0, starts, block_n):
     mode = kernel_mode()
-    if mode == "jnp":
-        return _aaren_jnp(s, v, m0, u0, w0, starts)
-    interpret = mode == "interpret"
-    seg = None if starts is None else starts.astype(jnp.float32)
-    return _aaren_kernel.aaren_scan(
-        s, v, m0, u0, w0, seg, block_n=block_n, interpret=interpret)
+    with _span(f"aaren_scan_fwd.{mode}"):
+        if mode == "jnp":
+            return _aaren_jnp(s, v, m0, u0, w0, starts)
+        interpret = mode == "interpret"
+        seg = None if starts is None else starts.astype(jnp.float32)
+        return _aaren_kernel.aaren_scan(
+            s, v, m0, u0, w0, seg, block_n=block_n, interpret=interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
@@ -131,17 +133,18 @@ def _aaren_core(s, v, m0, u0, w0, starts, block_n):
 
 def _aaren_fwd(s, v, m0, u0, w0, starts, block_n):
     mode = kernel_mode()
-    if mode == "jnp":
-        # Recompute-style: save inputs, differentiate the jnp forward.
-        return (_aaren_jnp(s, v, m0, u0, w0, starts),
-                (s, v, m0, u0, w0, starts))
-    interpret = mode == "interpret"
-    seg = None if starts is None else starts.astype(jnp.float32)
-    o, m_f, u_f, w_f, m_all, u_all = _aaren_kernel.aaren_scan(
-        s, v, m0, u0, w0, seg, block_n=block_n, return_residuals=True,
-        interpret=interpret)
-    res = (s, v, o, m_all, u_all, m_f, u_f, w_f, m0, u0, w0, starts)
-    return (o, m_f, u_f, w_f), res
+    with _span(f"aaren_scan_fwd.{mode}"):
+        if mode == "jnp":
+            # Recompute-style: save inputs, differentiate the jnp forward.
+            return (_aaren_jnp(s, v, m0, u0, w0, starts),
+                    (s, v, m0, u0, w0, starts))
+        interpret = mode == "interpret"
+        seg = None if starts is None else starts.astype(jnp.float32)
+        o, m_f, u_f, w_f, m_all, u_all = _aaren_kernel.aaren_scan(
+            s, v, m0, u0, w0, seg, block_n=block_n, return_residuals=True,
+            interpret=interpret)
+        res = (s, v, o, m_all, u_all, m_f, u_f, w_f, m0, u0, w0, starts)
+        return (o, m_f, u_f, w_f), res
 
 
 def aaren_bwd_epilogue(s, m0, u0, w0, m_f, u_f, w_f, g_m, g_u, g_w,
@@ -176,28 +179,32 @@ def _aaren_bwd(block_n, res, g):
     # 6 = jnp-mode raw inputs, 12 = kernel-mode compact residuals.
     if len(res) == 6:
         s, v, m0, u0, w0, starts = res
-        _, vjp = jax.vjp(
-            lambda s_, v_, m_, u_, w_: _aaren_jnp(s_, v_, m_, u_, w_, starts),
-            s, v, m0, u0, w0)
-        return (*vjp(g), _len_cotangent(starts))
+        with _span("aaren_scan_bwd.jnp"):
+            _, vjp = jax.vjp(
+                lambda s_, v_, m_, u_, w_: _aaren_jnp(
+                    s_, v_, m_, u_, w_, starts),
+                s, v, m0, u0, w0)
+            return (*vjp(g), _len_cotangent(starts))
 
     s, v, o, m_all, u_all, m_f, u_f, w_f, m0, u0, w0, starts = res
     g_o, g_m, g_u, g_w = g
-    interpret = kernel_mode() == "interpret"
-    ends = hit_mask = None
-    if starts is not None:
-        ends = _segment_ends(starts).astype(jnp.float32)
-        hit_mask = _in_last_segment(starts)
-    # (u_f, w_f) cotangents seed the reverse carry (suffix "past" token N);
-    # see aaren_scan_bwd.py for the derivation.
-    ds, dv, n1, g1, b1 = _aaren_bwd_kernel.aaren_scan_bwd(
-        s, v, o, m_all, u_all, g_o,
-        -m_f, g_w, -g_u, ends, block_n=block_n, interpret=interpret)
-    ds, dm0, du0, dw0 = aaren_bwd_epilogue(
-        s, m0, u0, w0, m_f, u_f, w_f, g_m, g_u, g_w, ds, n1, g1, b1,
-        hit_mask=hit_mask)
-    return (ds.astype(s.dtype), dv.astype(v.dtype), dm0, du0, dw0,
-            _len_cotangent(starts))
+    mode = kernel_mode()
+    interpret = mode == "interpret"
+    with _span(f"aaren_scan_bwd.{mode}"):
+        ends = hit_mask = None
+        if starts is not None:
+            ends = _segment_ends(starts).astype(jnp.float32)
+            hit_mask = _in_last_segment(starts)
+        # (u_f, w_f) cotangents seed the reverse carry (suffix "past" token
+        # N); see aaren_scan_bwd.py for the derivation.
+        ds, dv, n1, g1, b1 = _aaren_bwd_kernel.aaren_scan_bwd(
+            s, v, o, m_all, u_all, g_o,
+            -m_f, g_w, -g_u, ends, block_n=block_n, interpret=interpret)
+        ds, dm0, du0, dw0 = aaren_bwd_epilogue(
+            s, m0, u0, w0, m_f, u_f, w_f, g_m, g_u, g_w, ds, n1, g1, b1,
+            hit_mask=hit_mask)
+        return (ds.astype(s.dtype), dv.astype(v.dtype), dm0, du0, dw0,
+                _len_cotangent(starts))
 
 
 _aaren_core.defvjp(_aaren_fwd, _aaren_bwd)
@@ -294,14 +301,15 @@ def _flash_jnp(q, k, v, q_lens, kv_lens, q_seg, kv_seg, causal, window,
 def _flash_dispatch(q, k, v, q_lens, kv_lens, q_seg, kv_seg, causal, window,
                     scale):
     mode = kernel_mode()
-    if mode == "jnp":
-        return _flash_jnp(q, k, v, q_lens, kv_lens, q_seg, kv_seg,
-                          causal, window, scale)
-    interpret = mode == "interpret"
-    return _flash_kernel.flash_attention(
-        q, k, v, causal=causal, window=window, scale=scale,
-        q_lens=q_lens, kv_lens=kv_lens,
-        q_segment_ids=q_seg, kv_segment_ids=kv_seg, interpret=interpret)
+    with _span(f"flash_fwd.{mode}"):
+        if mode == "jnp":
+            return _flash_jnp(q, k, v, q_lens, kv_lens, q_seg, kv_seg,
+                              causal, window, scale)
+        interpret = mode == "interpret"
+        return _flash_kernel.flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_lens=q_lens, kv_lens=kv_lens,
+            q_segment_ids=q_seg, kv_segment_ids=kv_seg, interpret=interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
@@ -314,17 +322,18 @@ def _flash_core(q, k, v, q_lens, kv_lens, q_seg, kv_seg, causal, window,
 def _flash_fwd(q, k, v, q_lens, kv_lens, q_seg, kv_seg, causal, window,
                scale):
     mode = kernel_mode()
-    if mode == "jnp":
-        out = _flash_jnp(q, k, v, q_lens, kv_lens, q_seg, kv_seg,
-                         causal, window, scale)
-        return out, (q, k, v, q_lens, kv_lens, q_seg, kv_seg)
-    interpret = mode == "interpret"
-    o, lse = _flash_kernel.flash_attention(
-        q, k, v, causal=causal, window=window, scale=scale,
-        q_lens=q_lens, kv_lens=kv_lens,
-        q_segment_ids=q_seg, kv_segment_ids=kv_seg, return_residuals=True,
-        interpret=interpret)
-    return o, (q, k, v, q_lens, kv_lens, q_seg, kv_seg, o, lse)
+    with _span(f"flash_fwd.{mode}"):
+        if mode == "jnp":
+            out = _flash_jnp(q, k, v, q_lens, kv_lens, q_seg, kv_seg,
+                             causal, window, scale)
+            return out, (q, k, v, q_lens, kv_lens, q_seg, kv_seg)
+        interpret = mode == "interpret"
+        o, lse = _flash_kernel.flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_lens=q_lens, kv_lens=kv_lens,
+            q_segment_ids=q_seg, kv_segment_ids=kv_seg,
+            return_residuals=True, interpret=interpret)
+        return o, (q, k, v, q_lens, kv_lens, q_seg, kv_seg, o, lse)
 
 
 def _len_cotangent(lens):
@@ -338,21 +347,24 @@ def _flash_bwd(causal, window, scale, res, g):
     # 7 residuals = jnp-mode raw inputs; 9 = kernel-mode (+ o, logsumexp).
     if len(res) == 7:
         q, k, v, q_lens, kv_lens, q_seg, kv_seg = res
-        _, vjp = jax.vjp(
-            lambda q_, k_, v_: _flash_jnp(q_, k_, v_, q_lens, kv_lens,
-                                          q_seg, kv_seg, causal, window,
-                                          scale),
-            q, k, v)
-        return (*vjp(g), _len_cotangent(q_lens), _len_cotangent(kv_lens),
-                _len_cotangent(q_seg), _len_cotangent(kv_seg))
+        with _span("flash_dq_dkv.jnp"):
+            _, vjp = jax.vjp(
+                lambda q_, k_, v_: _flash_jnp(q_, k_, v_, q_lens, kv_lens,
+                                              q_seg, kv_seg, causal, window,
+                                              scale),
+                q, k, v)
+            return (*vjp(g), _len_cotangent(q_lens), _len_cotangent(kv_lens),
+                    _len_cotangent(q_seg), _len_cotangent(kv_seg))
     q, k, v, q_lens, kv_lens, q_seg, kv_seg, o, lse = res
-    interpret = kernel_mode() == "interpret"
-    dq, dk, dv = _flash_kernel.flash_attention_bwd(
-        q, k, v, o, lse, g, causal=causal, window=window, scale=scale,
-        q_lens=q_lens, kv_lens=kv_lens,
-        q_segment_ids=q_seg, kv_segment_ids=kv_seg, interpret=interpret)
-    return (dq, dk, dv, _len_cotangent(q_lens), _len_cotangent(kv_lens),
-            _len_cotangent(q_seg), _len_cotangent(kv_seg))
+    mode = kernel_mode()
+    with _span(f"flash_dq_dkv.{mode}"):
+        dq, dk, dv = _flash_kernel.flash_attention_bwd(
+            q, k, v, o, lse, g, causal=causal, window=window, scale=scale,
+            q_lens=q_lens, kv_lens=kv_lens,
+            q_segment_ids=q_seg, kv_segment_ids=kv_seg,
+            interpret=mode == "interpret")
+        return (dq, dk, dv, _len_cotangent(q_lens), _len_cotangent(kv_lens),
+                _len_cotangent(q_seg), _len_cotangent(kv_seg))
 
 
 _flash_core.defvjp(_flash_fwd, _flash_bwd)

@@ -4,21 +4,31 @@ Warm-up (trace + compile) runs before the timed section, and compile vs
 steady-state throughput are reported separately — wall time that includes
 jit tracing says nothing about serving speed.
 
+Observability (DESIGN.md §Observability): ``--events`` writes the JSONL
+event log, ``--metrics-out`` dumps the metrics-registry snapshot at exit,
+and ``--metrics-port`` serves live Prometheus text at ``/metrics`` (plus
+the snapshot document at ``/metrics.json``) while the engine runs.
+
 Example::
 
     python -m repro.launch.serve --arch phi3-mini-3.8b --smoke \
-        --requests 8 --max-new 32 --engine streaming --chunk 16
+        --requests 8 --max-new 32 --engine streaming --chunk 16 \
+        --events serve_events.jsonl --metrics-out serve_metrics.json
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
 
 from repro.configs import get_config, smoke_config
 from repro.models.factory import build
+from repro.obs.events import EventLog, use_events
+from repro.obs.export import serve_metrics, write_snapshot
+from repro.obs.metrics import MetricsRegistry, use_metrics
 from repro.serving import (
     EngineOverloaded,
     StreamingEngine,
@@ -50,7 +60,45 @@ def main():
     ap.add_argument("--deadline-s", type=float, default=0.0,
                     help="per-request wall-clock deadline; expired requests "
                          "error out (0 = none)")
+    ap.add_argument("--events", default=None,
+                    help="path of the JSONL event log to write "
+                         "(repro.obs.events; off when omitted)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="path of the metrics-snapshot JSON dumped at exit")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text at /metrics on this port "
+                         "while the engine runs (0 = ephemeral port)")
     args = ap.parse_args()
+
+    # Ambient observability for the whole serve run: the engine's
+    # instruments/events land here.  A registry is installed whenever any
+    # obs output was asked for (the exposition endpoints need one even if
+    # only --metrics-port was given).
+    obs = contextlib.ExitStack()
+    registry = None
+    want_obs = (args.events is not None or args.metrics_out is not None
+                or args.metrics_port is not None)
+    if want_obs:
+        registry = obs.enter_context(use_metrics(MetricsRegistry()))
+        if args.events is not None:
+            log = obs.enter_context(use_events(EventLog(args.events)))
+            obs.callback(log.close)
+    http = None
+    if args.metrics_port is not None:
+        http = serve_metrics(registry, args.metrics_port)
+        print(f"metrics: http://{http.server_address[0]}:"
+              f"{http.server_address[1]}/metrics")
+
+    with obs:
+        _run(args)
+        if args.metrics_out is not None:
+            write_snapshot(args.metrics_out, registry)
+            print(f"metrics snapshot: {args.metrics_out}")
+    if http is not None:
+        http.shutdown()
+
+
+def _run(args):
 
     cfg = (smoke_config(args.arch) if args.smoke else get_config(args.arch))
     cfg = cfg.replace(attn_mode=args.attn_mode)

@@ -62,6 +62,12 @@ def main():
                     help="finite steps before one backoff level is restored")
     ap.add_argument("--guard-spike-window", type=int, default=32,
                     help="rolling grad-norm window for spike detection")
+    ap.add_argument("--events", default=None,
+                    help="path of the JSONL event log to write "
+                         "(repro.obs.events; off when omitted)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="path of the metrics-snapshot JSON dumped at loop "
+                         "exit (installs a metrics registry for the run)")
     args = ap.parse_args()
 
     cfg = (smoke_config(args.arch) if args.smoke
@@ -97,7 +103,8 @@ def main():
         save_every=args.save_every, log_every=max(args.steps // 20, 1),
         seed=args.seed, guard=args.guard,
         context_parallel=args.context_parallel,
-        model_parallel=args.model_parallel, fsdp=args.fsdp)
+        model_parallel=args.model_parallel, fsdp=args.fsdp,
+        events=args.events, metrics_out=args.metrics_out)
 
     def on_log(step, m):
         guard_s = (f" lr_scale={m['guard_lr_scale']:.3f}"
@@ -109,6 +116,10 @@ def main():
     result = run_train_loop(step_fn, state, data, loop_cfg, on_log=on_log)
     print(f"done at step {int(result.state.step)}; "
           f"stragglers observed: {len(result.stragglers)}")
+    if args.events:
+        print(f"event log: {args.events}")
+    if args.metrics_out:
+        print(f"metrics snapshot: {args.metrics_out}")
     if args.guard:
         print(f"guard: skipped {result.skipped_steps} non-finite steps, "
               f"{result.spike_steps} grad-norm spikes, final lr_scale "

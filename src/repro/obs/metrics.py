@@ -1,0 +1,263 @@
+"""Process-local metrics registry: counters, gauges, fixed-bucket histograms.
+
+Design constraints (DESIGN.md §Observability):
+
+* **Thread-safe.**  The serving engine's ``submit`` path runs on caller
+  threads while ``step`` runs on the engine thread; every instrument update
+  takes a per-instrument lock (uncontended in the common case) and
+  ``snapshot()`` takes a consistent view under the registry lock.
+* **Plain-dict snapshots.**  ``snapshot()`` returns nothing but dicts,
+  lists, floats, and ints — directly JSON-serialisable, no instrument
+  objects leak out.
+* **Near-zero cost when no registry is installed.**  The hot paths call the
+  module-level helpers (:func:`inc`, :func:`set_gauge`, :func:`observe`);
+  with no ambient registry each is one global load + ``None`` check.
+* **Fixed buckets.**  Histograms are Prometheus-style cumulative-bucket
+  histograms with boundaries fixed at creation — an observe is a bisect +
+  two adds, never an allocation, so a decode loop can observe every token.
+
+Naming scheme: ``<subsystem>_<quantity>[_<unit>]`` with ``_total`` for
+counters — ``train_step_time_s``, ``serve_ttft_s``, ``serve_shed_total``.
+"""
+
+from __future__ import annotations
+
+import bisect
+import contextlib
+import threading
+
+#: default buckets for latency-type histograms, in seconds (Prometheus-ish
+#: log-spaced ladder; +Inf is implicit).
+DEFAULT_TIME_BUCKETS = (
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+    0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0,
+)
+
+
+class Counter:
+    """Monotonically increasing float counter."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name}: negative increment {n}")
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def snapshot(self):
+        return {"value": self._value}
+
+
+class Gauge:
+    """Last-value gauge (set wins; no aggregation)."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def snapshot(self):
+        return {"value": self._value}
+
+
+class Histogram:
+    """Fixed-bucket histogram; buckets are upper bounds, +Inf implicit.
+
+    ``counts[i]`` is the number of observations ``<= buckets[i]`` minus
+    those in earlier buckets (per-bucket, not cumulative — the exporter
+    cumulates for the Prometheus text form); ``counts[-1]`` is the +Inf
+    overflow bucket.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, buckets=DEFAULT_TIME_BUCKETS,
+                 help: str = ""):
+        b = tuple(sorted(float(x) for x in buckets))
+        if not b:
+            raise ValueError(f"histogram {name}: needs >= 1 bucket bound")
+        self.name = name
+        self.help = help
+        self.buckets = b
+        self._counts = [0] * (len(b) + 1)
+        self._sum = 0.0
+        self._count = 0
+        self._lock = threading.Lock()
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        i = bisect.bisect_left(self.buckets, v)
+        with self._lock:
+            self._counts[i] += 1
+            self._sum += v
+            self._count += 1
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def quantile(self, q: float) -> float:
+        """Bucket-resolution quantile estimate (upper bound of the bucket
+        holding the q-th observation; +Inf bucket reports the last bound)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        with self._lock:
+            total = self._count
+            if total == 0:
+                return float("nan")
+            rank = q * total
+            seen = 0
+            for i, c in enumerate(self._counts):
+                seen += c
+                if seen >= rank and c:
+                    return (self.buckets[i] if i < len(self.buckets)
+                            else self.buckets[-1])
+        return self.buckets[-1]
+
+    def snapshot(self):
+        with self._lock:
+            return {
+                "buckets": list(self.buckets),
+                "counts": list(self._counts),
+                "sum": self._sum,
+                "count": self._count,
+            }
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named instruments.
+
+    Re-requesting a name returns the existing instrument; requesting it as a
+    different kind (or a histogram with different buckets) is an error — a
+    name means one thing for the life of the process.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: dict[str, object] = {}
+
+    def _get(self, name: str, kind, **kwargs):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = kind(name, **kwargs)
+                self._metrics[name] = m
+                return m
+        if not isinstance(m, kind):
+            raise TypeError(
+                f"metric {name!r} already registered as {m.kind}, "
+                f"requested {kind.kind}")
+        if kind is Histogram and "buckets" in kwargs:
+            want = tuple(sorted(float(x) for x in kwargs["buckets"]))
+            if want != m.buckets:
+                raise ValueError(
+                    f"histogram {name!r} already registered with buckets "
+                    f"{m.buckets}, requested {want}")
+        return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(name, Counter, help=help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(name, Gauge, help=help)
+
+    def histogram(self, name: str, buckets=DEFAULT_TIME_BUCKETS,
+                  help: str = "") -> Histogram:
+        return self._get(name, Histogram, buckets=buckets, help=help)
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def snapshot(self) -> dict:
+        """Plain-dict view: ``{kind_plural: {name: state}}``."""
+        with self._lock:
+            items = list(self._metrics.items())
+        out: dict[str, dict] = {"counters": {}, "gauges": {},
+                                "histograms": {}}
+        for name, m in sorted(items):
+            out[m.kind + "s"][name] = m.snapshot()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Ambient registry (install once per process / per test scope)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: MetricsRegistry | None = None
+
+
+def install(reg: MetricsRegistry) -> MetricsRegistry:
+    global _REGISTRY
+    _REGISTRY = reg
+    return reg
+
+
+def uninstall() -> None:
+    global _REGISTRY
+    _REGISTRY = None
+
+
+def current() -> MetricsRegistry | None:
+    return _REGISTRY
+
+
+@contextlib.contextmanager
+def use_metrics(reg: MetricsRegistry):
+    """Scoped install — the test-friendly form of :func:`install`."""
+    global _REGISTRY
+    prev = _REGISTRY
+    _REGISTRY = reg
+    try:
+        yield reg
+    finally:
+        _REGISTRY = prev
+
+
+# ---------------------------------------------------------------------------
+# Hot-path helpers: one global load + None check when observability is off
+# ---------------------------------------------------------------------------
+
+
+def inc(name: str, n: float = 1.0) -> None:
+    reg = _REGISTRY
+    if reg is not None:
+        reg.counter(name).inc(n)
+
+
+def set_gauge(name: str, v: float) -> None:
+    reg = _REGISTRY
+    if reg is not None:
+        reg.gauge(name).set(v)
+
+
+def observe(name: str, v: float, buckets=DEFAULT_TIME_BUCKETS) -> None:
+    reg = _REGISTRY
+    if reg is not None:
+        reg.histogram(name, buckets=buckets).observe(v)

@@ -1,0 +1,112 @@
+"""Profiling trace hooks: named phases for xprof, free when off.
+
+``span(name)`` wraps a region in BOTH profiler primitives:
+
+* ``jax.named_scope(name)`` — applies at *trace* time, so the ops staged
+  inside the region carry the scope in their HLO metadata and an xprof /
+  TensorBoard trace attributes **device** time to the phase.  This is how
+  the kernel dispatch boundary (``kernels/ops.py``), the cp carry exchange
+  (``distributed/context.py``), and the engine step show up as named rows.
+* ``jax.profiler.TraceAnnotation(name)`` — applies at *run* time, so
+  host-side phases (engine scheduling, sampling) show on the host timeline.
+
+Gating: the ``REPRO_TRACE`` env var, read **once at import** — when off
+(default), :func:`span` returns a shared null context manager: one function
+call + one global load, no objects allocated, nothing staged into the
+compiled program (a compile-time no-op, not a runtime branch).  Tests flip
+it with :func:`set_enabled`.
+
+Enable with ``REPRO_TRACE=1`` and capture via
+``jax.profiler.start_trace(logdir)`` (or ``with jax.profiler.trace(...)``),
+then read the trace in xprof/TensorBoard.
+"""
+
+from __future__ import annotations
+
+import os
+
+TRACE_ENV = "REPRO_TRACE"
+
+
+def _env_enabled() -> bool:
+    return os.environ.get(TRACE_ENV, "").strip().lower() not in (
+        "", "0", "false", "off", "no")
+
+
+_ENABLED = _env_enabled()
+
+
+def trace_enabled() -> bool:
+    return _ENABLED
+
+
+def set_enabled(on: bool) -> bool:
+    """Force the gate (tests); returns the previous value."""
+    global _ENABLED
+    prev = _ENABLED
+    _ENABLED = bool(on)
+    return prev
+
+
+class _NullSpan:
+    """Reusable do-nothing context manager (the off path)."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL = _NullSpan()
+
+
+class _Span:
+    """Live span: named_scope (trace time) + TraceAnnotation (run time)."""
+
+    __slots__ = ("name", "_scope", "_annot")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._scope = None
+        self._annot = None
+
+    def __enter__(self):
+        import jax
+
+        self._scope = jax.named_scope(self.name)
+        self._annot = jax.profiler.TraceAnnotation(self.name)
+        self._scope.__enter__()
+        self._annot.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        self._annot.__exit__(*exc)
+        self._scope.__exit__(*exc)
+        return False
+
+
+def span(name: str):
+    """Context manager naming one phase; the shared no-op when tracing is
+    off.  Usage: ``with span("engine.step"): ...``"""
+    if not _ENABLED:
+        return _NULL
+    return _Span(name)
+
+
+def annotate(name: str):
+    """Decorator form of :func:`span` (the gate is still checked per call,
+    so flipping ``set_enabled`` affects already-decorated functions)."""
+    import functools
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapped(*a, **k):
+            with span(name):
+                return fn(*a, **k)
+
+        return wrapped
+
+    return deco

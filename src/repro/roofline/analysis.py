@@ -297,6 +297,23 @@ def predict_axis_exchange(plan, *, batch: int, seq_len: int, n_heads: int,
     return out
 
 
+def axis_seconds(axis_bytes: dict, hw: dict = V5E) -> dict:
+    """Predicted seconds per axis: wire bytes / link bandwidth.
+
+    Companion to :func:`predict_axis_exchange` (and to the ``"total"`` rows
+    of :func:`collective_bytes_by_axis`): turns per-axis byte predictions
+    into the time axis a *measured* step time can sit next to
+    (``RooflineReport.measured_step_s``) — predicted-vs-measured per axis,
+    not just predicted-vs-predicted bytes.  Accepts either ``{label:
+    bytes}`` or ``{label: {..., "total": bytes}}`` values.
+    """
+    out = {}
+    for label, v in axis_bytes.items():
+        b = v.get("total", 0.0) if isinstance(v, dict) else float(v)
+        out[label] = b / hw["ici_bw"]
+    return out
+
+
 def model_flops(n_params: int, n_tokens: int, kind: str,
                 n_active_params: int | None = None) -> float:
     """6·N·D (train) / 2·N·D (inference) with MoE active-param correction."""
@@ -325,6 +342,10 @@ class RooflineReport:
     # XLA:CPU's bytes-accessed counts unfused elementwise chains that TPU
     # fusion eliminates.  See EXPERIMENTS.md §Roofline methodology.
     memory_floor_s: float | None = None
+    # Measured wall seconds per step on the machine that ran the lowering
+    # (benchmarks fill this in) — the empirical counterpart the predicted
+    # compute_s/memory_s/collective_s terms are judged against.
+    measured_step_s: float | None = None
 
     @property
     def dominant(self) -> str:
@@ -364,6 +385,7 @@ class RooflineReport:
             "mfu_bound": self.mfu,
             "bytes_per_device": self.bytes_per_device,
             "memory_floor_s": self.memory_floor_s,
+            "measured_step_s": self.measured_step_s,
         }
 
 

@@ -48,6 +48,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.factory import ModelAPI
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.sampler import greedy_sampler
 
 
@@ -234,6 +237,9 @@ class _Slot:
     n_sampled: int = 0           # per-request step counter (key schedule)
     last_token: int = 0          # input token while decoding
     deadline: float | None = None  # absolute perf_counter() cutoff
+    # perf_counter() of the last emitted token (inter-token latency); pure
+    # wall-clock bookkeeping, deliberately NOT serialised by snapshot().
+    last_emit_at: float | None = None
 
 
 class StreamingEngine:
@@ -348,6 +354,12 @@ class StreamingEngine:
         self.errors: dict[int, str] = {}       # rid -> error string
         self.n_shed = 0                        # submits rejected (queue full)
         self.n_quarantined = 0                 # slots reset on poisoned logits
+        # Latency bookkeeping for IN-FLIGHT requests only: entries are
+        # evicted the moment a request leaves the system (completed,
+        # deadline-expired, or quarantined), after their TTFT/latency has
+        # been folded into the obs layer (serve_ttft_s histogram +
+        # first_token / request_* events).  A long-lived engine therefore
+        # holds O(queued + active) entries, not O(all requests ever).
         self.submitted_at: dict[int, float] = {}
         self.first_token_at: dict[int, float] = {}
         self._next_id = 0
@@ -380,6 +392,9 @@ class StreamingEngine:
         if (self.max_queue is not None
                 and len(self.queue) >= self.max_queue):
             self.n_shed += 1
+            obs_metrics.inc("serve_shed_total")
+            obs_events.emit("request_shed", queue_depth=len(self.queue),
+                            max_queue=self.max_queue)
             raise EngineOverloaded(
                 f"admission queue full ({len(self.queue)}/{self.max_queue} "
                 "queued); retry later or raise max_queue")
@@ -389,6 +404,11 @@ class StreamingEngine:
         deadline = now + deadline_s if deadline_s is not None else None
         self.queue.append((rid, prompt, int(max_new_tokens), deadline))
         self.submitted_at[rid] = now
+        obs_metrics.inc("serve_requests_total")
+        obs_metrics.set_gauge("serve_queue_depth", len(self.queue))
+        obs_events.emit("request_submitted", rid=rid,
+                        prompt_len=int(prompt.size),
+                        max_new=int(max_new_tokens))
         return rid
 
     def warmup(self) -> float:
@@ -410,26 +430,39 @@ class StreamingEngine:
 
         Returns the number of tokens emitted this tick (0 when idle).
         """
-        self._expire_deadlines()
-        self._admit()
-        if not any(s is not None for s in self.active):
-            return 0
+        with obs_trace.span("engine.schedule"):
+            self._expire_deadlines()
+            self._admit()
+            n_active = sum(s is not None for s in self.active)
+            obs_metrics.set_gauge("serve_queue_depth", len(self.queue))
+            obs_metrics.set_gauge("serve_slot_occupancy",
+                                  n_active / self.n_slots)
+            if n_active == 0:
+                return 0
 
-        tokens = np.zeros((self.n_slots, self.chunk), np.int32)
-        lengths = np.ones((self.n_slots,), np.int32)
-        for i, slot in enumerate(self.active):
-            if slot is None:
-                continue
-            if slot.pending is not None:      # mid-prefill: feed next chunk
-                take = min(slot.pending.size, self.chunk)
-                tokens[i, :take] = slot.pending[:take]
-                lengths[i] = take
-            else:                             # decoding: feed last sample
-                tokens[i, 0] = slot.last_token
+            tokens = np.zeros((self.n_slots, self.chunk), np.int32)
+            lengths = np.ones((self.n_slots,), np.int32)
+            prefill_toks, decode_toks = 0, 0
+            for i, slot in enumerate(self.active):
+                if slot is None:
+                    continue
+                if slot.pending is not None:  # mid-prefill: feed next chunk
+                    take = min(slot.pending.size, self.chunk)
+                    tokens[i, :take] = slot.pending[:take]
+                    lengths[i] = take
+                    prefill_toks += take
+                else:                         # decoding: feed last sample
+                    tokens[i, 0] = slot.last_token
+                    decode_toks += 1
+            if prefill_toks:
+                obs_metrics.inc("serve_prefill_tokens_total", prefill_toks)
+            if decode_toks:
+                obs_metrics.inc("serve_decode_tokens_total", decode_toks)
 
-        last, self.states = self._step_fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-            self.states)
+        with obs_trace.span("engine.step"):
+            last, self.states = self._step_fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+                self.states)
 
         # Slot quarantine: a poisoned carry (hardware fault, numerics bug)
         # shows up as NaN/±inf in that slot's logits.  Detect per row on the
@@ -446,32 +479,49 @@ class StreamingEngine:
                     self.errors[slot.request_id] = ERR_POISONED
                     self.n_quarantined += 1
                     self.active[i] = None
+                    obs_metrics.inc("serve_quarantine_total")
+                    self._request_done(slot.request_id, "quarantine", slot=i)
         if poisoned.any():
             self.states = self._reset_fn(self.states, jnp.asarray(poisoned))
 
         emitted = 0
-        for i, slot in enumerate(self.active):
-            if slot is None:
-                continue
-            if slot.pending is not None:
-                slot.pending = slot.pending[int(lengths[i]):]
-                if slot.pending.size:         # prompt not done — no sample
+        with obs_trace.span("engine.sample"):
+            for i, slot in enumerate(self.active):
+                if slot is None:
                     continue
-                slot.pending = None
-            tok = self.sampler(
-                last[i:i + 1],
-                request_key(self.key, slot.request_id, slot.n_sampled))
-            t = int(tok[0, 0])
-            if not slot.tokens:
-                self.first_token_at[slot.request_id] = time.perf_counter()
-            slot.last_token = t
-            slot.tokens.append(t)
-            slot.n_sampled += 1
-            slot.remaining -= 1
-            emitted += 1
-            if slot.remaining <= 0:
-                self.finished[slot.request_id] = slot.tokens
-                self.active[i] = None
+                if slot.pending is not None:
+                    slot.pending = slot.pending[int(lengths[i]):]
+                    if slot.pending.size:     # prompt not done — no sample
+                        continue
+                    slot.pending = None
+                tok = self.sampler(
+                    last[i:i + 1],
+                    request_key(self.key, slot.request_id, slot.n_sampled))
+                t = int(tok[0, 0])
+                now = time.perf_counter()
+                rid = slot.request_id
+                if not slot.tokens:
+                    self.first_token_at[rid] = now
+                    sub = self.submitted_at.get(rid)
+                    if sub is not None:
+                        obs_metrics.observe("serve_ttft_s", now - sub)
+                        obs_events.emit("first_token", rid=rid,
+                                        ttft_s=now - sub)
+                elif slot.last_emit_at is not None:
+                    obs_metrics.observe("serve_itl_s",
+                                        now - slot.last_emit_at)
+                slot.last_emit_at = now
+                slot.last_token = t
+                slot.tokens.append(t)
+                slot.n_sampled += 1
+                slot.remaining -= 1
+                emitted += 1
+                if slot.remaining <= 0:
+                    self.finished[rid] = slot.tokens
+                    self.active[i] = None
+                    obs_metrics.inc("serve_requests_completed_total")
+                    self._request_done(rid, "request_completed",
+                                       n_tokens=len(slot.tokens))
         return emitted
 
     def run(self) -> dict[int, list[int]]:
@@ -600,6 +650,19 @@ class StreamingEngine:
         return step_restored
 
     # ------------------------------------------------------------ internals
+    def _request_done(self, rid: int, kind: str, **data) -> None:
+        """Terminal per-request accounting: emit the event, evict the
+        latency maps (the fix for unbounded ``first_token_at`` growth —
+        whatever ends a request's life funnels through here)."""
+        now = time.perf_counter()
+        sub = self.submitted_at.pop(rid, None)
+        ft = self.first_token_at.pop(rid, None)
+        if sub is not None:
+            data["total_s"] = now - sub
+            if ft is not None:
+                data["ttft_s"] = ft - sub
+        obs_events.emit(kind, rid=rid, **data)
+
     def _expire_deadlines(self):
         """Error out queued + active requests whose deadline has passed."""
         now = time.perf_counter()
@@ -607,6 +670,8 @@ class StreamingEngine:
         for rid, prompt, max_new, deadline in self.queue:
             if deadline is not None and now > deadline:
                 self.errors[rid] = ERR_DEADLINE
+                obs_metrics.inc("serve_deadline_expired_total")
+                self._request_done(rid, "deadline_expired", queued=True)
             else:
                 kept.append((rid, prompt, max_new, deadline))
         self.queue = kept
@@ -615,6 +680,9 @@ class StreamingEngine:
                     and now > slot.deadline):
                 self.errors[slot.request_id] = ERR_DEADLINE
                 self.active[i] = None   # carry reset on next admit
+                obs_metrics.inc("serve_deadline_expired_total")
+                self._request_done(slot.request_id, "deadline_expired",
+                                   queued=False)
 
     def _admit(self):
         """Move queued requests into free slots; reset their carries once."""

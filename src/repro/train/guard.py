@@ -36,6 +36,11 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+#: per-step metric keys a guarded train step emits (train/state.py) — the
+#: loop and the obs event/metric consumers key on this one tuple instead of
+#: each hard-coding the names (DESIGN.md §Observability).
+GUARD_METRIC_KEYS = ("guard_skipped", "guard_spike", "guard_lr_scale")
+
 
 @dataclasses.dataclass(frozen=True)
 class GuardConfig:

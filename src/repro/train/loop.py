@@ -19,6 +19,16 @@ Production posture (DESIGN.md §6):
   accumulates skipped-step / spike counters and the final LR-backoff scale
   into :class:`LoopResult`; ``LoopConfig.guard=True`` additionally asserts
   the step really is guarded (fail fast, not silently unprotected).
+* **Observability** (DESIGN.md §Observability) — the loop reports through
+  ``repro.obs``: per-step instruments into the ambient metrics registry
+  (tokens/s, token-utilization, a step-time histogram, grad-norm, the guard
+  counters, stragglers), structured events into the ambient JSONL sink
+  (``train_step`` records carry the ``on_log`` metrics dict verbatim;
+  ``straggler`` records replace eyeballing the stragglers list), and a
+  metrics-snapshot JSON dumped at loop exit (``LoopConfig.metrics_out``).
+  ``LoopConfig.events`` opens a file sink when none is ambient.  The
+  in-memory ``history``/``stragglers`` lists remain on :class:`LoopResult`
+  for programmatic callers; the event log is the durable record.
 """
 
 from __future__ import annotations
@@ -33,6 +43,10 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer, latest_step, restore_checkpoint
 from repro.distributed.context import mesh_plan_session
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.export import write_snapshot
 from repro.train.state import TrainState
 
 
@@ -43,7 +57,19 @@ class LoopConfig:
     save_every: int = 100
     log_every: int = 10
     straggler_k: float = 3.0
+    # Straggler cold-start guard: the EWMA variance needs a few samples
+    # before mu + k*sigma means anything — with near-identical early steps
+    # sigma ~ 0 and every step would flag.  No step is flagged until this
+    # many post-compile samples have fed the estimate, and sigma is floored
+    # at 5% of the mean so a flat-variance regime needs a genuinely slow
+    # step (not timer jitter) to flag.
+    straggler_warmup: int = 10
     seed: int = 0
+    # Observability (repro.obs): path of a JSONL event log to open for this
+    # run (skipped when a sink is already ambient — the launcher owns it
+    # then), and path to dump the metrics-registry snapshot at loop exit.
+    events: str | None = None
+    metrics_out: str | None = None
     install_signal_handlers: bool = True
     # Composed parallelism (DESIGN.md §Parallelism): the three knobs below
     # are the per-axis sizes of one MeshPlan (data x seq x model).  Any of
@@ -137,8 +163,12 @@ def run_train_loop(
     history: list = []
     stragglers: list = []
     ewma_t, ewma_var = None, 0.0
+    n_obs = 0
     hooks = _test_hooks or {}
     skipped_steps, spike_steps, lr_scale = 0, 0, 1.0
+
+    own_log = None
+    own_reg = None
 
     # One MeshPlan from the three LoopConfig knobs.  None (the common
     # single-device config: cp = mp = 1, fsdp auto) skips the session
@@ -155,6 +185,16 @@ def run_train_loop(
         # Composed-mesh session (no-op scope when the plan is trivial):
         # train_step traces inside it, so the mixers see the ambient mesh.
         with mesh_plan_session(plan):
+            # Event sink: open a file-backed log when asked and none is
+            # ambient (a launcher-installed sink wins — one log per run, not
+            # one per loop call).  Opened inside the mesh session so the
+            # run_meta header records the mesh shape.
+            if cfg.events is not None and obs_events.current() is None:
+                own_log = obs_events.install(obs_events.EventLog(cfg.events))
+            # Same ownership rule for the metrics registry: a snapshot was
+            # asked for but nothing ambient will collect.
+            if cfg.metrics_out is not None and obs_metrics.current() is None:
+                own_reg = obs_metrics.install(obs_metrics.MetricsRegistry())
             while int(state.step) < cfg.total_steps and not preempt["flag"]:
                 step = int(state.step)
                 batch = next(data_iter)
@@ -169,19 +209,42 @@ def run_train_loop(
                     token_util = float((seg != 0).mean())
                 key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
                 t0 = time.perf_counter()
-                state, metrics = train_step(state, batch, key)
-                jax.block_until_ready(state.params)
+                with obs_trace.span("train.step"):
+                    state, metrics = train_step(state, batch, key)
+                    jax.block_until_ready(state.params)
                 dt = time.perf_counter() - t0
                 if "sleep" in hooks and step in hooks["sleep"]:
                     dt += hooks["sleep"][step]  # injected straggler (tests)
                 if "preempt_at" in hooks and step >= hooks["preempt_at"]:
                     preempt["flag"] = True      # injected preemption (tests)
 
+                # per-step instruments (no-ops without an ambient registry)
+                n_tokens = 0
+                if isinstance(batch, dict) and "tokens" in batch:
+                    n_tokens = int(np.asarray(batch["tokens"]).size)
+                obs_metrics.observe("train_step_time_s", dt)
+                if n_tokens:
+                    obs_metrics.inc("train_tokens_total", n_tokens)
+                    obs_metrics.set_gauge("train_tokens_per_s",
+                                          n_tokens / max(dt, 1e-9))
+                if token_util is not None:
+                    obs_metrics.set_gauge("train_token_util", token_util)
+                if "grad_norm" in metrics:
+                    obs_metrics.set_gauge("train_grad_norm",
+                                          float(metrics["grad_norm"]))
+
                 # guarded-numerics counters (train/guard.py metrics)
                 if "guard_skipped" in metrics:
-                    skipped_steps += int(float(metrics["guard_skipped"]))
-                    spike_steps += int(float(metrics["guard_spike"]))
+                    d_skip = int(float(metrics["guard_skipped"]))
+                    d_spike = int(float(metrics["guard_spike"]))
+                    skipped_steps += d_skip
+                    spike_steps += d_spike
                     lr_scale = float(metrics["guard_lr_scale"])
+                    if d_skip:
+                        obs_metrics.inc("train_guard_skipped_total", d_skip)
+                    if d_spike:
+                        obs_metrics.inc("train_guard_spike_total", d_spike)
+                    obs_metrics.set_gauge("train_guard_lr_scale", lr_scale)
                 elif cfg.guard:
                     raise ValueError(
                         "LoopConfig.guard=True but the train step emits no "
@@ -194,9 +257,14 @@ def run_train_loop(
                     if ewma_t is None:
                         ewma_t = dt
                     else:
-                        thresh = ewma_t + cfg.straggler_k * np.sqrt(ewma_var)
-                        if dt > thresh and ewma_var > 0:
+                        n_obs += 1
+                        sigma = max(float(np.sqrt(ewma_var)), 0.05 * ewma_t)
+                        thresh = ewma_t + cfg.straggler_k * sigma
+                        if dt > thresh and n_obs >= cfg.straggler_warmup:
                             stragglers.append((step, dt, float(thresh)))
+                            obs_metrics.inc("train_straggler_total")
+                            obs_events.emit("straggler", step=step, dt_s=dt,
+                                            threshold_s=float(thresh))
                         delta = dt - ewma_t
                         ewma_t += 0.1 * delta
                         ewma_var = 0.9 * (ewma_var + 0.1 * delta * delta)
@@ -207,6 +275,9 @@ def run_train_loop(
                     if token_util is not None:
                         m["token_util"] = token_util
                     history.append((step, m))
+                    # the event record carries the on_log dict verbatim —
+                    # the durable form of the same log line
+                    obs_events.emit("train_step", step=step, **m)
                     if on_log:
                         on_log(step, m)
 
@@ -228,6 +299,17 @@ def run_train_loop(
             ckpt.wait()
         for sig, h in prev_handlers.items():
             signal.signal(sig, h)
+        obs_events.emit("run_end", step=int(state.step),
+                        preempted=bool(preempt["flag"]),
+                        skipped_steps=skipped_steps, spike_steps=spike_steps,
+                        lr_scale=lr_scale, n_stragglers=len(stragglers))
+        if cfg.metrics_out is not None:
+            write_snapshot(cfg.metrics_out)
+        if own_reg is not None:
+            obs_metrics.uninstall()
+        if own_log is not None:
+            obs_events.uninstall()
+            own_log.close()
 
     return LoopResult(state=state, history=history, stragglers=stragglers,
                       preempted=preempt["flag"], resumed_from=resumed_from,
