@@ -6,6 +6,7 @@ from repro.checkpoint.io import (  # noqa: F401
     CheckpointStructureError,
     available_steps,
     latest_step,
+    read_checkpoint_extra,
     restore_checkpoint,
     save_checkpoint,
     verify_checkpoint,

@@ -251,6 +251,23 @@ def verify_checkpoint(directory: str, step: int) -> dict:
     return manifest
 
 
+def read_checkpoint_extra(directory: str, step: int) -> dict:
+    """Read one step's manifest ``extra`` dict without restoring any leaves.
+
+    For callers whose restore *template depends on what was saved* (e.g. the
+    serving prefix cache: the number of cached entries is itself checkpoint
+    state).  They read ``extra`` first, build the template from it, then call
+    :func:`restore_checkpoint` — which still verifies every chunk, so a step
+    whose metadata reads fine but whose data is corrupt fails there, not
+    here.  Raises :class:`CheckpointCorruptionError` on a missing/unreadable
+    manifest.
+    """
+    src = os.path.join(directory, f"step_{step:012d}")
+    if not os.path.isdir(src):
+        raise CheckpointCorruptionError(f"{src}: no such checkpoint")
+    return _read_manifest(src).get("extra", {})
+
+
 def _restore_step(src: str, tree_like: Any, *, shardings, strict: bool):
     manifest = _read_manifest(src)
     paths, like_leaves, treedef = _flatten_with_paths(tree_like)

@@ -31,6 +31,7 @@ from repro.obs.export import serve_metrics, write_snapshot
 from repro.obs.metrics import MetricsRegistry, use_metrics
 from repro.serving import (
     EngineOverloaded,
+    PrefixCache,
     StreamingEngine,
     decode_state_bytes,
     generate,
@@ -60,6 +61,19 @@ def main():
     ap.add_argument("--deadline-s", type=float, default=0.0,
                     help="per-request wall-clock deadline; expired requests "
                          "error out (0 = none)")
+    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                    help="prompt-prefix carry cache budget in MiB "
+                         "(streaming engine only; 0 = off)")
+    ap.add_argument("--prefix-cache-min-hits", type=int, default=2,
+                    help="boundary must be seen this many times before its "
+                         "carry is cached (pinned prefixes skip this)")
+    ap.add_argument("--pin-prefix", action="append", default=[],
+                    metavar="IDS",
+                    help="comma-separated token ids of a prefix to pin "
+                         "(always cached, never evicted); repeatable")
+    ap.add_argument("--prefix-cache-dir", default=None,
+                    help="directory to load the prefix cache from at start "
+                         "and save it to at exit (crc'd checkpoint chunks)")
     ap.add_argument("--events", default=None,
                     help="path of the JSONL event log to write "
                          "(repro.obs.events; off when omitted)")
@@ -113,6 +127,12 @@ def _run(args):
     n_tokens = args.requests * args.max_new
 
     if args.engine == "wave":
+        if args.prefix_cache_mb:
+            # KV-cache (softmax) archs have no position-free carry to cache;
+            # the flag is a clean no-op rather than a crash so one launch
+            # script can serve both arch families.
+            print("[wave] --prefix-cache-mb ignored: prefix-state caching "
+                  "needs the streaming engine's position-free carries")
         # Warm up prefill + decode at the serving shapes (cache_len pinned so
         # the timed call hits the same trace), then time steady state.
         cache_len = args.prompt_len + args.max_new
@@ -130,9 +150,24 @@ def _run(args):
               f"({n_tokens / steady_s:.0f} tok/s); decode state "
               f"{decode_state_bytes(states) / 2**20:.3f} MiB")
     else:
+        cache = None
+        if args.prefix_cache_mb:
+            cache = PrefixCache(max_bytes=int(args.prefix_cache_mb * 2**20),
+                                min_hits=args.prefix_cache_min_hits)
         eng = StreamingEngine(api, params, n_slots=args.slots,
                               chunk=args.chunk or None, sampler=sampler,
-                              max_queue=args.max_queue or None)
+                              max_queue=args.max_queue or None,
+                              prefix_cache=cache)
+        if cache is not None:
+            for spec in args.pin_prefix:
+                cache.pin([int(t) for t in spec.split(",") if t.strip()])
+            if args.prefix_cache_dir:
+                try:
+                    got = cache.load(args.prefix_cache_dir)
+                    print(f"[streaming] prefix cache: restored step {got} "
+                          f"({len(cache)} entries)")
+                except FileNotFoundError:
+                    pass   # first run: nothing to restore yet
         compile_s = eng.warmup()
         deadline = args.deadline_s or None
         for i in range(args.requests):
@@ -154,6 +189,16 @@ def _run(args):
             print(f"[streaming] degraded: shed {eng.n_shed}, errored "
                   f"{len(eng.errors)} (deadline/poison), quarantined "
                   f"{eng.n_quarantined} slots")
+        if cache is not None:
+            st = cache.stats()
+            print(f"[streaming] prefix cache: {st['entries']} entries / "
+                  f"{st['bytes'] / 2**10:.1f} KiB, hit rate "
+                  f"{st['hit_rate']:.0%}, {st['prefill_tokens_saved']} "
+                  "prefill tokens saved")
+            if args.prefix_cache_dir:
+                cache.save(args.prefix_cache_dir, 0)
+                print(f"[streaming] prefix cache saved to "
+                      f"{args.prefix_cache_dir}")
 
 
 if __name__ == "__main__":

@@ -397,6 +397,49 @@ def lm_state_batch_axes(cfg: ArchConfig):
         is_leaf=blocks.AXES_IS_LEAF)
 
 
+def lm_state_take_slot(cfg: ArchConfig, states: dict, idx: jax.Array):
+    """Extract slot ``idx`` of a batched decode-state tree.
+
+    Returns a tree of the same structure whose every batched leaf keeps a
+    size-1 batch axis (so the result round-trips through
+    :func:`lm_state_put_slot` unchanged) — the serving prefix cache's
+    carry-extraction primitive.  Leaves with no batch axis (``-1`` in
+    :func:`lm_state_batch_axes`) are passed through untouched.  ``idx`` may
+    be traced: the serving engine jits this once and gathers any slot.
+    """
+    axes = lm_state_batch_axes(cfg)
+
+    def leaf(batched, ax):
+        if ax < 0:
+            return batched
+        return jax.lax.dynamic_index_in_dim(batched, idx, axis=ax,
+                                            keepdims=True)
+
+    return jax.tree.map(leaf, states, axes)
+
+
+def lm_state_put_slot(cfg: ArchConfig, states: dict, carry: dict,
+                      mask: jax.Array):
+    """Write a size-1-batch ``carry`` into every slot where ``mask`` is True.
+
+    The injection twin of :func:`lm_state_take_slot`: a masked ``where``
+    against the batched state, addressed by the same explicit batch-axis
+    metadata the engine's ``reset`` uses (shape-matching heuristics break
+    when a state dim equals ``n_slots``).  The carry's size-1 batch axis
+    broadcasts across the masked slots.
+    """
+    axes = lm_state_batch_axes(cfg)
+    n = mask.shape[0]
+
+    def leaf(batched, one, ax):
+        if ax < 0:
+            return batched
+        sel = mask.reshape((1,) * ax + (n,) + (1,) * (batched.ndim - ax - 1))
+        return jnp.where(sel, one, batched)
+
+    return jax.tree.map(leaf, states, carry, axes)
+
+
 def lm_state_init(cfg: ArchConfig, batch: int, cache_len: int):
     """Concrete zero-initialised decode state (tests + serving)."""
     n_periods, n_rest = cfg.layer_plan()

@@ -9,4 +9,5 @@ from repro.serving.engine import (  # noqa: F401
     generate,
     request_key,
 )
+from repro.serving.prefix_cache import PrefixCache  # noqa: F401
 from repro.serving.sampler import greedy_sampler, temperature_sampler  # noqa: F401

@@ -240,6 +240,14 @@ class _Slot:
     # perf_counter() of the last emitted token (inter-token latency); pure
     # wall-clock bookkeeping, deliberately NOT serialised by snapshot().
     last_emit_at: float | None = None
+    # Prefix-cache bookkeeping: the full prompt (for prefix extraction at
+    # insert time), prompt tokens folded into the carry so far (cache-hit
+    # admits start at the matched length), and the prompt's precomputed
+    # grid-hash dict ({boundary_len: hash}, None when no cache is attached
+    # or after a restore — insertion is then skipped for this request).
+    prompt: np.ndarray | None = None
+    consumed: int = 0
+    hashes: dict | None = None
 
 
 class StreamingEngine:
@@ -256,6 +264,23 @@ class StreamingEngine:
     tick).  All-Aaren patterns accept any chunk (masked positions are
     ⊕-identity in the prefix scan); RG-LRU/SSD carries advance strictly
     token-by-token, so mixed patterns require ``chunk == 1``.
+
+    ``prefix_cache`` (optional :class:`~repro.serving.prefix_cache
+    .PrefixCache`) caches prompt-prefix carries across requests: an
+    admitted prompt whose longest cached prefix has length L skips L
+    tokens of prefill (the carry is injected through the same
+    masked-``where`` path as a reset), and prefills that cross a wanted
+    chunk boundary copy the slot carry out.  Because carries are
+    position-free O(layers·heads) tuples, a cached 1k-token system prompt
+    costs kilobytes, not a paged KV block.  The cache binds to this
+    engine's chunk grid at construction; attaching it to an engine with a
+    different ``chunk`` raises.
+
+    Slot-carry lifecycle invariant (DESIGN.md §Serving): **free slots
+    always hold the ⊕-identity init carry.**  Every exit path — completion,
+    deadline expiry, quarantine, restore — resets the slot's rows of
+    ``self.states`` eagerly in the same tick; ``_admit`` relies on it and
+    only writes state for cache hits.
 
     Degradation under faults (DESIGN.md §Fault-tolerance):
 
@@ -280,7 +305,8 @@ class StreamingEngine:
                  sampler: Callable = greedy_sampler,
                  key: jax.Array | None = None,
                  max_queue: int | None = None,
-                 guard_logits: bool = True):
+                 guard_logits: bool = True,
+                 prefix_cache=None):
         pattern = api.cfg.effective_pattern()
         if any(m in ("attn", "attn_local") for m in pattern):
             raise ValueError(
@@ -307,6 +333,8 @@ class StreamingEngine:
             lm_prefill_chunk,
             lm_state_batch_axes,
             lm_state_init,
+            lm_state_put_slot,
+            lm_state_take_slot,
         )
 
         cfg = api.cfg
@@ -321,6 +349,24 @@ class StreamingEngine:
             mask = jnp.arange(chunk)[None, :] < lengths[:, None]
             logits, new_states = lm_prefill_chunk(
                 cfg, pr, tokens, states, length_mask=mask)
+            # An all-padding row (lengths == 0) keeps its carry bit-for-bit.
+            # The ⊕-identity mask guarantees this *mathematically* but not
+            # bitwise: a masked leaf folded into an EMPTY carry contributes
+            # exp(NEG_INF - NEG_INF) = 1 to u (the finite sentinel cancels
+            # against itself; any real m annihilates it later).  The slot
+            # lifecycle invariant — free slots hold the init carry — is a
+            # bitwise contract, so pin it here with the same masked-where
+            # used by reset.
+            live = lengths > 0
+
+            def keep(old, new, ax):
+                if ax < 0:
+                    return new
+                sel = live.reshape(
+                    (1,) * ax + (n_slots,) + (1,) * (new.ndim - ax - 1))
+                return jnp.where(sel, new, old)
+
+            new_states = jax.tree.map(keep, states, new_states, batch_axes)
             # A slot scheduled with lengths == 0 (all-padding row) has no
             # valid position: `lengths - 1` would gather index −1 — position
             # 0's logits under clip semantics, silently, and the *last*
@@ -346,6 +392,30 @@ class StreamingEngine:
 
         self._step_fn = _jit(step)
         self._reset_fn = _jit(reset)
+
+        # Prefix cache (serving/prefix_cache.py): the gather/inject entry
+        # points exist ONLY when a cache is attached — a cache-less engine
+        # keeps exactly two jitted functions (pinned by the trace-count
+        # test).  Both take the slot index / mask as *traced* arguments, so
+        # each is one trace for any slot.
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None:
+            prefix_cache.bind(
+                chunk, jax.tree.map(np.asarray, lm_state_init(cfg, 1, 1)))
+
+            def gather(states, idx):
+                """Copy out slot ``idx``'s carry (size-1 slot axis)."""
+                return lm_state_take_slot(cfg, states, idx)
+
+            def inject(states, carry, mask):
+                """Seed every masked slot's carry from a cached prefix."""
+                return lm_state_put_slot(cfg, states, carry, mask)
+
+            self._gather_fn = _jit(gather)
+            self._inject_fn = _jit(inject)
+        else:
+            self._gather_fn = None
+            self._inject_fn = None
 
         self.active: list[_Slot | None] = [None] * n_slots
         # queue entries: (rid, prompt, max_new, deadline | None)
@@ -422,6 +492,12 @@ class StreamingEngine:
         lengths = jnp.ones((self.n_slots,), jnp.int32)
         last, states = self._step_fn(self.params, tokens, lengths, self.states)
         states = self._reset_fn(states, jnp.zeros((self.n_slots,), bool))
+        if self.prefix_cache is not None:
+            # The cache's gather/inject entry points compile here too — the
+            # first cache hit must not pay jit compile inside a TTFT.
+            carry = self._gather_fn(states, jnp.int32(0))
+            states = self._inject_fn(states, carry,
+                                     jnp.zeros((self.n_slots,), bool))
         jax.block_until_ready((last, states))
         return time.perf_counter() - t0
 
@@ -440,8 +516,13 @@ class StreamingEngine:
             if n_active == 0:
                 return 0
 
+            # Free slots stay all-padding (lengths == 0): their rows enter
+            # the scan as ⊕-identity leaves and their carries are untouched,
+            # preserving the lifecycle invariant between ticks.  (They used
+            # to be fed token 0 with lengths == 1, quietly accumulating
+            # garbage that the next admit's reset had to paper over.)
             tokens = np.zeros((self.n_slots, self.chunk), np.int32)
-            lengths = np.ones((self.n_slots,), np.int32)
+            lengths = np.zeros((self.n_slots,), np.int32)
             prefill_toks, decode_toks = 0, 0
             for i, slot in enumerate(self.active):
                 if slot is None:
@@ -453,6 +534,7 @@ class StreamingEngine:
                     prefill_toks += take
                 else:                         # decoding: feed last sample
                     tokens[i, 0] = slot.last_token
+                    lengths[i] = 1
                     decode_toks += 1
             if prefill_toks:
                 obs_metrics.inc("serve_prefill_tokens_total", prefill_toks)
@@ -485,12 +567,16 @@ class StreamingEngine:
             self.states = self._reset_fn(self.states, jnp.asarray(poisoned))
 
         emitted = 0
+        completed = np.zeros((self.n_slots,), bool)
         with obs_trace.span("engine.sample"):
             for i, slot in enumerate(self.active):
                 if slot is None:
                     continue
                 if slot.pending is not None:
-                    slot.pending = slot.pending[int(lengths[i]):]
+                    take = int(lengths[i])
+                    slot.pending = slot.pending[take:]
+                    slot.consumed += take
+                    self._maybe_cache_prefix(i, slot)
                     if slot.pending.size:     # prompt not done — no sample
                         continue
                     slot.pending = None
@@ -519,9 +605,15 @@ class StreamingEngine:
                 if slot.remaining <= 0:
                     self.finished[rid] = slot.tokens
                     self.active[i] = None
+                    completed[i] = True
                     obs_metrics.inc("serve_requests_completed_total")
                     self._request_done(rid, "request_completed",
                                        n_tokens=len(slot.tokens))
+        if completed.any():
+            # Slot-carry lifecycle invariant (DESIGN.md §Serving): a freed
+            # slot's carry returns to the ⊕-identity init in the same tick,
+            # never lingering until the next admit.
+            self.states = self._reset_fn(self.states, jnp.asarray(completed))
         return emitted
 
     def run(self) -> dict[int, list[int]]:
@@ -555,6 +647,9 @@ class StreamingEngine:
                 "n_sampled": slot.n_sampled,
                 "last_token": slot.last_token,
                 "deadline_remaining_s": _remaining(slot.deadline),
+                "prompt": (None if slot.prompt is None
+                           else slot.prompt.tolist()),
+                "consumed": slot.consumed,
             }
 
         tree = {
@@ -599,6 +694,7 @@ class StreamingEngine:
         def _slot(m):
             if m is None:
                 return None
+            prompt = m.get("prompt")
             return _Slot(
                 request_id=m["request_id"],
                 pending=(None if m["pending"] is None
@@ -608,6 +704,11 @@ class StreamingEngine:
                 n_sampled=m["n_sampled"],
                 last_token=m["last_token"],
                 deadline=_absolute(m["deadline_remaining_s"]),
+                prompt=(None if prompt is None
+                        else np.asarray(prompt, np.int32)),
+                # hashes stays None: restored in-flight prefills skip cache
+                # insertion (their grid hashes died with the old process).
+                consumed=int(m.get("consumed", 0)),
             )
 
         self.states = jax.tree.map(jnp.asarray, snap["tree"]["states"])
@@ -623,9 +724,28 @@ class StreamingEngine:
         self.n_shed = int(meta["n_shed"])
         self.n_quarantined = int(meta["n_quarantined"])
         self._next_id = int(meta["next_id"])
-        # Wall-clock latency bookkeeping does not survive a restart.
-        self.submitted_at = {}
+        # Lifecycle invariant holds across restore too: free slots carry the
+        # ⊕-identity init even if the snapshot predates the eager-reset fix
+        # (or was taken by a buggy build).
+        free = np.asarray([s is None for s in self.active], bool)
+        if free.any():
+            self.states = self._reset_fn(self.states, jnp.asarray(free))
+        # Absolute perf_counter() values don't survive a restart, but wiping
+        # the latency maps outright made every restored request's terminal
+        # event drop ``total_s`` and its first token miss the TTFT
+        # histogram.  Re-seed submission at *restore* time: post-restore
+        # latencies deliberately exclude pre-crash time (a restore is a new
+        # clock epoch), which under- rather than over-states them.
+        self.submitted_at = {
+            rid: now
+            for rid in ([s.request_id for s in self.active if s is not None]
+                        + [rid for rid, _, _, _ in self.queue])
+        }
         self.first_token_at = {}
+        obs_metrics.set_gauge("serve_queue_depth", len(self.queue))
+        obs_metrics.set_gauge(
+            "serve_slot_occupancy",
+            sum(s is not None for s in self.active) / self.n_slots)
 
     def save(self, directory: str, step: int) -> str:
         """Atomic crash-safe engine checkpoint (checkpoint/io.py layer)."""
@@ -675,25 +795,63 @@ class StreamingEngine:
             else:
                 kept.append((rid, prompt, max_new, deadline))
         self.queue = kept
+        expired = np.zeros((self.n_slots,), bool)
         for i, slot in enumerate(self.active):
             if (slot is not None and slot.deadline is not None
                     and now > slot.deadline):
                 self.errors[slot.request_id] = ERR_DEADLINE
-                self.active[i] = None   # carry reset on next admit
+                self.active[i] = None
+                expired[i] = True
                 obs_metrics.inc("serve_deadline_expired_total")
                 self._request_done(slot.request_id, "deadline_expired",
                                    queued=False)
+        if expired.any():
+            # Eager carry reset, same as the quarantine path — leaving the
+            # dead request's carry in ``self.states`` until the next admit
+            # violated the lifecycle invariant (a snapshot taken in the gap
+            # captured another tenant's state in a "free" slot).
+            self.states = self._reset_fn(self.states, jnp.asarray(expired))
 
     def _admit(self):
-        """Move queued requests into free slots; reset their carries once."""
-        freed = np.zeros((self.n_slots,), bool)
+        """Move queued requests into free slots.
+
+        Free slots already hold ⊕-identity init carries (every exit path
+        resets eagerly — the lifecycle invariant), so admission only
+        *writes* state for prefix-cache hits: the cached carry is injected
+        into the slot row and the matched prompt tokens are skipped.
+        """
         for i in range(self.n_slots):
             if self.active[i] is not None or not self.queue:
                 continue
             rid, prompt, max_new, deadline = self.queue.pop(0)
-            self.active[i] = _Slot(request_id=rid, pending=prompt,
-                                   tokens=[], remaining=max_new,
-                                   deadline=deadline)
-            freed[i] = True
-        if freed.any():
-            self.states = self._reset_fn(self.states, jnp.asarray(freed))
+            slot = _Slot(request_id=rid, pending=prompt,
+                         tokens=[], remaining=max_new,
+                         deadline=deadline, prompt=prompt)
+            if self.prefix_cache is not None:
+                match_len, carry, hashes = self.prefix_cache.lookup(prompt)
+                slot.hashes = hashes
+                if match_len:
+                    mask = np.zeros((self.n_slots,), bool)
+                    mask[i] = True
+                    self.states = self._inject_fn(
+                        self.states, jax.tree.map(jnp.asarray, carry),
+                        jnp.asarray(mask))
+                    slot.pending = prompt[match_len:]
+                    slot.consumed = match_len
+            self.active[i] = slot
+
+    def _maybe_cache_prefix(self, i: int, slot: _Slot) -> None:
+        """Copy slot ``i``'s carry into the prefix cache when the prefill
+        just crossed a chunk-grid boundary the cache wants (seen >= k times
+        or pinned).  Runs after ``_step_fn``, so ``self.states`` row ``i``
+        is exactly the carry of ``prompt[:consumed]``."""
+        cache = self.prefix_cache
+        if (cache is None or slot.hashes is None
+                or slot.consumed % self.chunk != 0):
+            return
+        h = slot.hashes.get(slot.consumed)
+        if h is None or not cache.wants(slot.consumed, h):
+            return
+        carry = self._gather_fn(self.states, jnp.int32(i))
+        cache.insert(slot.prompt[:slot.consumed], h,
+                     jax.tree.map(np.asarray, carry))

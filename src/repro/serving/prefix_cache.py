@@ -1,0 +1,398 @@
+"""Prefix-state cache: constant-memory multi-tenant prompt caching.
+
+The paper's headline systems claim (PAPER.md §4) is that a whole prompt
+prefix compresses to a per-layer ``(m, u, w)`` carry of O(layers·heads)
+floats.  Where a paged-KV serving system needs a block allocator and
+O(tokens) of HBM per cached prefix, caching an Aaren prefix is a dict of
+tiny host arrays — a million users' shared system prompts fit in megabytes
+("Efficient Attention using a Fixed-Size Memory Representation" is the
+conceptual ancestor of fixed-size state making this cheap).
+
+Keying (DESIGN.md §Prefix-cache):
+
+* Prefixes are keyed by ``(length, rolling hash)`` over token ids, with the
+  hash computed incrementally (one multiply-add per token) at **chunk-grid
+  boundaries** only — the engine's prefill chunk size defines the grid, so
+  a cached carry always corresponds to a chunk boundary the cold path would
+  also have paused at.  That alignment is what makes a cache-hit request's
+  remaining prefill chunks *byte-identical* to the cold run's (same chunk
+  boundaries, same ⊕ fold order), pinned by tests.
+* A hash match is verified against the entry's stored token ids before it
+  counts as a hit — collisions degrade to misses, never to wrong carries.
+* :meth:`lookup` returns the **longest** cached verified prefix of a prompt
+  with at least one token left over (the engine still needs last-token
+  logits to sample from).
+
+Admission: a prefix boundary becomes cacheable once seen ``min_hits`` times
+(:meth:`lookup` counts sightings) or immediately when :meth:`pin`-ned
+(system prompts, few-shot templates).  The engine copies the slot's carry
+out at the first prefill that crosses a wanted boundary.
+
+Eviction: LRU over entries under a byte budget (``max_bytes``); pinned
+entries are exempt (they count toward the budget but are never evicted).
+
+Persistence: :meth:`save`/:meth:`load` ride the checkpoint layer's atomic
+crc'd-chunk writes — a restarted engine keeps its hot set, and ``load``
+walks past corrupt steps exactly like a params restore.
+
+All methods are engine-thread-only (the engine touches the cache from
+``_admit``/``step``); the cache holds **host** numpy trees — device
+transfer happens at injection, in the engine's jitted ``put_slot``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
+
+#: rolling polynomial hash parameters (Mersenne-prime modulus keeps the
+#: python-int arithmetic exact and the collision rate ~2^-61 per pair;
+#: correctness never depends on it — matches verify token ids).
+_HASH_MOD = (1 << 61) - 1
+_HASH_BASE = 1_000_003
+
+#: bound on the seen-count table (admission bookkeeping, not cached data):
+#: oldest sightings fall off so a long-lived engine's admission state stays
+#: O(1) even under pathological all-unique traffic.
+_SEEN_CAP = 65536
+
+
+def _roll(h: int, tokens: np.ndarray) -> int:
+    """Fold ``tokens`` into rolling hash ``h`` (python ints — exact)."""
+    for t in tokens.tolist():
+        h = (h * _HASH_BASE + int(t) + 1) % _HASH_MOD
+    return h
+
+
+def grid_hashes(tokens: np.ndarray, chunk: int) -> dict[int, int]:
+    """Rolling hash of every chunk-grid prefix of ``tokens``.
+
+    Returns ``{L: hash(tokens[:L])}`` for L in {chunk, 2·chunk, ...} up to
+    ``len(tokens)`` inclusive (the full prompt, when grid-aligned, is a
+    valid boundary — usable by *longer* prompts sharing it).  One pass,
+    O(len) multiplies.
+    """
+    out: dict[int, int] = {}
+    h = 0
+    n = int(tokens.size)
+    for lo in range(0, n - n % chunk, chunk):
+        h = _roll(h, tokens[lo:lo + chunk])
+        out[lo + chunk] = h
+    return out
+
+
+def carry_bytes(carry: Any) -> int:
+    """Total bytes of a (host) carry pytree."""
+    return int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(carry)))
+
+
+@dataclasses.dataclass
+class _Entry:
+    tokens: np.ndarray        # (L,) int32 — verification copy of the prefix
+    carry: Any                # host pytree, size-1 slot axis on every leaf
+    nbytes: int               # carry + tokens footprint
+    pinned: bool
+    hits: int = 0
+
+
+class PrefixCache:
+    """LRU prefix-carry cache over the engine's chunk grid.
+
+    ``max_bytes``: eviction budget (carry + key-token bytes).
+    ``min_hits``: a boundary must be seen this many times before it is
+    cached (1 = cache on first sight); :meth:`pin`-ned prefixes skip the
+    threshold.  ``chunk`` may be deferred to :meth:`bind` (the engine binds
+    its own chunk size and carry template at construction).
+    """
+
+    def __init__(self, max_bytes: int, *, min_hits: int = 2,
+                 chunk: int | None = None):
+        if max_bytes <= 0:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
+        if min_hits < 1:
+            raise ValueError(f"min_hits must be >= 1, got {min_hits}")
+        self.max_bytes = int(max_bytes)
+        self.min_hits = int(min_hits)
+        self.chunk = chunk
+        self._template: Any = None       # host carry tree (load() template)
+        self._entries: "OrderedDict[tuple[int, int], _Entry]" = OrderedDict()
+        self._seen: "OrderedDict[tuple[int, int], int]" = OrderedDict()
+        self._pinned: dict[tuple[int, int], np.ndarray] = {}
+        self.bytes = 0
+        self.n_hits = 0
+        self.n_misses = 0
+        self.n_inserts = 0
+        self.n_evictions = 0
+        self.tokens_saved = 0
+
+    # ---------------------------------------------------------------- bind
+    def bind(self, chunk: int, template: Any) -> None:
+        """Adopt the engine's chunk grid and carry-tree template.
+
+        A cache whose entries were keyed on one grid cannot serve another:
+        the carries would be injected at boundaries the cold path never
+        pauses at (outputs would drift from byte-identical to merely
+        mathematically equal).  Binding a different chunk therefore raises.
+        """
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if self.chunk is not None and self.chunk != chunk:
+            raise ValueError(
+                f"prefix cache is bound to chunk={self.chunk}; an engine "
+                f"with chunk={chunk} cannot share it (entries are keyed on "
+                "the chunk grid)")
+        self.chunk = chunk
+        self._template = jax.tree.map(np.asarray, template)
+
+    def _require_bound(self):
+        if self.chunk is None:
+            raise ValueError("prefix cache is unbound: attach it to a "
+                             "StreamingEngine (or call bind()) first")
+
+    # -------------------------------------------------------------- lookup
+    def pin(self, tokens) -> None:
+        """Mark an exact prefix (e.g. a system prompt) as always-cacheable.
+
+        The prefix is truncated down to the chunk grid (a carry can only be
+        extracted at a chunk boundary).  Pinned prefixes are cached on the
+        first prefill through them and never evicted.
+        """
+        self._require_bound()
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        n = int(tokens.size) - int(tokens.size) % self.chunk
+        if n == 0:
+            raise ValueError(
+                f"pinned prefix has {tokens.size} tokens — shorter than one "
+                f"chunk ({self.chunk}); nothing can be cached for it")
+        tokens = tokens[:n]
+        key = (n, _roll(0, tokens))
+        self._pinned[key] = tokens
+        ent = self._entries.get(key)
+        if ent is not None:
+            ent.pinned = True
+
+    def lookup(self, prompt: np.ndarray):
+        """Longest-cached-prefix match + admission counting, at admit time.
+
+        Returns ``(match_len, carry, hashes)``: ``match_len`` is 0 on a
+        miss, else the longest cached verified prefix length ≤ len-1 (the
+        engine must keep ≥ 1 token to sample from); ``carry`` the entry's
+        host tree; ``hashes`` the prompt's grid-hash dict, which the engine
+        keeps on the slot so insertion boundaries are O(1) lookups.
+        """
+        self._require_bound()
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        hashes = grid_hashes(prompt, self.chunk)
+        match_len, carry = 0, None
+        for length in sorted(hashes, reverse=True):
+            if length > prompt.size - 1:
+                continue
+            ent = self._entries.get((length, hashes[length]))
+            if ent is not None and np.array_equal(ent.tokens,
+                                                  prompt[:length]):
+                match_len, carry = length, ent.carry
+                ent.hits += 1
+                self._entries.move_to_end((length, hashes[length]))
+                break
+        # Admission counting: every grid boundary of this prompt was seen
+        # once more (including already-cached ones — the count is also the
+        # re-admission signal after an eviction).
+        for length, h in hashes.items():
+            key = (length, h)
+            self._seen[key] = self._seen.pop(key, 0) + 1
+            while len(self._seen) > _SEEN_CAP:
+                self._seen.popitem(last=False)
+        if match_len:
+            self.n_hits += 1
+            self.tokens_saved += match_len
+            obs_metrics.inc("serve_prefix_cache_hits_total")
+            obs_metrics.inc("serve_prefix_tokens_saved_total", match_len)
+            obs_events.emit("prefix_cache_hit", prefix_len=match_len,
+                            prompt_len=int(prompt.size))
+        else:
+            self.n_misses += 1
+            obs_metrics.inc("serve_prefix_cache_misses_total")
+        return match_len, carry, hashes
+
+    def wants(self, length: int, h: int) -> bool:
+        """Should the engine copy out the carry at this boundary?"""
+        key = (length, h)
+        if key in self._entries:
+            return False
+        return key in self._pinned or self._seen.get(key, 0) >= self.min_hits
+
+    # -------------------------------------------------------------- insert
+    def insert(self, tokens: np.ndarray, h: int, carry: Any) -> None:
+        """Admit one prefix carry (host-copied) and evict LRU past budget."""
+        self._require_bound()
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if tokens.size % self.chunk != 0:
+            raise ValueError(
+                f"prefix length {tokens.size} is off the chunk grid "
+                f"(chunk={self.chunk}) — carries exist only at boundaries")
+        key = (int(tokens.size), int(h))
+        carry = jax.tree.map(np.asarray, carry)
+        nbytes = carry_bytes(carry) + tokens.nbytes
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.bytes -= old.nbytes
+        self._entries[key] = _Entry(
+            tokens=tokens, carry=carry, nbytes=nbytes,
+            pinned=key in self._pinned)
+        self.bytes += nbytes
+        self.n_inserts += 1
+        obs_metrics.inc("serve_prefix_cache_inserts_total")
+        obs_events.emit("prefix_cache_insert", prefix_len=int(tokens.size),
+                        nbytes=nbytes)
+        self._evict_to_budget()
+        self._update_gauges()
+
+    def _evict_to_budget(self):
+        while self.bytes > self.max_bytes:
+            victim = next((k for k, e in self._entries.items()
+                           if not e.pinned), None)
+            if victim is None:     # only pinned left: exempt, budget overrun
+                break
+            ent = self._entries.pop(victim)
+            self.bytes -= ent.nbytes
+            self.n_evictions += 1
+            obs_metrics.inc("serve_prefix_cache_evictions_total")
+            obs_events.emit("prefix_cache_evict", prefix_len=victim[0],
+                            nbytes=ent.nbytes)
+
+    def _update_gauges(self):
+        obs_metrics.set_gauge("serve_prefix_cache_bytes", self.bytes)
+        obs_metrics.set_gauge("serve_prefix_cache_entries",
+                              len(self._entries))
+
+    # --------------------------------------------------------------- stats
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict:
+        total = self.n_hits + self.n_misses
+        return {
+            "entries": len(self._entries),
+            "bytes": self.bytes,
+            "max_bytes": self.max_bytes,
+            "hits": self.n_hits,
+            "misses": self.n_misses,
+            "hit_rate": self.n_hits / total if total else 0.0,
+            "inserts": self.n_inserts,
+            "evictions": self.n_evictions,
+            "prefill_tokens_saved": self.tokens_saved,
+        }
+
+    # --------------------------------------------------- persistence layer
+    @staticmethod
+    def _key_str(key: tuple[int, int]) -> str:
+        return f"L{key[0]}_H{key[1]:016x}"
+
+    def save(self, directory: str, step: int) -> str:
+        """Atomic crash-safe cache checkpoint (checkpoint/io.py layer).
+
+        Entries are saved in LRU order (oldest first) so a load rebuilds
+        the same eviction order; counters travel in ``extra``.
+        """
+        from repro.checkpoint import save_checkpoint
+
+        self._require_bound()
+        tree = {"entries": {self._key_str(k): e.carry
+                            for k, e in self._entries.items()}}
+        meta = {
+            "schema": 1,
+            "chunk": self.chunk,
+            "entries": [
+                {"key": self._key_str(k), "length": k[0], "hash": str(k[1]),
+                 "tokens": e.tokens.tolist(), "pinned": e.pinned,
+                 "hits": e.hits}
+                for k, e in self._entries.items()
+            ],
+            "counters": {"hits": self.n_hits, "misses": self.n_misses,
+                         "inserts": self.n_inserts,
+                         "evictions": self.n_evictions,
+                         "tokens_saved": self.tokens_saved},
+        }
+        return save_checkpoint(directory, step, tree,
+                               extra={"prefix_cache": meta})
+
+    def load(self, directory: str, step: int | None = None) -> int:
+        """Restore the hot set; ``step=None`` falls back past corrupt steps.
+
+        The restore template is rebuilt per candidate step from the
+        manifest's ``extra`` (entry count is itself checkpoint state), then
+        every carry chunk is crc-verified by the checkpoint layer — a step
+        whose metadata is intact but whose carry data is corrupt is skipped
+        in the walk, exactly like a corrupt params checkpoint.  Returns the
+        restored step.
+        """
+        from repro.checkpoint import (
+            CheckpointCorruptionError,
+            available_steps,
+            read_checkpoint_extra,
+            restore_checkpoint,
+        )
+
+        self._require_bound()
+        if self._template is None:
+            raise ValueError("prefix cache has no carry template: bind() "
+                             "an engine before load()")
+        steps = ([step] if step is not None
+                 else sorted(available_steps(directory), reverse=True))
+        if not steps:
+            raise FileNotFoundError(f"no prefix-cache checkpoint under "
+                                    f"{directory}")
+        failures: list[str] = []
+        for s in steps:
+            try:
+                meta = read_checkpoint_extra(directory, s).get("prefix_cache")
+                if meta is None:
+                    raise CheckpointCorruptionError(
+                        f"step {s}: no prefix_cache section in extra "
+                        "(not a prefix-cache checkpoint)")
+                template = {"entries": {
+                    rec["key"]: self._template for rec in meta["entries"]}}
+                tree, got, _ = restore_checkpoint(directory, template, s)
+            except CheckpointCorruptionError as e:
+                if step is not None:     # explicit step never falls back
+                    raise
+                failures.append(str(e))
+                continue
+            if meta["chunk"] != self.chunk:
+                raise ValueError(
+                    f"prefix-cache checkpoint was written at chunk="
+                    f"{meta['chunk']}; this cache is bound to "
+                    f"chunk={self.chunk} (entries key on the chunk grid)")
+            self._entries.clear()
+            self.bytes = 0
+            for rec in meta["entries"]:
+                key = (int(rec["length"]), int(rec["hash"]))
+                tokens = np.asarray(rec["tokens"], np.int32)
+                carry = tree["entries"][rec["key"]]
+                nbytes = carry_bytes(carry) + tokens.nbytes
+                self._entries[key] = _Entry(
+                    tokens=tokens, carry=carry, nbytes=nbytes,
+                    pinned=bool(rec["pinned"]) or key in self._pinned,
+                    hits=int(rec["hits"]))
+                self.bytes += nbytes
+            c = meta.get("counters", {})
+            self.n_hits = int(c.get("hits", 0))
+            self.n_misses = int(c.get("misses", 0))
+            self.n_inserts = int(c.get("inserts", 0))
+            self.n_evictions = int(c.get("evictions", 0))
+            self.tokens_saved = int(c.get("tokens_saved", 0))
+            self._evict_to_budget()   # budget may have shrunk across restart
+            self._update_gauges()
+            obs_events.emit("prefix_cache_load", step=got,
+                            entries=len(self._entries), nbytes=self.bytes)
+            return got
+        raise CheckpointCorruptionError(
+            "no intact prefix-cache checkpoint under {}; every candidate "
+            "failed:\n  {}".format(directory, "\n  ".join(failures)))

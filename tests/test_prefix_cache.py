@@ -1,0 +1,301 @@
+"""Prefix-state cache: hit outputs byte-identical to cold prefill, LRU +
+byte-budget eviction, crc-guarded persistence, and clean softmax bypass.
+
+The cacheability claim is the paper's: an Aaren prompt prefix compresses to
+a position-free ``(m, u, w)`` carry, so seeding a slot from a cached carry
+and prefilling only the suffix must reproduce the cold run *bit for bit*
+(cache hits land on the same chunk grid the cold prefill pauses at).
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+import repro.serving.engine as engine_mod
+from repro.checkpoint import CheckpointCorruptionError
+from repro.configs import smoke_config
+from repro.models.factory import build
+from repro.serving import PrefixCache, StreamingEngine
+from repro.serving.prefix_cache import _roll, grid_hashes
+from repro.testing.faults import corrupt_checkpoint
+
+
+@pytest.fixture(scope="module")
+def aaren_model():
+    cfg = smoke_config("phi3-mini-3.8b", n_layers=2, d_model=64, d_ff=128,
+                       vocab=64)
+    api = build(cfg)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+def _shared_prefix_traffic(rng_seed=0, shared_len=32, n=3, suffix_len=5):
+    rng = np.random.default_rng(rng_seed)
+    shared = rng.integers(0, 64, shared_len).astype(np.int32)
+    return shared, [
+        np.concatenate([shared, rng.integers(0, 64, suffix_len)
+                        .astype(np.int32)])
+        for _ in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Unit level: keying, matching, admission, eviction (no model needed)
+# ---------------------------------------------------------------------------
+
+
+def _fake_template():
+    return {"m": np.zeros((1, 2), np.float32),
+            "w": np.zeros((1, 2, 3), np.float32)}
+
+
+def _fake_carry(fill):
+    return {"m": np.full((1, 2), fill, np.float32),
+            "w": np.full((1, 2, 3), fill, np.float32)}
+
+
+def _bound_cache(max_bytes=1 << 20, min_hits=1, chunk=4):
+    c = PrefixCache(max_bytes, min_hits=min_hits)
+    c.bind(chunk, _fake_template())
+    return c
+
+
+def _insert_prefix(cache, tokens, fill):
+    tokens = np.asarray(tokens, np.int32)
+    cache.insert(tokens, _roll(0, tokens), _fake_carry(fill))
+
+
+def test_grid_hashes_rolling():
+    toks = np.arange(10, dtype=np.int32)
+    hs = grid_hashes(toks, 4)
+    assert set(hs) == {4, 8}          # 10 % 4 == 2: no boundary at 10
+    assert hs[4] == _roll(0, toks[:4])
+    assert hs[8] == _roll(0, toks[:8])
+    # prefix property: extending the prompt never changes earlier hashes
+    hs2 = grid_hashes(np.concatenate([toks, toks]), 4)
+    assert hs2[4] == hs[4] and hs2[8] == hs[8]
+
+
+def test_longest_prefix_match_and_sample_reserve():
+    cache = _bound_cache()
+    toks = np.arange(12, dtype=np.int32)
+    _insert_prefix(cache, toks[:4], 1.0)
+    _insert_prefix(cache, toks[:8], 2.0)
+    # longest wins
+    n, carry, _ = cache.lookup(toks)
+    assert n == 8 and carry["m"][0, 0] == 2.0
+    # >= 1 token must remain for last-token logits: an exactly-cached
+    # prompt can only use the next-shorter boundary
+    n, carry, _ = cache.lookup(toks[:8])
+    assert n == 4 and carry["m"][0, 0] == 1.0
+    # diverging tokens past the shared prefix still match the prefix
+    other = np.concatenate([toks[:8], np.asarray([50, 51], np.int32)])
+    n, _, _ = cache.lookup(other)
+    assert n == 8
+
+
+def test_hash_collision_verified_by_tokens():
+    cache = _bound_cache()
+    a = np.asarray([1, 2, 3, 4], np.int32)
+    b = np.asarray([9, 9, 9, 9], np.int32)
+    _insert_prefix(cache, a, 1.0)
+    # white box: graft a's entry under b's key — a forced 61-bit collision
+    cache._entries[(4, _roll(0, b))] = cache._entries[(4, _roll(0, a))]
+    n, _, _ = cache.lookup(np.concatenate([b, b]))
+    assert n == 0                     # token verification demotes it to miss
+
+
+def test_min_hits_admission_counting():
+    cache = _bound_cache(min_hits=2)
+    toks = np.arange(8, dtype=np.int32)
+    hs = grid_hashes(toks, 4)
+    cache.lookup(toks)                # seen once
+    assert not cache.wants(4, hs[4])
+    cache.lookup(toks)                # seen twice
+    assert cache.wants(4, hs[4]) and cache.wants(8, hs[8])
+    _insert_prefix(cache, toks[:4], 1.0)
+    assert not cache.wants(4, hs[4])  # already cached
+
+
+def test_pin_skips_admission_threshold():
+    cache = _bound_cache(min_hits=100)
+    toks = np.arange(9, dtype=np.int32)
+    cache.pin(toks)                   # truncates to the chunk grid (8)
+    hs = grid_hashes(toks, 4)
+    assert cache.wants(8, hs[8])      # pinned boundary: wanted immediately
+    assert not cache.wants(4, hs[4])  # other boundaries still need hits
+    with pytest.raises(ValueError, match="shorter than one chunk"):
+        cache.pin(np.asarray([1, 2], np.int32))
+
+
+def test_eviction_lru_under_budget_pinned_survive():
+    template = _fake_template()
+    entry_bytes = (sum(a.nbytes for a in jax.tree.leaves(template))
+                   + 4 * np.dtype(np.int32).itemsize)
+    cache = PrefixCache(max_bytes=3 * entry_bytes, min_hits=1)
+    cache.bind(4, template)
+    pinned = np.asarray([7, 7, 7, 7], np.int32)
+    cache.pin(pinned)
+    _insert_prefix(cache, pinned, 0.0)
+    for i in range(1, 5):
+        _insert_prefix(cache, np.full(4, i, np.int32), float(i))
+    assert cache.bytes <= cache.max_bytes
+    assert len(cache) == 3
+    assert cache.n_evictions == 2
+    # pinned survived the LRU sweep; the two oldest unpinned did not
+    assert (4, _roll(0, pinned)) in cache._entries
+    n, carry, _ = cache.lookup(np.asarray([4, 4, 4, 4, 0], np.int32))
+    assert n == 4 and carry["m"][0, 0] == 4.0     # newest unpinned survived
+    n, _, _ = cache.lookup(np.asarray([1, 1, 1, 1, 0], np.int32))
+    assert n == 0                                  # oldest unpinned evicted
+
+
+def test_unbound_cache_and_chunk_mismatch_rejected(aaren_model):
+    api, params = aaren_model
+    cache = PrefixCache(1 << 20)
+    with pytest.raises(ValueError, match="unbound"):
+        cache.lookup(np.arange(8, dtype=np.int32))
+    cache.bind(16, _fake_template())
+    with pytest.raises(ValueError, match="chunk"):
+        StreamingEngine(api, params, n_slots=2, chunk=8, prefix_cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# Engine level: byte-identity, skipped prefill, persistence, bypass
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_byte_identical_to_cold_prefill(aaren_model):
+    """The acceptance-criterion test: generation seeded from a cached carry
+    equals a cold engine's output token-for-token for every request."""
+    api, params = aaren_model
+    shared, prompts = _shared_prefix_traffic()
+
+    cold = StreamingEngine(api, params, n_slots=2, chunk=16)
+    ref = {r: toks for r, toks in zip(
+        [cold.submit(p, 6) for p in prompts], [None] * len(prompts))}
+    ref = cold.run()
+    cold_rids = sorted(ref)
+
+    cache = PrefixCache(1 << 20, min_hits=1)
+    eng = StreamingEngine(api, params, n_slots=2, chunk=16,
+                          prefix_cache=cache)
+    # wave 1 populates (first request misses, later ones already hit)
+    rids1 = [eng.submit(p, 6) for p in prompts]
+    out1 = eng.run()
+    # wave 2 is all hits
+    rids2 = [eng.submit(p, 6) for p in prompts]
+    out2 = eng.run()
+
+    for i, (r1, r2) in enumerate(zip(rids1, rids2)):
+        assert out1[r1] == ref[cold_rids[i]], f"wave-1 request {i} diverged"
+        assert out2[r2] == ref[cold_rids[i]], f"wave-2 request {i} diverged"
+    st = cache.stats()
+    assert st["hits"] >= len(prompts)            # wave 2 + tail of wave 1
+    assert st["prefill_tokens_saved"] >= len(prompts) * shared.size
+
+
+def test_cache_hit_skips_prefill_work(aaren_model):
+    """A hot request must reach its first token in fewer engine ticks than
+    a cold one — the cached prefix's chunks are never scheduled."""
+    from repro.obs.metrics import MetricsRegistry, use_metrics
+    api, params = aaren_model
+    shared, prompts = _shared_prefix_traffic(shared_len=48, n=2)
+
+    def prefill_tokens(cache):
+        eng = StreamingEngine(api, params, n_slots=1, chunk=16,
+                              prefix_cache=cache)
+        with use_metrics(MetricsRegistry()) as reg:
+            for p in prompts:
+                eng.submit(p, 2)
+            eng.run()
+            return reg.counter("serve_prefill_tokens_total").value
+
+    cold = prefill_tokens(None)
+    warm = prefill_tokens(PrefixCache(1 << 20, min_hits=1))
+    assert warm <= cold - shared.size            # request 2 skipped 48 toks
+
+
+def test_cache_save_load_past_corrupted_chunk(aaren_model):
+    api, params = aaren_model
+    shared, prompts = _shared_prefix_traffic()
+    cache = PrefixCache(1 << 20, min_hits=1)
+    eng = StreamingEngine(api, params, n_slots=2, chunk=16,
+                          prefix_cache=cache)
+    rids = [eng.submit(p, 4) for p in prompts]
+    ref = eng.run()
+    assert len(cache) > 0
+
+    with tempfile.TemporaryDirectory() as d:
+        cache.save(d, 1)
+        cache.save(d, 2)
+        corrupt_checkpoint(d, 2, kind="flip_byte")
+
+        cache2 = PrefixCache(1 << 20, min_hits=1)
+        eng2 = StreamingEngine(api, params, n_slots=2, chunk=16,
+                               prefix_cache=cache2)
+        assert cache2.load(d) == 1               # fell back past corruption
+        assert len(cache2) == len(cache)
+        with pytest.raises(CheckpointCorruptionError):
+            cache2.load(d, step=2)               # explicit step: no fallback
+
+    # restored entries serve byte-identical generations
+    rids2 = [eng2.submit(p, 4) for p in prompts]
+    out2 = eng2.run()
+    for r1, r2 in zip(rids, rids2):
+        assert ref[r1] == out2[r2]
+    assert cache2.stats()["hits"] >= len(prompts)
+
+
+def test_softmax_arch_bypasses_cleanly():
+    """KV-cache archs can't use the streaming engine at all: the ctor must
+    reject them *before* binding or mutating the cache, leaving it reusable
+    for a position-free engine afterwards."""
+    cfg = smoke_config("phi3-mini-3.8b", attn_mode="softmax", n_layers=2,
+                       d_model=64, d_ff=128, vocab=64)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    cache = PrefixCache(1 << 20)
+    with pytest.raises(ValueError, match="position-free"):
+        StreamingEngine(api, params, prefix_cache=cache)
+    assert cache.chunk is None and len(cache) == 0   # untouched
+
+    aaren_cfg = smoke_config("phi3-mini-3.8b", n_layers=2, d_model=64,
+                             d_ff=128, vocab=64)
+    aaren_api = build(aaren_cfg)
+    eng = StreamingEngine(aaren_api, aaren_api.init(jax.random.PRNGKey(0)),
+                          n_slots=2, chunk=16, prefix_cache=cache)
+    assert cache.chunk == 16                         # bound by the real user
+    eng.submit(np.arange(4, dtype=np.int32), 2)
+    eng.run()
+
+
+def test_gather_inject_traced_once(aaren_model, monkeypatch):
+    """With a cache attached the engine gains exactly two more jitted entry
+    points (gather/inject), each traced once for any slot index."""
+    api, params = aaren_model
+    counts = {}
+    real_jit = jax.jit
+
+    def counting_jit(fn):
+        counts[fn.__name__] = 0
+
+        def wrapped(*a, **k):
+            counts[fn.__name__] += 1
+            return fn(*a, **k)
+
+        wrapped.__name__ = fn.__name__
+        return real_jit(wrapped)
+
+    monkeypatch.setattr(engine_mod, "_jit", counting_jit)
+    shared, prompts = _shared_prefix_traffic()
+    cache = PrefixCache(1 << 20, min_hits=1)
+    eng = StreamingEngine(api, params, n_slots=2, chunk=16,
+                          prefix_cache=cache)
+    for p in prompts:
+        eng.submit(p, 3)
+    eng.run()
+    eng.submit(prompts[0], 3)    # hit path exercises inject on slot 0
+    eng.run()
+    assert counts == {"step": 1, "reset": 1, "gather": 1, "inject": 1}, counts

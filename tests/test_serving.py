@@ -418,3 +418,132 @@ def test_submit_rejects_bad_inputs(aaren_model):
     with pytest.raises(ValueError, match="deadline_s"):
         eng.submit(np.asarray([1, 2], np.int32), 4, deadline_s=-1.0)
     assert eng.queue == [] and eng._next_id == 0   # nothing half-admitted
+
+# ---------------------------------------------------------------------------
+# Slot-carry lifecycle invariant (DESIGN.md §Serving): free slots ALWAYS hold
+# the ⊕-identity init carry, the latency maps track only in-flight requests,
+# and the scheduler gauges match scheduler state — after EVERY exit path
+# (completion, deadline expiry, quarantine, restore).
+# ---------------------------------------------------------------------------
+
+
+def _assert_free_slots_fresh(eng):
+    """Every free slot's rows of eng.states equal the ⊕-identity init."""
+    axes = jax.tree.leaves(lm_state_batch_axes(eng.api.cfg))
+    free = [i for i, s in enumerate(eng.active) if s is None]
+    assert free, "test needs at least one free slot"
+    for leaf, init, ax in zip(jax.tree.leaves(eng.states),
+                              jax.tree.leaves(eng._init_states), axes):
+        got = np.moveaxis(np.asarray(leaf), ax, 0)
+        want = np.moveaxis(np.asarray(init), ax, 0)
+        for i in free:
+            np.testing.assert_array_equal(got[i], want[i])
+
+
+def _assert_departed(eng, rids):
+    for rid in rids:
+        assert rid not in eng.submitted_at, rid
+        assert rid not in eng.first_token_at, rid
+
+
+def test_lifecycle_completion_resets_carry_eagerly(aaren_model, rng):
+    """A completed request's carry returns to init in the same tick — not
+    lazily at the next admit."""
+    api, params = aaren_model
+    eng = StreamingEngine(api, params, n_slots=2, chunk=4)
+    rid = eng.submit(jax.random.randint(rng, (6,), 0, 64), 3)
+    eng.run()
+    assert eng.active == [None, None]
+    _assert_free_slots_fresh(eng)
+    _assert_departed(eng, [rid])
+
+
+def test_lifecycle_active_deadline_resets_carry_eagerly(aaren_model, rng):
+    """The stale-carry regression: an active slot freed by deadline expiry
+    used to keep the dead request's carry in eng.states until the next
+    admit refilled the slot — a snapshot (or cache gather) taken in the gap
+    saw another tenant's state in a 'free' slot."""
+    import time as _time
+    api, params = aaren_model
+    eng = StreamingEngine(api, params, n_slots=1, chunk=4)
+    rid = eng.submit(jax.random.randint(rng, (8,), 0, 64), 1000,
+                     deadline_s=0.03)
+    eng.step()          # prefill a chunk: carry now non-trivial
+    _time.sleep(0.05)
+    eng.step()          # expiry tick — queue is empty, nothing re-admits
+    assert eng.errors[rid] == engine_mod.ERR_DEADLINE
+    assert eng.active == [None]
+    _assert_free_slots_fresh(eng)
+    _assert_departed(eng, [rid])
+
+
+def test_lifecycle_quarantine_resets_carry_eagerly(aaren_model, rng):
+    from repro.testing.faults import poison_engine_slot
+    api, params = aaren_model
+    eng = StreamingEngine(api, params, n_slots=2, chunk=4)
+    rid = eng.submit(jax.random.randint(rng, (4,), 0, 64), 100)
+    eng.step()
+    poison_engine_slot(eng, 0)
+    eng.step()
+    assert eng.errors[rid] == engine_mod.ERR_POISONED
+    _assert_free_slots_fresh(eng)
+    _assert_departed(eng, [rid])
+
+
+def test_lifecycle_restore_reseeds_latency_and_gauges(aaren_model, rng):
+    """restore() used to wipe submitted_at outright: every restored
+    request's terminal event then dropped total_s and its first token never
+    reached the TTFT histogram.  Restored requests are re-seeded at restore
+    time (post-restore latencies exclude pre-crash time by design) and the
+    scheduler gauges reflect the restored state immediately."""
+    from repro.obs.events import EventLog, use_events
+    from repro.obs.metrics import MetricsRegistry, use_metrics
+
+    api, params = aaren_model
+    a = StreamingEngine(api, params, n_slots=2, chunk=4)
+    prompts = jax.random.randint(rng, (3, 9), 0, 64)
+    rids = [a.submit(prompts[i], 6) for i in range(3)]   # 2 active + 1 queued
+    a.step()
+    snap = a.snapshot()
+
+    b = StreamingEngine(api, params, n_slots=2, chunk=4)
+    with use_metrics(MetricsRegistry()) as reg, \
+            use_events(EventLog(path=None)) as log:
+        b.restore(snap)
+        assert set(b.submitted_at) == set(rids)
+        assert b.first_token_at == {}
+        assert reg.gauge("serve_queue_depth").value == len(b.queue) == 1
+        assert reg.gauge("serve_slot_occupancy").value == 1.0
+        out = b.run()
+        done = [r for r in log.records if r["kind"] == "request_completed"]
+        assert {r["data"]["rid"] for r in done} == set(rids)
+        for r in done:
+            assert r["data"]["total_s"] >= 0           # present again
+        # every restored request's first token reached the TTFT histogram
+        assert reg.histogram("serve_ttft_s").count == len(rids)
+    assert len(out) == 3
+    _assert_free_slots_fresh(b)
+    _assert_departed(b, rids)
+
+
+def test_lifecycle_restore_enforces_free_slot_invariant(aaren_model, rng):
+    """A snapshot whose free-slot rows hold garbage (taken by a pre-fix
+    build) is sanitised at restore: free slots come back as ⊕-identity."""
+    api, params = aaren_model
+    a = StreamingEngine(api, params, n_slots=2, chunk=4)
+    rid = a.submit(jax.random.randint(rng, (5,), 0, 64), 4)
+    a.step()
+    snap = a.snapshot()                      # slot 1 is free
+    assert snap["meta"]["active"][1] is None
+    snap["tree"]["states"] = jax.tree.map(
+        lambda x: np.full_like(x, 7.0), snap["tree"]["states"])
+    # keep slot 0's rows meaningless too — only the free slot is asserted
+    b = StreamingEngine(api, params, n_slots=2, chunk=4)
+    b.restore(snap)
+    axes = jax.tree.leaves(lm_state_batch_axes(api.cfg))
+    for leaf, init, ax in zip(jax.tree.leaves(b.states),
+                              jax.tree.leaves(b._init_states), axes):
+        got = np.moveaxis(np.asarray(leaf), ax, 0)
+        want = np.moveaxis(np.asarray(init), ax, 0)
+        np.testing.assert_array_equal(got[1], want[1])
+    assert rid in b.submitted_at
