@@ -25,7 +25,13 @@ from benchmarks.common import emit, write_bench
 from repro.configs import smoke_config
 from repro.models.factory import build
 from repro.obs.events import EventLog, use_events
-from repro.serving import PrefixCache, StreamingEngine, generate
+from repro.serving import (
+    EngineOverloaded,
+    PrefixCache,
+    ReplicatedRouter,
+    StreamingEngine,
+    generate,
+)
 
 PROMPT_LENS = (8, 32, 128, 16, 512, 64, 8, 256)   # mixed 8–512 (issue spec)
 MAX_NEWS = (8, 64, 16, 48, 8, 56, 12, 40)         # ragged: waves idle on max
@@ -220,6 +226,181 @@ def _bench_prefix_cache(api, params, vocab: int) -> dict:
         "entries": st["entries"],
         "bytes": st["bytes"],
     }
+
+
+# ---------------------------------------------------------------------------
+# Replicated tier (router): scaling, failover, overload shedding
+# ---------------------------------------------------------------------------
+
+ROUTER_SLOTS = 4          # per-replica slots; 4 replicas x 4 = 16 = N_REQUESTS
+ROUTER_REPLICAS = (1, 2, 4)
+
+
+def _bench_router_point(api, params, reqs, n_replicas: int) -> dict:
+    """One scaling point: the ragged mix through an n-replica tier.
+
+    Per-request TTFTs come from the engines' ``first_token`` events (an
+    in-memory sink), same as the single-engine scenario.  At these request
+    counts the tier has slot+queue capacity for the whole mix, so nothing
+    waits in the router's front queue and the engine-side TTFT clock is
+    the whole story.
+    """
+    router = ReplicatedRouter(api, params, n_replicas=n_replicas,
+                              n_slots=ROUTER_SLOTS, chunk=CHUNK)
+    compile_s = router.engines[0].warmup()   # replicas share the jitted step
+    log = EventLog(path=None)
+    with use_events(log):
+        t0 = time.perf_counter()
+        for p, n in reqs:
+            router.submit(p, n)
+        out = router.run()
+        wall = time.perf_counter() - t0
+    tokens = sum(len(v) for v in out.values())
+    ttft = [r["data"]["ttft_s"] for r in log.records
+            if r["kind"] == "first_token"]
+    st = router.stats()
+    return {
+        "n_replicas": n_replicas,
+        "n_slots_per_replica": ROUTER_SLOTS,
+        "tokens": tokens,
+        "wall_s": wall,
+        "tokens_per_s": tokens / wall,
+        "compile_s": compile_s,
+        "ttft_p50_s": float(np.quantile(ttft, 0.50)),
+        "ttft_p99_s": float(np.quantile(ttft, 0.99)),
+        "requests": st["requests"],
+        "finished": st["finished"],
+        "shed": st["shed"],
+        "shed_rate": st["shed"] / max(st["requests"] + st["shed"], 1),
+        "rerouted": st["rerouted"],
+        "migrated": st["migrated"],
+        "failed_over": st["failed_over"],
+    }
+
+
+def _bench_router_failover(api, params, reqs) -> dict:
+    """Chaos point: 3 replicas, kill one mid-flight, finish on survivors.
+
+    The kill wipes the victim's device carries and bookkeeping
+    (:func:`repro.testing.faults.kill_router_replica`), so completion here
+    means the router rebuilt the victim's requests from its own shadow
+    records — the number to watch is ``all_completed``.
+    """
+    from repro.testing.faults import kill_router_replica
+
+    router = ReplicatedRouter(api, params, n_replicas=3,
+                              n_slots=ROUTER_SLOTS, chunk=CHUNK)
+    router.engines[0].warmup()
+    t0 = time.perf_counter()
+    for p, n in reqs:
+        router.submit(p, n)
+    for _ in range(3):                     # let every replica pick up work
+        router.step()
+    kill_router_replica(router, 1)
+    out = router.run()
+    wall = time.perf_counter() - t0
+    st = router.stats()
+    return {
+        "n_replicas": 3,
+        "killed_replica": 1,
+        "submitted": len(reqs),
+        "completed": len(out),
+        "all_completed": len(out) == len(reqs) and not st["errors"],
+        "failed_over": st["failed_over"],
+        "migrated": st["migrated"],
+        "tokens": sum(len(v) for v in out.values()),
+        "wall_s": wall,
+    }
+
+
+def _bench_router_overload(api, params, vocab: int) -> dict:
+    """Degradation point: a burst past tier capacity must shed, bounded.
+
+    2 tiny replicas (2 slots, 2-deep admission queues) + a 2-deep front
+    queue; a 16-request burst submitted before any stepping overflows all
+    of it, the tail sheds at the door, and every *admitted* request still
+    completes.
+    """
+    key = jax.random.PRNGKey(3)
+    router = ReplicatedRouter(api, params, n_replicas=2, n_slots=2,
+                              chunk=CHUNK, max_queue=2)
+    router.engines[0].warmup()
+    submitted = shed = 0
+    for i in range(16):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (8,), 0, vocab))
+        try:
+            router.submit(prompt, 4)
+            submitted += 1
+        except EngineOverloaded:
+            shed += 1
+    out = router.run()
+    return {
+        "burst": 16,
+        "admitted": submitted,
+        "shed": shed,
+        "shed_rate": shed / 16,
+        "completed": len(out),
+        "all_admitted_completed": len(out) == submitted,
+    }
+
+
+def run_router() -> dict:
+    """Router scaling sweep + chaos + overload -> ``BENCH_router.json``.
+
+    Replica stepping is threaded and the jitted engine step releases the
+    GIL inside XLA, so scaling needs cores: the ``host.cpu_count`` field is
+    part of the result, and CI applies its >=1.8x @ 2-replica gate only on
+    multi-core runners.  A bigger smoke model than the serving bench keeps
+    the per-tick XLA fraction (the parallelizable part) dominant.
+    """
+    import os
+
+    cfg = smoke_config("phi3-mini-3.8b", n_layers=2, d_model=128, d_ff=256,
+                       vocab=256)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    reqs = _traffic(cfg.vocab)
+
+    single = _bench_streaming(api, params, reqs, _prompt_waste(reqs))
+    points = {str(n): _bench_router_point(api, params, reqs, n)
+              for n in ROUTER_REPLICAS}
+    failover = _bench_router_failover(api, params, reqs)
+    overload = _bench_router_overload(api, params, cfg.vocab)
+
+    results = {
+        "config": {
+            "arch": cfg.name, "d_model": cfg.d_model,
+            "n_requests": N_REQUESTS,
+            "prompt_lens": list(PROMPT_LENS), "max_news": list(MAX_NEWS),
+            "n_slots_per_replica": ROUTER_SLOTS, "chunk": CHUNK,
+        },
+        "host": {"cpu_count": os.cpu_count(),
+                 "n_devices": jax.device_count()},
+        "single_engine": single,
+        "replicas": points,
+        "scaling_2x_over_1x": (points["2"]["tokens_per_s"]
+                               / points["1"]["tokens_per_s"]),
+        "scaling_4x_over_1x": (points["4"]["tokens_per_s"]
+                               / points["1"]["tokens_per_s"]),
+        "ttft_p50_ratio_2x_over_single": (points["2"]["ttft_p50_s"]
+                                          / single["ttft_mean_s"]),
+        "failover": failover,
+        "overload": overload,
+    }
+    write_bench("router", results)
+
+    for n in ROUTER_REPLICAS:
+        p = points[str(n)]
+        emit(f"router_{n}x_tok_s", p["wall_s"] * 1e6,
+             f"{p['tokens_per_s']:.1f}")
+        emit(f"router_{n}x_ttft_p50_ms", 0.0, f"{p['ttft_p50_s']*1e3:.1f}")
+    emit("router_scaling_2x", 0.0, f"{results['scaling_2x_over_1x']:.2f}")
+    emit("router_failover_completed", 0.0,
+         f"{failover['completed']}/{failover['submitted']}"
+         f"_failed_over{failover['failed_over']}")
+    emit("router_overload_shed_rate", 0.0, f"{overload['shed_rate']:.2f}")
+    return results
 
 
 def run() -> dict:

@@ -9,6 +9,8 @@
     S4.5 parameter counts            -> bench_params
     kernel work-scaling              -> bench_kernels
     serving (tok/s + TTFT)           -> bench_serving  (BENCH_serving.json)
+    replicated router tier           -> bench_serving.run_router
+                                        (BENCH_router.json; selector "router")
     context parallelism              -> bench_context  (BENCH_context.json;
                                         re-execs itself with 8 emulated devices)
 
@@ -21,6 +23,7 @@ from __future__ import annotations
 import argparse
 import time
 import traceback
+import types
 
 from benchmarks import (
     bench_context,
@@ -42,6 +45,10 @@ MODULES = [
     ("time", bench_time),
     ("kernels", bench_kernels),
     ("serving", bench_serving),
+    # The replicated-tier scenarios live in bench_serving (they share its
+    # traffic mix) but get their own selector so the CI chaos job can run
+    # `--only router` without re-timing the wave-vs-streaming comparison.
+    ("router", types.SimpleNamespace(run=bench_serving.run_router)),
     ("context", bench_context),
     ("tsc", bench_tsc),
     ("tsf", bench_tsf),

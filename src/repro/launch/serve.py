@@ -57,7 +57,25 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-queue", type=int, default=0,
                     help="admission queue bound; overflow submits are shed "
-                         "(0 = unbounded)")
+                         "(0 = unbounded).  With --replicas > 1 this bounds "
+                         "the router's front queue; the tier sheds only "
+                         "when every replica is saturated AND the front "
+                         "queue is full")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="run N streaming-engine replicas behind the "
+                         "occupancy-aware router (each with --slots slots; "
+                         "requests are dispatched per --route-policy, and "
+                         "a prefix cache is shared tier-wide)")
+    ap.add_argument("--route-policy", default="least-occupancy",
+                    choices=["least-occupancy", "round-robin", "jsq"],
+                    help="replica dispatch policy (--replicas > 1): "
+                         "emptiest batch first, strict rotation, or "
+                         "join-shortest-queue")
+    ap.add_argument("--drain", type=int, default=None, metavar="R",
+                    help="mid-run, drain replica R: its queued + active "
+                         "requests carry-migrate to the survivors "
+                         "byte-identically (demo of failover; needs "
+                         "--replicas >= 2)")
     ap.add_argument("--deadline-s", type=float, default=0.0,
                     help="per-request wall-clock deadline; expired requests "
                          "error out (0 = none)")
@@ -149,6 +167,8 @@ def _run(args):
               f"{steady_s:.2f}s for {toks.shape} "
               f"({n_tokens / steady_s:.0f} tok/s); decode state "
               f"{decode_state_bytes(states) / 2**20:.3f} MiB")
+    elif args.replicas > 1:
+        _run_router(args, api, params, sampler, prompts)
     else:
         cache = None
         if args.prefix_cache_mb:
@@ -199,6 +219,53 @@ def _run(args):
                 cache.save(args.prefix_cache_dir, 0)
                 print(f"[streaming] prefix cache saved to "
                       f"{args.prefix_cache_dir}")
+
+
+def _run_router(args, api, params, sampler, prompts):
+    """--replicas > 1: the replicated tier (serving/router.py)."""
+    from repro.serving import ReplicatedRouter
+
+    cache = None
+    if args.prefix_cache_mb:
+        cache = PrefixCache(max_bytes=int(args.prefix_cache_mb * 2**20),
+                            min_hits=args.prefix_cache_min_hits)
+    router = ReplicatedRouter(
+        api, params, n_replicas=args.replicas, n_slots=args.slots,
+        chunk=args.chunk or None, sampler=sampler,
+        policy=args.route_policy, max_queue=args.max_queue or None,
+        prefix_cache=cache)
+    compile_s = sum(e.warmup() for e in router.engines[:1])
+    deadline = args.deadline_s or None
+    for i in range(args.requests):
+        try:
+            router.submit(prompts[i], args.max_new, deadline_s=deadline)
+        except EngineOverloaded:
+            pass   # tier-wide shed; counted in router.n_shed
+    t0 = time.perf_counter()
+    if args.drain is not None:
+        for _ in range(3):                 # let the victim pick up work
+            router.step()
+        n = router.drain(args.drain)
+        print(f"[router] drained replica {args.drain}: {n} requests "
+              "carry-migrated to survivors")
+    out = router.run()
+    steady_s = time.perf_counter() - t0
+    served = sum(len(v) for v in out.values())
+    st = router.stats()
+    print(f"[router] compile {compile_s:.2f}s | steady {steady_s:.2f}s for "
+          f"{len(out)} requests / {served} tokens "
+          f"({served / steady_s:.0f} tok/s aggregate) over "
+          f"{args.replicas}x{args.slots} slots, policy "
+          f"{args.route_policy}")
+    print(f"[router] tier: alive {st['alive']}/{st['n_replicas']}, shed "
+          f"{st['shed']}, rerouted {st['rerouted']}, migrated "
+          f"{st['migrated']}, failed-over {st['failed_over']}, errors "
+          f"{st['errors']}")
+    if cache is not None:
+        cst = cache.stats()
+        print(f"[router] shared prefix cache: {cst['entries']} entries, "
+              f"hit rate {cst['hit_rate']:.0%}, "
+              f"{cst['prefill_tokens_saved']} prefill tokens saved")
 
 
 if __name__ == "__main__":

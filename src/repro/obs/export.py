@@ -34,28 +34,54 @@ def _fmt(v: float) -> str:
     return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
 
 
+def _series(key: str) -> tuple[str, str, str]:
+    """Split a snapshot series key into (prom name, ``{labels}``, suffix).
+
+    Snapshot keys follow :func:`repro.obs.metrics.series_key` —
+    ``name`` or ``name{k="v",...}``.  Returns the sanitised base name, the
+    ready-to-append brace block (``""`` for unlabeled), and the raw label
+    body (for merging extra labels such as histogram ``le``).
+    """
+    base, body = _metrics.split_series_key(key)
+    n = _prom_name(base)
+    return n, (f"{{{body}}}" if body else ""), body
+
+
 def prometheus_text(snapshot: dict) -> str:
-    """Render a :meth:`MetricsRegistry.snapshot` dict as exposition text."""
+    """Render a :meth:`MetricsRegistry.snapshot` dict as exposition text.
+
+    Labeled series render with their label block; the ``# TYPE`` header is
+    emitted once per base metric name (snapshot keys sort labeled series
+    of one name adjacently, since ``"name" < "name{"`` lexically).
+    """
     lines: list[str] = []
-    for name, st in snapshot.get("counters", {}).items():
-        n = _prom_name(name)
-        lines.append(f"# TYPE {n} counter")
-        lines.append(f"{n} {_fmt(st['value'])}")
-    for name, st in snapshot.get("gauges", {}).items():
-        n = _prom_name(name)
-        lines.append(f"# TYPE {n} gauge")
-        lines.append(f"{n} {_fmt(st['value'])}")
-    for name, st in snapshot.get("histograms", {}).items():
-        n = _prom_name(name)
-        lines.append(f"# TYPE {n} histogram")
+    typed: set[tuple[str, str]] = set()
+
+    def type_line(n: str, kind: str) -> None:
+        if (n, kind) not in typed:
+            typed.add((n, kind))
+            lines.append(f"# TYPE {n} {kind}")
+
+    for key, st in snapshot.get("counters", {}).items():
+        n, block, _ = _series(key)
+        type_line(n, "counter")
+        lines.append(f"{n}{block} {_fmt(st['value'])}")
+    for key, st in snapshot.get("gauges", {}).items():
+        n, block, _ = _series(key)
+        type_line(n, "gauge")
+        lines.append(f"{n}{block} {_fmt(st['value'])}")
+    for key, st in snapshot.get("histograms", {}).items():
+        n, block, body = _series(key)
+        type_line(n, "histogram")
+        pre = f"{body}," if body else ""
         cum = 0
         for bound, c in zip(st["buckets"], st["counts"]):
             cum += c
-            lines.append(f'{n}_bucket{{le="{_fmt(bound)}"}} {cum}')
+            lines.append(f'{n}_bucket{{{pre}le="{_fmt(bound)}"}} {cum}')
         cum += st["counts"][len(st["buckets"])]
-        lines.append(f'{n}_bucket{{le="+Inf"}} {cum}')
-        lines.append(f"{n}_sum {_fmt(st['sum'])}")
-        lines.append(f"{n}_count {st['count']}")
+        lines.append(f'{n}_bucket{{{pre}le="+Inf"}} {cum}')
+        lines.append(f"{n}_sum{block} {_fmt(st['sum'])}")
+        lines.append(f"{n}_count{block} {st['count']}")
     return "\n".join(lines) + "\n"
 
 

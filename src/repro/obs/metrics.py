@@ -18,6 +18,15 @@ Design constraints (DESIGN.md §Observability):
 
 Naming scheme: ``<subsystem>_<quantity>[_<unit>]`` with ``_total`` for
 counters — ``train_step_time_s``, ``serve_ttft_s``, ``serve_shed_total``.
+
+Labels: every accessor takes ``labels={"replica": "0"}``; each distinct
+label set is its own series, stored under the canonical key
+``name{k="v",...}`` (keys sorted, values stringified).  The replicated
+serving tier relies on this — N in-process engines each emit ``serve_*``
+under their own ``replica`` label instead of silently merging into one
+instrument.  :func:`label_scope` sets ambient labels for the current
+thread; the module-level helpers merge them in, so instrumented code
+(e.g. the engine) needs no label plumbing when run under a router.
 """
 
 from __future__ import annotations
@@ -32,6 +41,38 @@ DEFAULT_TIME_BUCKETS = (
     0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
     0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0,
 )
+
+
+def _escape_label_value(v: str) -> str:
+    return v.replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
+
+
+def series_key(name: str, labels: dict | None = None) -> str:
+    """Canonical registry key for a (name, labels) series.
+
+    ``name`` for the unlabeled series, else ``name{k="v",...}`` with keys
+    sorted — the same grammar the Prometheus exposition uses, so the
+    exporter can split a key back into (base name, label string) at the
+    first ``{``.
+    """
+    if not labels:
+        return name
+    if "{" in name:
+        raise ValueError(f"metric name {name!r} must not contain '{{' "
+                         "(labels go in labels=)")
+    body = ",".join(f'{k}="{_escape_label_value(str(v))}"'
+                    for k, v in sorted(labels.items()))
+    return f"{name}{{{body}}}"
+
+
+def split_series_key(key: str) -> tuple[str, str]:
+    """Inverse view of :func:`series_key`: ``(base_name, label_body)``.
+
+    ``label_body`` is the inside of the braces (no braces), empty for the
+    unlabeled series.
+    """
+    base, brace, rest = key.partition("{")
+    return base, (rest[:-1] if brace else "")
 
 
 class Counter:
@@ -162,34 +203,49 @@ class MetricsRegistry:
         self._lock = threading.Lock()
         self._metrics: dict[str, object] = {}
 
-    def _get(self, name: str, kind, **kwargs):
+    def _get(self, name: str, kind, labels=None, **kwargs):
+        key = series_key(name, labels)
         with self._lock:
-            m = self._metrics.get(name)
+            m = self._metrics.get(key)
             if m is None:
-                m = kind(name, **kwargs)
-                self._metrics[name] = m
+                m = kind(key, **kwargs)
+                self._metrics[key] = m
                 return m
         if not isinstance(m, kind):
             raise TypeError(
-                f"metric {name!r} already registered as {m.kind}, "
+                f"metric {key!r} already registered as {m.kind}, "
                 f"requested {kind.kind}")
         if kind is Histogram and "buckets" in kwargs:
             want = tuple(sorted(float(x) for x in kwargs["buckets"]))
             if want != m.buckets:
                 raise ValueError(
-                    f"histogram {name!r} already registered with buckets "
+                    f"histogram {key!r} already registered with buckets "
                     f"{m.buckets}, requested {want}")
         return m
 
-    def counter(self, name: str, help: str = "") -> Counter:
-        return self._get(name, Counter, help=help)
+    def counter(self, name: str, help: str = "",
+                labels: dict | None = None) -> Counter:
+        return self._get(name, Counter, labels=labels, help=help)
 
-    def gauge(self, name: str, help: str = "") -> Gauge:
-        return self._get(name, Gauge, help=help)
+    def gauge(self, name: str, help: str = "",
+              labels: dict | None = None) -> Gauge:
+        return self._get(name, Gauge, labels=labels, help=help)
 
     def histogram(self, name: str, buckets=DEFAULT_TIME_BUCKETS,
-                  help: str = "") -> Histogram:
-        return self._get(name, Histogram, buckets=buckets, help=help)
+                  help: str = "", labels: dict | None = None) -> Histogram:
+        return self._get(name, Histogram, labels=labels, buckets=buckets,
+                         help=help)
+
+    def peek(self, name: str, labels: dict | None = None):
+        """Read a series' value without creating it (``None`` if absent).
+
+        The router's occupancy policy reads per-replica gauges through
+        this: a get-or-create accessor would mint zero-valued series for
+        replicas that haven't reported yet and pollute the snapshot.
+        """
+        with self._lock:
+            m = self._metrics.get(series_key(name, labels))
+        return None if m is None else m.value
 
     def names(self) -> list[str]:
         with self._lock:
@@ -241,23 +297,64 @@ def use_metrics(reg: MetricsRegistry):
 
 
 # ---------------------------------------------------------------------------
+# Ambient labels (per thread): the router wraps each replica's engine calls
+# in label_scope(replica=i) so every serve_* update the engine makes lands
+# on that replica's series without the engine knowing about replicas.
+# ---------------------------------------------------------------------------
+
+_LABELS = threading.local()
+
+
+def current_labels() -> dict | None:
+    """The calling thread's ambient label set (``None`` when unset)."""
+    return getattr(_LABELS, "labels", None)
+
+
+@contextlib.contextmanager
+def label_scope(**labels):
+    """Attach ``labels`` to every metric update on this thread.
+
+    Nested scopes merge (inner keys win); values are stringified at entry.
+    """
+    prev = getattr(_LABELS, "labels", None)
+    merged = dict(prev) if prev else {}
+    merged.update({k: str(v) for k, v in labels.items()})
+    _LABELS.labels = merged
+    try:
+        yield merged
+    finally:
+        _LABELS.labels = prev
+
+
+def _effective_labels(labels: dict | None) -> dict | None:
+    ambient = getattr(_LABELS, "labels", None)
+    if ambient is None:
+        return labels
+    if labels is None:
+        return ambient
+    return {**ambient, **labels}
+
+
+# ---------------------------------------------------------------------------
 # Hot-path helpers: one global load + None check when observability is off
 # ---------------------------------------------------------------------------
 
 
-def inc(name: str, n: float = 1.0) -> None:
+def inc(name: str, n: float = 1.0, labels: dict | None = None) -> None:
     reg = _REGISTRY
     if reg is not None:
-        reg.counter(name).inc(n)
+        reg.counter(name, labels=_effective_labels(labels)).inc(n)
 
 
-def set_gauge(name: str, v: float) -> None:
+def set_gauge(name: str, v: float, labels: dict | None = None) -> None:
     reg = _REGISTRY
     if reg is not None:
-        reg.gauge(name).set(v)
+        reg.gauge(name, labels=_effective_labels(labels)).set(v)
 
 
-def observe(name: str, v: float, buckets=DEFAULT_TIME_BUCKETS) -> None:
+def observe(name: str, v: float, buckets=DEFAULT_TIME_BUCKETS,
+            labels: dict | None = None) -> None:
     reg = _REGISTRY
     if reg is not None:
-        reg.histogram(name, buckets=buckets).observe(v)
+        reg.histogram(name, buckets=buckets,
+                      labels=_effective_labels(labels)).observe(v)

@@ -10,4 +10,9 @@ from repro.serving.engine import (  # noqa: F401
     request_key,
 )
 from repro.serving.prefix_cache import PrefixCache  # noqa: F401
+from repro.serving.router import (  # noqa: F401
+    POLICIES,
+    ReplicatedRouter,
+    ReplicaView,
+)
 from repro.serving.sampler import greedy_sampler, temperature_sampler  # noqa: F401

@@ -84,13 +84,45 @@ def request_key(base_key: jax.Array, request_id: int, step: int) -> jax.Array:
     return jax.random.fold_in(jax.random.fold_in(base_key, request_id), step)
 
 
+# One fused (vmapped + jitted) sampling call per sampler: per-row key
+# derivation + the sample itself run on device, replacing B eager host
+# round-trips (~1ms each — the dominant cost of an engine tick at 8 slots)
+# with one.  Keyed weakly per sampler function; jax.jit is used directly
+# (not `_jit`) because the cache outlives any single engine, so per-engine
+# trace-count tests must not see it.
+_BATCHED_SAMPLERS: "weakref.WeakKeyDictionary[Callable, Callable]" = (
+    weakref.WeakKeyDictionary())
+
+
+def _batched_sampler(sampler: Callable) -> Callable:
+    fn = _BATCHED_SAMPLERS.get(sampler)
+    if fn is None:
+        def sample_batch(logits, base_key, rids, steps):
+            """(B, 1, V) logits + (B,) rids/steps -> (B, 1) int32."""
+            def one(row, rid, st):
+                k = jax.random.fold_in(
+                    jax.random.fold_in(base_key, rid), st)
+                return sampler(row[None], k)[0, 0]
+            return jax.vmap(one)(logits, rids, steps)[:, None]
+
+        fn = jax.jit(sample_batch)
+        _BATCHED_SAMPLERS[sampler] = fn
+    return fn
+
+
 def _sample_rows(sampler: Callable, logits: jax.Array, base_key: jax.Array,
                  rids, steps) -> jax.Array:
     """Sample each row of (B, 1, V) logits with its own request/step key.
 
-    Eager per-row calls (not vmapped/jitted) so instrumented samplers see
-    concrete keys; B is small in serving.
+    ``jit_safe`` samplers (the built-ins) take one fused vmapped call;
+    custom samplers fall back to eager per-row calls so instrumented
+    samplers see concrete keys.  Both engines route through here, so
+    streaming and wave generation stay sample-for-sample identical.
     """
+    if getattr(sampler, "jit_safe", False):
+        return _batched_sampler(sampler)(
+            logits, base_key, jnp.asarray(rids, jnp.int32),
+            jnp.asarray(steps, jnp.int32))
     toks = [sampler(logits[i:i + 1], request_key(base_key, rid, st))
             for i, (rid, st) in enumerate(zip(rids, steps))]
     return jnp.concatenate(toks, axis=0)
@@ -250,6 +282,53 @@ class _Slot:
     hashes: dict | None = None
 
 
+@dataclasses.dataclass
+class _Queued:
+    """An admitted-but-not-yet-slotted request.
+
+    Fresh submissions have ``pending == prompt`` and zeroed progress
+    fields.  Migrated requests (:meth:`StreamingEngine.inject_request`)
+    arrive mid-life: ``tokens``/``n_sampled`` record emitted progress and
+    either ``carry`` holds the exact exported device carry (drain path —
+    ``pending`` is then just the tokens not yet folded into it) or the
+    carry is gone (crash path) and ``pending`` replays prompt + emitted
+    tokens from the ⊕-identity init.
+    """
+
+    request_id: int
+    pending: np.ndarray          # tokens still to fold into the carry
+    remaining: int               # generated tokens still owed
+    deadline: float | None = None
+    prompt: np.ndarray | None = None   # original prompt (cache + re-export)
+    tokens: list = dataclasses.field(default_factory=list)
+    n_sampled: int = 0
+    carry: Any = None            # host-array carry tree, or None
+
+
+def _validate_request(prompt, max_new_tokens: int,
+                      deadline_s: float | None) -> np.ndarray:
+    """Validate submit() arguments; returns the canonical int32 prompt.
+
+    Shared by the engine and the router so both shed/reject *before* any
+    id allocation or bookkeeping — nothing is half-admitted.
+    """
+    prompt = np.asarray(prompt)
+    if prompt.ndim > 1:
+        raise ValueError(f"prompt must be 1-D, got shape {prompt.shape}")
+    if not np.issubdtype(prompt.dtype, np.integer):
+        raise ValueError(f"prompt must hold token ids (integers), got "
+                         f"dtype {prompt.dtype}")
+    prompt = prompt.astype(np.int32).reshape(-1)
+    if prompt.size == 0:
+        raise ValueError("empty prompt")
+    if max_new_tokens <= 0:
+        raise ValueError(
+            f"max_new_tokens must be >= 1, got {max_new_tokens}")
+    if deadline_s is not None and deadline_s < 0:
+        raise ValueError(f"deadline_s must be >= 0, got {deadline_s}")
+    return prompt
+
+
 class StreamingEngine:
     """Chunked-prefill continuous batching over ``n_slots`` decode slots.
 
@@ -333,8 +412,6 @@ class StreamingEngine:
             lm_prefill_chunk,
             lm_state_batch_axes,
             lm_state_init,
-            lm_state_put_slot,
-            lm_state_take_slot,
         )
 
         cfg = api.cfg
@@ -392,34 +469,28 @@ class StreamingEngine:
 
         self._step_fn = _jit(step)
         self._reset_fn = _jit(reset)
+        # jit-safe samplers batch all slots' samples into one fused call
+        # per tick; custom samplers keep the eager per-row path (concrete
+        # keys for instrumented samplers — tests rely on this).
+        self._batched_sample = (_batched_sampler(sampler)
+                                if getattr(sampler, "jit_safe", False)
+                                else None)
 
-        # Prefix cache (serving/prefix_cache.py): the gather/inject entry
-        # points exist ONLY when a cache is attached — a cache-less engine
-        # keeps exactly two jitted functions (pinned by the trace-count
-        # test).  Both take the slot index / mask as *traced* arguments, so
-        # each is one trace for any slot.
+        # Prefix cache (serving/prefix_cache.py): the gather/inject slot
+        # entry points are created lazily by _ensure_slot_io() on first
+        # cache hit / insert / migration — a cache-less, never-migrated
+        # engine keeps exactly two jitted functions (pinned by the
+        # trace-count test).  Both take the slot index / mask as *traced*
+        # arguments, so each is one trace for any slot.
         self.prefix_cache = prefix_cache
         if prefix_cache is not None:
             prefix_cache.bind(
                 chunk, jax.tree.map(np.asarray, lm_state_init(cfg, 1, 1)))
-
-            def gather(states, idx):
-                """Copy out slot ``idx``'s carry (size-1 slot axis)."""
-                return lm_state_take_slot(cfg, states, idx)
-
-            def inject(states, carry, mask):
-                """Seed every masked slot's carry from a cached prefix."""
-                return lm_state_put_slot(cfg, states, carry, mask)
-
-            self._gather_fn = _jit(gather)
-            self._inject_fn = _jit(inject)
-        else:
-            self._gather_fn = None
-            self._inject_fn = None
+        self._gather_fn = None
+        self._inject_fn = None
 
         self.active: list[_Slot | None] = [None] * n_slots
-        # queue entries: (rid, prompt, max_new, deadline | None)
-        self.queue: list[tuple[int, np.ndarray, int, float | None]] = []
+        self.queue: list[_Queued] = []
         self.finished: dict[int, list[int]] = {}
         self.errors: dict[int, str] = {}       # rid -> error string
         self.n_shed = 0                        # submits rejected (queue full)
@@ -436,7 +507,8 @@ class StreamingEngine:
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt, max_new_tokens: int, *,
-               deadline_s: float | None = None) -> int:
+               deadline_s: float | None = None,
+               request_id: int | None = None) -> int:
         """Queue a request.  prompt: (P,) int32, P >= 1.  Returns its id.
 
         ``deadline_s``: optional wall-clock budget from submission; a
@@ -444,21 +516,18 @@ class StreamingEngine:
         ``self.errors``, slot/queue capacity reclaimed).  Raises
         :class:`EngineOverloaded` when the admission queue is at
         ``max_queue`` — shed at the door, not queued into unbounded latency.
+
+        ``request_id``: caller-allocated id (the replicated router assigns
+        tier-wide-unique ids so two replicas seeded alike never reuse a
+        ``(rid, step)`` sampling key).  Must not collide with a request
+        this engine already knows.
         """
-        prompt = np.asarray(prompt)
-        if prompt.ndim > 1:
-            raise ValueError(f"prompt must be 1-D, got shape {prompt.shape}")
-        if not np.issubdtype(prompt.dtype, np.integer):
-            raise ValueError(f"prompt must hold token ids (integers), got "
-                             f"dtype {prompt.dtype}")
-        prompt = prompt.astype(np.int32).reshape(-1)
-        if prompt.size == 0:
-            raise ValueError("empty prompt")
-        if max_new_tokens <= 0:
-            raise ValueError(
-                f"max_new_tokens must be >= 1, got {max_new_tokens}")
-        if deadline_s is not None and deadline_s < 0:
-            raise ValueError(f"deadline_s must be >= 0, got {deadline_s}")
+        prompt = _validate_request(prompt, max_new_tokens, deadline_s)
+        if request_id is not None and (
+                request_id in self.submitted_at
+                or request_id in self.finished
+                or request_id in self.errors):
+            raise ValueError(f"request_id {request_id} already in use")
         if (self.max_queue is not None
                 and len(self.queue) >= self.max_queue):
             self.n_shed += 1
@@ -468,11 +537,13 @@ class StreamingEngine:
             raise EngineOverloaded(
                 f"admission queue full ({len(self.queue)}/{self.max_queue} "
                 "queued); retry later or raise max_queue")
-        rid = self._next_id
-        self._next_id += 1
+        rid = self._next_id if request_id is None else int(request_id)
+        self._next_id = max(self._next_id, rid + 1)
         now = time.perf_counter()
         deadline = now + deadline_s if deadline_s is not None else None
-        self.queue.append((rid, prompt, int(max_new_tokens), deadline))
+        self.queue.append(_Queued(
+            request_id=rid, pending=prompt, remaining=int(max_new_tokens),
+            deadline=deadline, prompt=prompt))
         self.submitted_at[rid] = now
         obs_metrics.inc("serve_requests_total")
         obs_metrics.set_gauge("serve_queue_depth", len(self.queue))
@@ -492,12 +563,16 @@ class StreamingEngine:
         lengths = jnp.ones((self.n_slots,), jnp.int32)
         last, states = self._step_fn(self.params, tokens, lengths, self.states)
         states = self._reset_fn(states, jnp.zeros((self.n_slots,), bool))
+        if self._batched_sample is not None:
+            zeros = jnp.zeros((self.n_slots,), jnp.int32)
+            self._batched_sample(last, self.key, zeros, zeros)
         if self.prefix_cache is not None:
             # The cache's gather/inject entry points compile here too — the
             # first cache hit must not pay jit compile inside a TTFT.
-            carry = self._gather_fn(states, jnp.int32(0))
-            states = self._inject_fn(states, carry,
-                                     jnp.zeros((self.n_slots,), bool))
+            gather, inject = self._ensure_slot_io()
+            carry = gather(states, jnp.int32(0))
+            states = inject(states, carry,
+                            jnp.zeros((self.n_slots,), bool))
         jax.block_until_ready((last, states))
         return time.perf_counter() - t0
 
@@ -569,6 +644,8 @@ class StreamingEngine:
         emitted = 0
         completed = np.zeros((self.n_slots,), bool)
         with obs_trace.span("engine.sample"):
+            # Prefill bookkeeping first: decide which rows sample this tick.
+            ready: list[int] = []
             for i, slot in enumerate(self.active):
                 if slot is None:
                     continue
@@ -580,11 +657,14 @@ class StreamingEngine:
                     if slot.pending.size:     # prompt not done — no sample
                         continue
                     slot.pending = None
-                tok = self.sampler(
-                    last[i:i + 1],
-                    request_key(self.key, slot.request_id, slot.n_sampled))
-                t = int(tok[0, 0])
-                now = time.perf_counter()
+                ready.append(i)
+            toks = self._sample_ready(last, ready)
+            now = time.perf_counter()
+            for i in ready:
+                slot = self.active[i]
+                if slot is None:              # defensive; ready rows are live
+                    continue
+                t = toks[i]
                 rid = slot.request_id
                 if not slot.tokens:
                     self.first_token_at[rid] = now
@@ -622,6 +702,148 @@ class StreamingEngine:
             self.step()
         return self.finished
 
+    # ------------------------------------------------------------ migration
+    def export_requests(self, *, reason: str = "drain") -> list[dict]:
+        """Lift every queued + active request out as migration descriptors.
+
+        The payoff of the paper's O(1) state: an active request's entire
+        context is its per-layer ``(m, u, w)`` carry — a few KB gathered
+        through the same jitted slot entry point the prefix cache uses —
+        so moving it to another engine costs a dict copy, not a KV-cache
+        transfer.  Each descriptor carries the exact host-array carry plus
+        the tokens not yet folded into it (mid-prefill: the unconsumed
+        prompt tail; decoding: just the last sampled token), the emitted
+        tokens, the step counter, and the deadline as *remaining* budget.
+        Feed descriptors to another engine's :meth:`inject_request`; the
+        continuation is byte-identical because sampling keys are
+        ``(request_id, step)``-absolute.
+
+        The engine is left empty (queue + slots cleared, carries reset to
+        the ⊕-identity init per the lifecycle invariant); ``finished`` /
+        ``errors`` are untouched for the caller to harvest.
+        """
+        now = time.perf_counter()
+
+        def _remaining(deadline):
+            return None if deadline is None else deadline - now
+
+        descs: list[dict] = []
+        occupied = np.zeros((self.n_slots,), bool)
+        for i, slot in enumerate(self.active):
+            if slot is None:
+                continue
+            occupied[i] = True
+            gather, _ = self._ensure_slot_io()
+            carry = jax.tree.map(
+                np.asarray, gather(self.states, jnp.int32(i)))
+            if slot.pending is not None:
+                pending = np.asarray(slot.pending, np.int32)
+            else:
+                pending = np.asarray([slot.last_token], np.int32)
+            descs.append({
+                "request_id": slot.request_id,
+                "prompt": (None if slot.prompt is None
+                           else np.asarray(slot.prompt, np.int32)),
+                "tokens": list(slot.tokens),
+                "remaining": slot.remaining,
+                "n_sampled": slot.n_sampled,
+                "deadline_remaining_s": _remaining(slot.deadline),
+                "pending": pending,
+                "carry": carry,
+            })
+            self.active[i] = None
+            self._request_done(slot.request_id, "request_migrated",
+                               reason=reason, n_tokens=len(slot.tokens),
+                               active=True)
+        for q in self.queue:
+            descs.append({
+                "request_id": q.request_id,
+                "prompt": q.prompt,
+                "tokens": list(q.tokens),
+                "remaining": q.remaining,
+                "n_sampled": q.n_sampled,
+                "deadline_remaining_s": _remaining(q.deadline),
+                "pending": np.asarray(q.pending, np.int32),
+                "carry": q.carry,
+            })
+            self._request_done(q.request_id, "request_migrated",
+                               reason=reason, n_tokens=len(q.tokens),
+                               active=False)
+        self.queue = []
+        if occupied.any():
+            self.states = self._reset_fn(self.states, jnp.asarray(occupied))
+        if descs:
+            obs_metrics.inc("serve_migrated_total", len(descs))
+        obs_metrics.set_gauge("serve_queue_depth", 0)
+        obs_metrics.set_gauge("serve_slot_occupancy", 0.0)
+        return descs
+
+    def inject_request(self, desc: dict, *, force: bool = False) -> int:
+        """Admit a migration descriptor from :meth:`export_requests`.
+
+        Two shapes, one contract (byte-identical continuation, since
+        sampling keys are ``(request_id, step)``-absolute):
+
+        * **carry present** (drain): the exported carry seeds the slot at
+          admission and only ``desc["pending"]`` is folded on top.
+        * **carry absent** (crash — the device state died with the
+          replica): the prompt plus every emitted token is replayed from
+          the ⊕-identity init, so the loss is bounded by re-folding work,
+          never by request or token loss.
+
+        ``force=True`` bypasses the ``max_queue`` bound: a migrated
+        request was already admitted tier-wide, and shedding it would turn
+        a replica loss into a request loss.  ``submitted_at`` is re-seeded
+        (the PR 9 restore contract) so latency accounting restarts at
+        injection.
+        """
+        rid = int(desc["request_id"])
+        if (rid in self.submitted_at or rid in self.finished
+                or rid in self.errors):
+            raise ValueError(f"request_id {rid} already known to this engine")
+        if (not force and self.max_queue is not None
+                and len(self.queue) >= self.max_queue):
+            self.n_shed += 1
+            obs_metrics.inc("serve_shed_total")
+            obs_events.emit("request_shed", queue_depth=len(self.queue),
+                            max_queue=self.max_queue)
+            raise EngineOverloaded(
+                f"admission queue full ({len(self.queue)}/{self.max_queue} "
+                "queued); inject elsewhere or force=True")
+        remaining = int(desc["remaining"])
+        if remaining < 1:
+            raise ValueError(f"request {rid}: remaining={remaining} < 1 "
+                             "(finished requests are not migratable)")
+        carry = desc.get("carry")
+        prompt = desc.get("prompt")
+        prompt = None if prompt is None else np.asarray(prompt, np.int32)
+        tokens = [int(t) for t in desc.get("tokens", [])]
+        if carry is not None:
+            pending = np.asarray(desc["pending"], np.int32)
+        else:
+            if prompt is None:
+                raise ValueError(
+                    f"request {rid}: carry-less descriptor needs the "
+                    "original prompt to recompute from")
+            pending = (np.concatenate(
+                [prompt, np.asarray(tokens, np.int32)]) if tokens
+                else prompt)
+        dl = desc.get("deadline_remaining_s")
+        now = time.perf_counter()
+        self.queue.append(_Queued(
+            request_id=rid, pending=pending, remaining=remaining,
+            deadline=None if dl is None else now + dl,
+            prompt=prompt, tokens=tokens,
+            n_sampled=int(desc.get("n_sampled", len(tokens))),
+            carry=carry))
+        self._next_id = max(self._next_id, rid + 1)
+        self.submitted_at[rid] = now
+        obs_metrics.inc("serve_injected_total")
+        obs_metrics.set_gauge("serve_queue_depth", len(self.queue))
+        obs_events.emit("request_injected", rid=rid,
+                        n_tokens=len(tokens), carried=carry is not None)
+        return rid
+
     # -------------------------------------------------- snapshot / restore
     def snapshot(self) -> dict:
         """Serialise the whole engine: device carries + scheduler bookkeeping.
@@ -656,14 +878,35 @@ class StreamingEngine:
             "states": jax.tree.map(np.asarray, self.states),
             "key": np.asarray(self.key),
         }
+        def _queued_meta(q: _Queued):
+            if q.carry is not None and q.prompt is None:
+                # Can't serialise the device carry here and can't rebuild
+                # it from scratch without the original prompt.  Only
+                # reachable by migrating a restored slot (restore() drops
+                # prompts) and snapshotting before it re-slots.
+                raise RuntimeError(
+                    f"request {q.request_id}: queued migrated carry with "
+                    "no original prompt cannot be snapshotted")
+            if q.carry is not None:
+                # Snapshot in recompute form: replay prompt + emitted from
+                # the ⊕-identity init.  Byte-identical continuation (keys
+                # are (rid, step)-absolute); costs re-folding on restore.
+                pending = list(q.prompt.tolist()) + list(q.tokens)
+            else:
+                pending = q.pending.tolist()
+            return {
+                "request_id": q.request_id,
+                "prompt": None if q.prompt is None else q.prompt.tolist(),
+                "pending": pending,
+                "tokens": list(q.tokens),
+                "n_sampled": q.n_sampled,
+                "max_new": q.remaining,      # legacy field name
+                "deadline_remaining_s": _remaining(q.deadline),
+            }
+
         meta = {
             "active": [_slot_meta(s) for s in self.active],
-            "queue": [
-                {"request_id": rid, "prompt": prompt.tolist(),
-                 "max_new": max_new,
-                 "deadline_remaining_s": _remaining(deadline)}
-                for rid, prompt, max_new, deadline in self.queue
-            ],
+            "queue": [_queued_meta(q) for q in self.queue],
             "finished": {str(k): v for k, v in self.finished.items()},
             "errors": {str(k): v for k, v in self.errors.items()},
             "n_shed": self.n_shed,
@@ -715,8 +958,15 @@ class StreamingEngine:
         self.key = jnp.asarray(snap["tree"]["key"])
         self.active = [_slot(m) for m in meta["active"]]
         self.queue = [
-            (q["request_id"], np.asarray(q["prompt"], np.int32),
-             int(q["max_new"]), _absolute(q["deadline_remaining_s"]))
+            _Queued(
+                request_id=q["request_id"],
+                pending=np.asarray(q.get("pending", q["prompt"]), np.int32),
+                remaining=int(q["max_new"]),
+                deadline=_absolute(q["deadline_remaining_s"]),
+                prompt=(None if q.get("prompt") is None
+                        else np.asarray(q["prompt"], np.int32)),
+                tokens=list(q.get("tokens", [])),
+                n_sampled=int(q.get("n_sampled", 0)))
             for q in meta["queue"]
         ]
         self.finished = {int(k): list(v) for k, v in meta["finished"].items()}
@@ -739,7 +989,7 @@ class StreamingEngine:
         self.submitted_at = {
             rid: now
             for rid in ([s.request_id for s in self.active if s is not None]
-                        + [rid for rid, _, _, _ in self.queue])
+                        + [q.request_id for q in self.queue])
         }
         self.first_token_at = {}
         obs_metrics.set_gauge("serve_queue_depth", len(self.queue))
@@ -770,6 +1020,63 @@ class StreamingEngine:
         return step_restored
 
     # ------------------------------------------------------------ internals
+    def _ensure_slot_io(self):
+        """Create the jitted gather/inject slot entry points on first use.
+
+        Lazy so a cache-less, never-migrated engine keeps exactly two
+        jitted functions (pinned by the trace-count test); ``warmup()``
+        forces creation when a prefix cache is attached so the first hit
+        doesn't pay compile inside a TTFT.  Both take the slot index /
+        mask as *traced* arguments — one trace each for any slot.
+        """
+        if self._gather_fn is None:
+            from repro.models.lm import lm_state_put_slot, lm_state_take_slot
+
+            cfg = self.api.cfg
+
+            def gather(states, idx):
+                """Copy out slot ``idx``'s carry (size-1 slot axis)."""
+                return lm_state_take_slot(cfg, states, idx)
+
+            def inject(states, carry, mask):
+                """Seed every masked slot's carry from a size-1 carry."""
+                return lm_state_put_slot(cfg, states, carry, mask)
+
+            self._gather_fn = _jit(gather)
+            self._inject_fn = _jit(inject)
+        return self._gather_fn, self._inject_fn
+
+    def _sample_ready(self, last, ready: list[int]) -> dict[int, int]:
+        """Sample the rows in ``ready``; returns {row: token id}.
+
+        jit-safe samplers take ONE fused vmapped call over all S rows
+        (non-ready rows sample garbage that is discarded — a fixed-shape
+        call beats a per-tick gather/recompile) with keys derived on
+        device; that single host sync replaces the per-slot eager
+        ``fold_in``+``int()`` round-trips that used to dominate the tick.
+        Custom samplers keep the eager per-row path and see concrete keys.
+        """
+        if not ready:
+            return {}
+        if self._batched_sample is not None:
+            rids = np.zeros((self.n_slots,), np.int32)
+            steps = np.zeros((self.n_slots,), np.int32)
+            for i in ready:
+                slot = self.active[i]
+                rids[i] = slot.request_id
+                steps[i] = slot.n_sampled
+            toks = np.asarray(self._batched_sample(
+                last, self.key, jnp.asarray(rids), jnp.asarray(steps)))
+            return {i: int(toks[i, 0]) for i in ready}
+        out: dict[int, int] = {}
+        for i in ready:
+            slot = self.active[i]
+            tok = self.sampler(
+                last[i:i + 1],
+                request_key(self.key, slot.request_id, slot.n_sampled))
+            out[i] = int(tok[0, 0])
+        return out
+
     def _request_done(self, rid: int, kind: str, **data) -> None:
         """Terminal per-request accounting: emit the event, evict the
         latency maps (the fix for unbounded ``first_token_at`` growth —
@@ -787,13 +1094,14 @@ class StreamingEngine:
         """Error out queued + active requests whose deadline has passed."""
         now = time.perf_counter()
         kept = []
-        for rid, prompt, max_new, deadline in self.queue:
-            if deadline is not None and now > deadline:
-                self.errors[rid] = ERR_DEADLINE
+        for q in self.queue:
+            if q.deadline is not None and now > q.deadline:
+                self.errors[q.request_id] = ERR_DEADLINE
                 obs_metrics.inc("serve_deadline_expired_total")
-                self._request_done(rid, "deadline_expired", queued=True)
+                self._request_done(q.request_id, "deadline_expired",
+                                   queued=True)
             else:
-                kept.append((rid, prompt, max_new, deadline))
+                kept.append(q)
         self.queue = kept
         expired = np.zeros((self.n_slots,), bool)
         for i, slot in enumerate(self.active):
@@ -823,20 +1131,36 @@ class StreamingEngine:
         for i in range(self.n_slots):
             if self.active[i] is not None or not self.queue:
                 continue
-            rid, prompt, max_new, deadline = self.queue.pop(0)
-            slot = _Slot(request_id=rid, pending=prompt,
-                         tokens=[], remaining=max_new,
-                         deadline=deadline, prompt=prompt)
-            if self.prefix_cache is not None:
-                match_len, carry, hashes = self.prefix_cache.lookup(prompt)
+            q = self.queue.pop(0)
+            slot = _Slot(request_id=q.request_id, pending=q.pending,
+                         tokens=list(q.tokens), remaining=q.remaining,
+                         n_sampled=q.n_sampled,
+                         deadline=q.deadline, prompt=q.prompt)
+            migrated = q.carry is not None or q.n_sampled > 0
+            if q.carry is not None:
+                # Drain-migrated: seed the slot with the exported carry;
+                # q.pending holds only the tokens not yet folded into it.
+                mask = np.zeros((self.n_slots,), bool)
+                mask[i] = True
+                _, inject = self._ensure_slot_io()
+                self.states = inject(
+                    self.states, jax.tree.map(jnp.asarray, q.carry),
+                    jnp.asarray(mask))
+            elif self.prefix_cache is not None and not migrated:
+                # Migrated requests skip the cache both ways: their grid
+                # hashes died with the donor engine, and a recompute-path
+                # pending (prompt + generated tokens) is not a prompt.
+                match_len, carry, hashes = self.prefix_cache.lookup(
+                    q.pending)
                 slot.hashes = hashes
                 if match_len:
                     mask = np.zeros((self.n_slots,), bool)
                     mask[i] = True
-                    self.states = self._inject_fn(
+                    _, inject = self._ensure_slot_io()
+                    self.states = inject(
                         self.states, jax.tree.map(jnp.asarray, carry),
                         jnp.asarray(mask))
-                    slot.pending = prompt[match_len:]
+                    slot.pending = q.pending[match_len:]
                     slot.consumed = match_len
             self.active[i] = slot
 
@@ -852,6 +1176,7 @@ class StreamingEngine:
         h = slot.hashes.get(slot.consumed)
         if h is None or not cache.wants(slot.consumed, h):
             return
-        carry = self._gather_fn(self.states, jnp.int32(i))
+        gather, _ = self._ensure_slot_io()
+        carry = gather(self.states, jnp.int32(i))
         cache.insert(slot.prompt[:slot.consumed], h,
                      jax.tree.map(np.asarray, carry))

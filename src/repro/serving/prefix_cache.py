@@ -43,6 +43,7 @@ transfer happens at injection, in the engine's jitted ``put_slot``.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Any
 
@@ -131,6 +132,11 @@ class PrefixCache:
         self.n_inserts = 0
         self.n_evictions = 0
         self.tokens_saved = 0
+        # One cache is shared by every replica of a ReplicatedRouter, whose
+        # engines step on worker threads — lookup/insert/wants race on the
+        # LRU OrderedDicts without this.  RLock: insert calls helpers that
+        # may re-enter.
+        self._lock = threading.RLock()
 
     # ---------------------------------------------------------------- bind
     def bind(self, chunk: int, template: Any) -> None:
@@ -189,6 +195,10 @@ class PrefixCache:
         """
         self._require_bound()
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        with self._lock:
+            return self._lookup_locked(prompt)
+
+    def _lookup_locked(self, prompt: np.ndarray):
         hashes = grid_hashes(prompt, self.chunk)
         match_len, carry = 0, None
         for length in sorted(hashes, reverse=True):
@@ -224,9 +234,11 @@ class PrefixCache:
     def wants(self, length: int, h: int) -> bool:
         """Should the engine copy out the carry at this boundary?"""
         key = (length, h)
-        if key in self._entries:
-            return False
-        return key in self._pinned or self._seen.get(key, 0) >= self.min_hits
+        with self._lock:
+            if key in self._entries:
+                return False
+            return (key in self._pinned
+                    or self._seen.get(key, 0) >= self.min_hits)
 
     # -------------------------------------------------------------- insert
     def insert(self, tokens: np.ndarray, h: int, carry: Any) -> None:
@@ -240,6 +252,10 @@ class PrefixCache:
         key = (int(tokens.size), int(h))
         carry = jax.tree.map(np.asarray, carry)
         nbytes = carry_bytes(carry) + tokens.nbytes
+        with self._lock:
+            self._insert_locked(key, tokens, carry, nbytes)
+
+    def _insert_locked(self, key, tokens, carry, nbytes):
         old = self._entries.pop(key, None)
         if old is not None:
             self.bytes -= old.nbytes

@@ -219,6 +219,42 @@ def poison_engine_slot(engine: Any, slot: int) -> None:
     engine.states = jax.tree.map(leaf, engine.states, engine._batch_axes)
 
 
+def kill_router_replica(router: Any, index: int) -> None:
+    """Crash one router replica (simulated process/device loss).
+
+    The replica's next jitted step raises, and — to make the failover test
+    honest — its scheduler bookkeeping and device states are wiped too, so
+    the router can only rebuild from its OWN shadow records, never by
+    peeking at the corpse.  The router notices on its next :meth:`step`,
+    marks the replica dead, and fails its requests over to survivors in
+    recompute form (no carry survives a crash).
+    """
+    if not 0 <= index < router.n_replicas:
+        raise ValueError(
+            f"replica {index} out of range [0, {router.n_replicas})")
+    eng = router.engines[index]
+
+    def _dead_step(*a, **k):
+        raise RuntimeError(
+            f"injected crash: replica {index} lost (kill_router_replica)")
+
+    eng._step_fn = _dead_step
+    # The device carries and admission queue die with the replica.  The
+    # active-slot skeleton stays (so the replica's next tick actually
+    # *attempts* a step and raises — a crashed process surfaces as a
+    # failed call, not as a politely idle engine), but its token lists
+    # are replaced with fresh garbage: the router's shadow records hold
+    # the original list objects, so a failover that cheated by reading
+    # the corpse's bookkeeping would produce wrong bytes and fail the
+    # parity test.
+    eng.states = None
+    eng.queue = []
+    for slot in eng.active:
+        if slot is not None:
+            slot.tokens = [-1] * len(slot.tokens)
+            slot.pending = None
+
+
 # ---------------------------------------------------------------------------
 # Preemption
 # ---------------------------------------------------------------------------

@@ -582,3 +582,96 @@ def test_loop_metrics_out_installs_own_registry(model, tmp_path):
     assert snap["metrics"]["histograms"]["train_step_time_s"]["count"] == 2
     assert snap["metrics"]["counters"]["train_tokens_total"][
         "value"] == 2 * 4 * 16
+
+
+# ---------------------------------------------------------------------------
+# Labeled series (per-replica metrics)
+# ---------------------------------------------------------------------------
+
+
+def test_series_key_grammar_and_split():
+    sk = obs_metrics.series_key
+    assert sk("c") == "c"
+    assert sk("c", {}) == "c"
+    # keys sort, values stringify, quotes/backslashes/newlines escape
+    assert sk("c", {"b": 1, "a": "x"}) == 'c{a="x",b="1"}'
+    assert sk("c", {"v": 'a"b\\c\nd'}) == 'c{v="a\\"b\\\\c\\nd"}'
+    with pytest.raises(ValueError):
+        sk('c{a="1"}', {"b": 2})        # labels go in labels=, not the name
+    assert obs_metrics.split_series_key("c") == ("c", "")
+    assert obs_metrics.split_series_key('c{a="x",b="1"}') == ("c", 'a="x",b="1"')
+
+
+def test_labeled_series_are_distinct_and_peekable():
+    reg = MetricsRegistry()
+    reg.counter("req", labels={"replica": 0}).inc(2)
+    reg.counter("req", labels={"replica": 1}).inc(5)
+    reg.counter("req").inc()                      # unlabeled is its own series
+    assert reg.peek("req", {"replica": "0"}) == 2
+    assert reg.peek("req", {"replica": 1}) == 5   # int/str label values agree
+    assert reg.peek("req") == 1
+    assert reg.peek("req", {"replica": 7}) is None
+    assert reg.peek("absent") is None
+    snap = reg.snapshot()["counters"]
+    assert set(snap) == {"req", 'req{replica="0"}', 'req{replica="1"}'}
+
+
+def test_label_scope_ambient_merge_and_override():
+    reg = MetricsRegistry()
+    with use_metrics(reg):
+        with obs_metrics.label_scope(replica=0):
+            obs_metrics.inc("ticks")
+            with obs_metrics.label_scope(shard=2):     # nested scopes merge
+                obs_metrics.inc("ticks")
+            # explicit labels= wins over the ambient scope on key clash
+            obs_metrics.inc("ticks", labels={"replica": 9})
+            obs_metrics.set_gauge("depth", 3.0)
+        obs_metrics.inc("ticks")                       # outside: unlabeled
+    assert reg.peek("ticks", {"replica": 0}) == 1
+    assert reg.peek("ticks", {"replica": 0, "shard": 2}) == 1
+    assert reg.peek("ticks", {"replica": 9}) == 1
+    assert reg.peek("ticks") == 1
+    assert reg.peek("depth", {"replica": 0}) == 3.0
+    assert obs_metrics.current_labels() is None
+
+
+def test_label_scope_is_thread_local():
+    reg = MetricsRegistry()
+    seen = []
+
+    def work(i):
+        with obs_metrics.label_scope(replica=i):
+            obs_metrics.inc("t")
+            seen.append(obs_metrics.current_labels()["replica"])
+
+    with use_metrics(reg):
+        with obs_metrics.label_scope(replica="main"):
+            ts = [threading.Thread(target=work, args=(i,)) for i in range(3)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            assert obs_metrics.current_labels() == {"replica": "main"}
+    assert sorted(seen) == ["0", "1", "2"]
+    for i in range(3):
+        assert reg.peek("t", {"replica": i}) == 1
+
+
+def test_prometheus_text_labeled_series():
+    reg = MetricsRegistry()
+    reg.counter("req", labels={"replica": 0}).inc(2)
+    reg.counter("req", labels={"replica": 1}).inc(3)
+    reg.gauge("occ", labels={"replica": 0}).set(0.5)
+    reg.histogram("lat", buckets=(0.1, 1.0), labels={"replica": 1}).observe(0.5)
+    text = prometheus_text(reg.snapshot())
+    lines = text.splitlines()
+    # TYPE emitted once per base name, not once per labeled series
+    assert lines.count("# TYPE req counter") == 1
+    assert 'req{replica="0"} 2' in lines
+    assert 'req{replica="1"} 3' in lines
+    assert 'occ{replica="0"} 0.5' in lines
+    # histogram merges its le bucket label with the series labels
+    assert 'lat_bucket{replica="1",le="1"} 1' in lines
+    assert 'lat_bucket{replica="1",le="+Inf"} 1' in lines
+    assert 'lat_sum{replica="1"} 0.5' in lines
+    assert 'lat_count{replica="1"} 1' in lines

@@ -1,0 +1,362 @@
+"""Replicated serving tier (repro.serving.router): routing policies,
+tier-wide degradation, and carry-migration failover (DESIGN.md
+§Serving-tier).
+
+The acceptance tests of the subsystem are the two byte-parity pins:
+
+* ``test_chaos_failover_byte_parity`` — 3 replicas, one killed mid-flight
+  with its device state wiped; every request must still complete, and
+  every completion must be byte-identical to an undisturbed single-engine
+  run of the same traffic.
+* ``test_drain_byte_parity`` — planned migration moves the live per-layer
+  ``(m, u, w)`` carries (a few KB — the paper's O(1)-state property) and
+  continues exactly.
+
+Both lean on tier-allocated request ids + ``(request_id, step)``-absolute
+sampling keys: a request's stream is a pure function of its id, never of
+which replica/slot/tick served it.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.factory import build
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import MetricsRegistry, use_metrics
+from repro.serving import (
+    EngineOverloaded,
+    PrefixCache,
+    ReplicatedRouter,
+    StreamingEngine,
+)
+from repro.serving.router import (
+    ERR_DEADLINE,
+    ReplicaView,
+    RoundRobin,
+    join_shortest_queue,
+    least_occupancy,
+    make_policy,
+)
+from repro.testing.faults import kill_router_replica
+
+N_SLOTS = 4
+CHUNK = 8
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config("phi3-mini-3.8b", n_layers=2, d_model=64, d_ff=128,
+                       vocab=64)
+    api = build(cfg)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+def _traffic(n=8, vocab=64):
+    """Ragged deterministic mix: prompts 5-29 tokens, max_new 5-12."""
+    key = jax.random.PRNGKey(11)
+    reqs = []
+    for i in range(n):
+        plen = 5 + (7 * i) % 25
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (plen,), 0, vocab))
+        reqs.append((prompt, 5 + (3 * i) % 8))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def baseline(model):
+    """The undisturbed single-engine run both parity tests pin against.
+
+    Request ids are allocated in submission order starting at 0 — exactly
+    what the router does tier-wide — so {rid: tokens} maps line up."""
+    api, params = model
+    eng = StreamingEngine(api, params, n_slots=N_SLOTS, chunk=CHUNK)
+    for p, n in _traffic():
+        eng.submit(p, n)
+    return {rid: list(toks) for rid, toks in eng.run().items()}
+
+
+# ---------------------------------------------------------------------------
+# Routing policies (pure functions — no model needed)
+# ---------------------------------------------------------------------------
+
+
+def _views(*rows):
+    return [ReplicaView(i, alive, qd, occ, fs)
+            for i, (alive, qd, occ, fs) in enumerate(rows)]
+
+
+def test_least_occupancy_ranking():
+    views = _views((True, 5, 0.75, 1), (True, 0, 0.25, 3),
+                   (False, 0, 0.0, 4), (True, 2, 0.25, 3))
+    # emptiest batch first; queue depth breaks occupancy ties; dead skipped
+    assert least_occupancy(views) == [1, 3, 0]
+
+
+def test_jsq_ranking():
+    views = _views((True, 4, 0.0, 4), (True, 1, 0.5, 2), (True, 1, 0.0, 4))
+    assert join_shortest_queue(views) == [2, 1, 0]
+
+
+def test_round_robin_rotates_over_alive():
+    rr = RoundRobin()
+    views = _views((True, 0, 0.0, 4), (False, 0, 0.0, 4), (True, 0, 0.0, 4))
+    assert rr(views) == [0, 2]
+    assert rr(views) == [2, 0]
+    assert rr(views) == [0, 2]
+    assert rr(_views((False, 0, 0.0, 4))) == []
+
+
+def test_make_policy_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown route policy"):
+        make_policy("fastest-first")
+    assert make_policy(least_occupancy) is least_occupancy
+    # named factories hand out fresh state per router
+    assert make_policy("round-robin") is not make_policy("round-robin")
+
+
+# ---------------------------------------------------------------------------
+# Byte-parity pins (the acceptance tests)
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_failover_byte_parity(model, baseline):
+    """Kill 1 of 3 replicas mid-flight: zero requests lost, and every
+    completion byte-identical to the undisturbed single-engine run."""
+    api, params = model
+    router = ReplicatedRouter(api, params, n_replicas=3, n_slots=N_SLOTS,
+                              chunk=CHUNK)
+    for p, n in _traffic():
+        router.submit(p, n)
+    for _ in range(3):           # let the victim accept + decode real work
+        router.step()
+    victim = next(i for i in range(3)
+                  if any(s is not None for s in router.engines[i].active))
+    kill_router_replica(router, victim)
+    out = router.run()
+    assert router.stats()["failed_over"] > 0
+    assert not router.errors
+    assert sorted(out) == sorted(baseline)           # zero lost
+    for rid, toks in baseline.items():
+        assert list(out[rid]) == toks, f"rid {rid} diverged after failover"
+
+
+def test_drain_byte_parity(model, baseline):
+    """Planned drain: queued + active requests carry-migrate to survivors
+    and continue byte-identically (no recompute — the carry moves)."""
+    api, params = model
+    router = ReplicatedRouter(api, params, n_replicas=2, n_slots=N_SLOTS,
+                              chunk=CHUNK)
+    for p, n in _traffic():
+        router.submit(p, n)
+    for _ in range(3):
+        router.step()
+    victim = next(i for i in range(2)
+                  if any(s is not None for s in router.engines[i].active))
+    n_moved = router.drain(victim)
+    assert n_moved > 0
+    assert router.stats()["migrated"] == n_moved
+    # survivors only: the drained engine took no further work
+    out = router.run()
+    assert not any(s is not None for s in router.engines[victim].active)
+    assert sorted(out) == sorted(baseline)
+    for rid, toks in baseline.items():
+        assert list(out[rid]) == toks, f"rid {rid} diverged after drain"
+
+
+def test_reinstate_after_drain(model, baseline):
+    """A drained replica returns to duty; with no survivors, run() refuses
+    to spin instead of hanging."""
+    api, params = model
+    router = ReplicatedRouter(api, params, n_replicas=1, n_slots=N_SLOTS,
+                              chunk=CHUNK)
+    for p, n in _traffic():
+        router.submit(p, n)
+    router.step()
+    router.drain(0)              # sole replica: everything parks in front
+    assert router.front
+    with pytest.raises(RuntimeError, match="no alive replicas"):
+        router.run()
+    router.reinstate(0)
+    out = router.run()
+    for rid, toks in baseline.items():
+        assert list(out[rid]) == toks
+
+
+# ---------------------------------------------------------------------------
+# Tier-wide degradation
+# ---------------------------------------------------------------------------
+
+
+def test_shed_only_when_all_replicas_saturated_and_front_full(model):
+    """One replica rejecting re-routes to the next-best; the tier sheds
+    only at total saturation, and the shed happens at the door (the shed
+    request never gets an id or a shadow record)."""
+    api, params = model
+    # Static-priority policy: always try replica 0 first, so its queue
+    # bound is what forces the re-route (the adaptive policies would just
+    # rank the emptier replica first and never exercise the bounce).
+    router = ReplicatedRouter(api, params, n_replicas=2, n_slots=1,
+                              chunk=CHUNK, max_queue=1,
+                              policy=lambda views: [0, 1])
+    p = np.arange(4, dtype=np.int32)
+    r0 = router.submit(p, 2)     # -> replica 0's queue (now full)
+    r1 = router.submit(p, 2)     # replica 0 rejects -> re-routed to 1
+    assert router.n_rerouted == 1
+    assert router.engines[1].queue, "re-route did not land on replica 1"
+    r2 = router.submit(p, 2)     # both queues full -> front queue
+    assert [d["request_id"] for d in router.front] == [r2]
+    with pytest.raises(EngineOverloaded, match="front queue is full"):
+        router.submit(p, 2)      # all saturated AND front full -> shed
+    assert router.n_shed == 1
+    assert router.stats()["requests"] == 3   # shed allocated no id
+    out = router.run()           # shed request gone; admitted ones complete
+    assert sorted(out) == sorted([r0, r1, r2])
+
+
+def test_front_queue_fifo_no_jumping(model):
+    """A submit that arrives while earlier requests wait in the front
+    queue lines up behind them even if a slot could take it."""
+    api, params = model
+    router = ReplicatedRouter(api, params, n_replicas=1, n_slots=1,
+                              chunk=CHUNK)
+    p = np.arange(4, dtype=np.int32)
+    router.submit(p, 2)          # fills the 1-deep replica queue
+    waiting = router.submit(p, 2)
+    late = router.submit(p, 2)
+    assert [d["request_id"] for d in router.front] == [waiting, late]
+
+
+def test_front_queue_deadline_expires(model):
+    """Deadlines keep billing while a request waits at the front."""
+    api, params = model
+    router = ReplicatedRouter(api, params, n_replicas=1, n_slots=1,
+                              chunk=CHUNK)
+    p = np.arange(4, dtype=np.int32)
+    router.submit(p, 3)
+    rid = router.submit(p, 3, deadline_s=0.03)   # parks in the front queue
+    assert [d["request_id"] for d in router.front] == [rid]
+    time.sleep(0.05)
+    out = router.run()
+    assert router.errors[rid] == ERR_DEADLINE
+    assert rid not in out
+
+
+def test_migration_keeps_one_deadline_budget(model):
+    """A migrated request's deadline is re-based as *remaining* budget —
+    the wall-clock bill started at submit, not at re-injection."""
+    api, params = model
+    router = ReplicatedRouter(api, params, n_replicas=2, n_slots=N_SLOTS,
+                              chunk=CHUNK)
+    p, n = _traffic(1)[0]
+    t0 = time.perf_counter()
+    router.submit(p, n, deadline_s=30.0)
+    router.step()
+    victim = next(i for i in range(2)
+                  if any(s is not None for s in router.engines[i].active)
+                  or router.engines[i].queue)
+    assert router.drain(victim) == 1
+    survivor = router.engines[1 - victim]
+    q = survivor.queue[-1]
+    assert q.deadline is not None
+    # absolute deadline on the survivor ~= the original submit-time bill
+    assert q.deadline == pytest.approx(t0 + 30.0, abs=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Tier-wide ids + per-replica observability
+# ---------------------------------------------------------------------------
+
+
+def test_tier_unique_ids_and_sampling_keys(model):
+    """Ids are allocated tier-wide, and the eager sampler path sees a
+    distinct (request_id, step)-absolute key for every sampled token —
+    across replicas, no reuse, no correlation."""
+    api, params = model
+    seen = []
+
+    def recording(logits, key):
+        seen.append(tuple(np.asarray(key).tolist()))
+        return jax.numpy.argmax(logits, axis=-1)
+
+    router = ReplicatedRouter(api, params, n_replicas=2, n_slots=1,
+                              chunk=CHUNK, sampler=recording,
+                              policy="round-robin")
+    p = np.arange(6, dtype=np.int32)
+    rids = [router.submit(p, 3) for _ in range(2)]   # one per replica
+    assert rids == [0, 1]
+    out = router.run()
+    assert sorted(out) == rids
+    assert len(seen) == 6                            # 2 requests x 3 steps
+    assert len(set(seen)) == 6, "sampling keys reused across replicas"
+
+
+def test_per_replica_gauges_and_tier_aggregates(model):
+    """Each replica's serve_* series lands under its replica label, the
+    router publishes tier aggregates, and replica_views reads the gauges."""
+    api, params = model
+    reg = MetricsRegistry()
+    with use_metrics(reg):
+        router = ReplicatedRouter(api, params, n_replicas=2, n_slots=2,
+                                  chunk=CHUNK)
+        for p, n in _traffic(4):
+            router.submit(p, n)
+        router.step()
+        views = {v.index: v for v in router.replica_views()}
+        for i in range(2):
+            occ = reg.peek("serve_slot_occupancy", {"replica": i})
+            assert occ is not None
+            assert views[i].occupancy == occ
+        router.run()
+    snap = reg.snapshot()
+    assert snap["gauges"]["router_replicas_alive"]["value"] == 2
+    assert snap["gauges"]["router_front_queue_depth"]["value"] == 0
+    assert snap["counters"]["router_requests_total"]["value"] == 4
+    # per-replica completion counters exist under distinct series keys
+    done = [k for k in snap["counters"]
+            if k.startswith('serve_requests_completed_total{replica=')]
+    assert len(done) >= 1
+    total = sum(snap["counters"][k]["value"] for k in done)
+    assert total == 4
+
+
+# ---------------------------------------------------------------------------
+# Cross-replica prefix-cache sharing (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_shared_across_replicas(model):
+    """The same prompt served on replica A then replica B: B's prefill
+    skips cached chunks (counters prove it) and the output is
+    byte-identical to a cold single-engine run."""
+    api, params = model
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(5), (4 * CHUNK,), 0, 64))
+
+    cold_eng = StreamingEngine(api, params, n_slots=1, chunk=CHUNK)
+    cold_eng.submit(prompt, 6)
+    cold = cold_eng.run()[0]
+
+    cache = PrefixCache(max_bytes=4 << 20, min_hits=1)
+    router = ReplicatedRouter(api, params, n_replicas=2, n_slots=1,
+                              chunk=CHUNK, policy="round-robin",
+                              prefix_cache=cache)
+    r0 = router.submit(prompt, 6)        # replica A: populates the cache
+    router.run()
+    saved0 = cache.stats()["prefill_tokens_saved"]
+    r1 = router.submit(prompt, 6)        # replica B (round-robin rotated)
+    out = router.run()
+    # replica B really served rid 1: its engine's id high-water mark moved
+    # (submit(request_id=1) bumps _next_id past it)
+    assert router.engines[1]._next_id == 2, \
+        "round-robin did not place the second request on replica B"
+    st = cache.stats()
+    assert st["hit_rate"] > 0, st
+    assert st["prefill_tokens_saved"] > saved0, \
+        "replica B re-prefilled a prefix replica A already cached"
+    assert list(out[r0]) == list(cold)
+    assert list(out[r1]) == list(cold), "cache hit changed the bytes"
